@@ -1,0 +1,66 @@
+"""Paper Table 3: merging methods (Concat / PCA / ALiR-rand / ALiR-PCA /
+single sub-model / naive average) at fixed Shuffle sampling."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fixture, timer
+from benchmarks.bench_sampling import _cfg, WINDOW, EPOCHS, BATCH
+from repro.core.driver import run_pipeline
+from repro.eval.benchmarks import evaluate_all
+
+METHODS = ("concat", "pca", "alir_rand", "alir_pca", "average", "single")
+
+
+def run(rate=0.1, quick=False):
+    gen, corpus, suite = fixture()
+    n = int(round(1 / rate))
+    rows = []
+    with timer() as t:
+        res = run_pipeline(
+            corpus, gen.vocab_size, strategy="shuffle", num_workers=n,
+            cfg=_cfg(), epochs=EPOCHS, batch_size=BATCH, rate=rate,
+            window=WINDOW, max_vocab=None, base_min_count=20,
+            merge_methods=METHODS,
+            max_steps_per_epoch=120 if quick else 400)
+        for m in METHODS:
+            emb, valid = res.merged[m]
+            scores = evaluate_all(emb, valid, res.union_vocab, suite)
+            rows.append({"method": m, "rate": rate, **scores,
+                         "merge_s": res.timings.get(f"merge_{m}_s", 0.0),
+                         "dim": emb.shape[1]})
+    return rows, t.s
+
+
+def fmt(rows):
+    out = [f"{'method':10s} {'dim':>5s} {'sim(oov)':>12s} {'analogy(oov)':>13s}"
+           f" {'categ(oov)':>12s} {'merge_s':>8s}"]
+    for r in rows:
+        out.append(
+            f"{r['method']:10s} {r['dim']:5d} "
+            f"{r['similarity']:6.3f}({r['similarity_oov']:3d}) "
+            f"{r['analogy']:7.3f}({r['analogy_oov']:3d}) "
+            f"{r['categorization']:6.3f}({r['categorization_oov']:3d}) "
+            f"{r['merge_s']:8.2f}")
+    return "\n".join(out)
+
+
+def main(quick=False):
+    rows, secs = run(quick=quick)
+    print(f"\n[Table 3] merge methods at shuffle/10% ({secs:.1f}s)")
+    print(fmt(rows))
+    by = {r["method"]: r for r in rows}
+    alir = max(by["alir_pca"]["similarity"], by["alir_rand"]["similarity"])
+    print(f"ALiR vs naive average (sim): {alir:.3f} vs "
+          f"{by['average']['similarity']:.3f} "
+          f"(paper: averaging fails without alignment) "
+          f"{'CONFIRMED' if alir > by['average']['similarity'] else 'REFUTED'}")
+    print(f"merged vs single sub-model (sim): {alir:.3f} vs "
+          f"{by['single']['similarity']:.3f} "
+          f"{'CONFIRMED' if alir > by['single']['similarity'] else 'REFUTED'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Paper Table 2: sampling strategies (equal / random / shuffle) × rates,
+merged with ALiR(PCA), vs the synchronized single-model baseline.
+
+Scores are similarity (Spearman ρ), analogy (3CosAdd acc) and
+categorization (purity) on the synthetic gold suites, with OOV counts in
+parentheses exactly as the paper reports them."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import fixture, timer
+from repro.core.driver import run_pipeline, train_sync_baseline
+from repro.core.sgns import SGNSConfig
+from repro.eval.benchmarks import evaluate_all
+
+DIM = 64
+WINDOW = 5
+EPOCHS = 6
+BATCH = 512
+
+
+def _cfg():
+    return SGNSConfig(vocab_size=0, dim=DIM, window=WINDOW, negatives=5)
+
+
+def eval_merged(res, suite, method="alir_pca"):
+    emb, valid = res.merged[method]
+    return evaluate_all(emb, valid, res.union_vocab, suite)
+
+
+def run(rates=(0.1,), num_workers_by_rate=None, quick=False):
+    gen, corpus, suite = fixture()
+    rows = []
+    with timer() as t:
+        for rate in rates:
+            n = int(round(1 / rate))
+            for strategy in ("equal", "random", "shuffle"):
+                res = run_pipeline(
+                    corpus, gen.vocab_size, strategy=strategy, num_workers=n,
+                    cfg=_cfg(), epochs=EPOCHS, batch_size=BATCH, rate=rate,
+                    window=WINDOW, max_vocab=None, base_min_count=20,
+                    merge_methods=("alir_pca",),
+                    max_steps_per_epoch=120 if quick else 400)
+                scores = eval_merged(res, suite)
+                rows.append({"strategy": strategy, "rate": rate, **scores,
+                             "train_s": res.timings["train_s"]})
+        # synchronized baseline (Hogwild stand-in)
+        params, vocab, info = train_sync_baseline(
+            corpus, gen.vocab_size, _cfg(), epochs=EPOCHS, batch_size=BATCH,
+            window=WINDOW, max_vocab=None,
+            max_steps_per_epoch=400 if quick else 1600)
+        import numpy as np
+        emb = np.asarray(params["W"])
+        valid = np.ones(vocab.size, bool)
+        scores = evaluate_all(emb, valid, vocab, suite)
+        rows.append({"strategy": "sync-baseline", "rate": 1.0, **scores,
+                     "train_s": info["train_s"]})
+    return rows, t.s
+
+
+def fmt(rows):
+    out = [f"{'strategy':14s} {'rate':>5s} {'sim(oov)':>12s} {'analogy(oov)':>13s}"
+           f" {'categ(oov)':>12s} {'train_s':>8s}"]
+    for r in rows:
+        out.append(
+            f"{r['strategy']:14s} {r['rate']:5.2f} "
+            f"{r['similarity']:6.3f}({r['similarity_oov']:3d}) "
+            f"{r['analogy']:7.3f}({r['analogy_oov']:3d}) "
+            f"{r['categorization']:6.3f}({r['categorization_oov']:3d}) "
+            f"{r['train_s']:8.1f}")
+    return "\n".join(out)
+
+
+def main(quick=False):
+    rates = (0.1,) if quick else (0.1, 0.05)
+    rows, secs = run(rates=rates, quick=quick)
+    print(f"\n[Table 2] sampling strategies ({secs:.1f}s)")
+    print(fmt(rows))
+
+    def get(strat, rate):
+        return next(r for r in rows if r["strategy"] == strat
+                    and abs(r["rate"] - rate) < 1e-9)
+    sh, rnd, eq = get("shuffle", 0.1), get("random", 0.1), get("equal", 0.1)
+    wins_sh_rnd = sum(sh[k] >= rnd[k] for k in
+                      ("similarity", "analogy", "categorization"))
+    print(f"shuffle >= random on {wins_sh_rnd}/3 tasks "
+          f"(paper: shuffle wins nearly all)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Table 4 + Figure 2: wall-clock scaling.
+
+On one CPU device we measure real compute and report:
+  * sync baseline epoch time (the Hogwild/MLLib stand-in);
+  * total async time for n sub-models trained back-to-back (vmap) and
+    the PROJECTED parallel time = total/n + merge (each sub-model is an
+    independent worker in the paper's cluster — measured compute is the
+    honest per-worker cost, there is zero inter-worker traffic to model);
+  * merge times (PCA / ALiR), the paper's "few minutes" claim;
+  * near-linear scaling of training time with corpus fraction (Fig 2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fixture, timer
+from benchmarks.bench_sampling import _cfg, WINDOW, BATCH
+from repro.core.driver import run_pipeline, train_sync_baseline
+
+
+def run(rate=0.1, epochs=3, quick=False):
+    gen, corpus, suite = fixture()
+    n = int(round(1 / rate))
+    rows = {}
+
+    res = run_pipeline(
+        corpus, gen.vocab_size, strategy="shuffle", num_workers=n,
+        cfg=_cfg(), epochs=epochs, batch_size=BATCH, rate=rate, window=WINDOW,
+        max_vocab=None, base_min_count=20,
+        merge_methods=("pca", "alir_pca"),
+        max_steps_per_epoch=100 if quick else None)
+    async_total = res.timings["train_s"]
+    merge_pca = res.timings["merge_pca_s"]
+    merge_alir = res.timings["merge_alir_pca_s"]
+    rows["async"] = {
+        "workers": n, "total_s": async_total,
+        "projected_parallel_s": async_total / n,
+        "merge_pca_s": merge_pca, "merge_alir_s": merge_alir,
+    }
+
+    _, _, info = train_sync_baseline(
+        corpus, gen.vocab_size, _cfg(), epochs=epochs, batch_size=BATCH,
+        window=WINDOW, max_vocab=None,
+        max_steps_per_epoch=100 * n if quick else None)
+    rows["sync"] = {"total_s": info["train_s"]}
+    rows["speedup_projected"] = info["train_s"] / (
+        async_total / n + merge_alir)
+
+    # Fig 2: scaling with corpus size (sync baseline on fractions)
+    fracs = (0.25, 0.5, 1.0)
+    scaling = []
+    for f in fracs:
+        sub = corpus.select(np.arange(int(f * corpus.num_sentences)))
+        _, _, inf = train_sync_baseline(
+            sub, gen.vocab_size, _cfg(), epochs=1, batch_size=BATCH,
+            window=WINDOW, max_vocab=None,
+            max_steps_per_epoch=60 if quick else None)
+        scaling.append({"fraction": f, "train_s": inf["train_s"],
+                        "steps": inf["steps_per_epoch"]})
+    rows["scaling"] = scaling
+    return rows
+
+
+def main(quick=False):
+    with timer() as t:
+        rows = run(quick=quick)
+    a, s = rows["async"], rows["sync"]
+    print(f"\n[Table 4 / Fig 2] wall-clock ({t.s:.1f}s)")
+    print(f"sync baseline total:        {s['total_s']:8.1f}s")
+    print(f"async {a['workers']:2d} workers, serial:   {a['total_s']:8.1f}s")
+    print(f"async projected parallel:   {a['projected_parallel_s']:8.1f}s"
+          f"  (+merge pca {a['merge_pca_s']:.1f}s / alir {a['merge_alir_s']:.1f}s)")
+    print(f"projected speedup:          {rows['speedup_projected']:8.1f}×"
+          f"  (paper: ~10× at 10% sampling)")
+    print("scaling with corpus fraction (sync, 1 epoch):")
+    base = rows["scaling"][0]
+    for r in rows["scaling"]:
+        print(f"  {r['fraction']:4.0%}: {r['train_s']:7.1f}s "
+              f"({r['steps']} steps, "
+              f"{r['train_s']/max(base['train_s'],1e-9):.2f}× vs 25%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Shared fixtures for the paper-experiment benchmarks.
+
+The corpus mirrors the paper's conditions at laptop scale: Zipfian
+unigrams, topical bigram structure, and — crucially — *topical drift*
+(sentences sorted by topic), which is what makes EQUAL PARTITIONING the
+paper's losing baseline (Wikipedia articles are topically clustered, so
+contiguous slices have skewed distributions).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.data.corpus import SemanticCorpusModel, Corpus
+from repro.eval.benchmarks import BenchmarkSuite
+
+VOCAB = 2000
+SENTENCES = 30_000
+TOP_WORDS = 1200      # benchmarks drawn from the more frequent strata
+
+
+@functools.lru_cache(maxsize=1)
+def fixture():
+    gen = SemanticCorpusModel.create(vocab_size=VOCAB, num_topics=16,
+                                     num_features=4, seed=0)
+    corpus = gen.generate(num_sentences=SENTENCES, seed=1)
+    # topical drift: sort sentences by their topic (leading token's topic)
+    keys = [int(gen.topics[corpus.sentence(i)[0]])
+            for i in range(corpus.num_sentences)]
+    order = np.argsort(np.asarray(keys), kind="stable")
+    corpus = corpus.select(order)
+    suite = BenchmarkSuite.from_model(gen, seed=7, n_pairs=500, n_quads=300,
+                                      n_cat=400, top_words=TOP_WORDS)
+    return gen, corpus, suite
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,54 @@
+"""§Roofline table: reads the dry-run sweep JSONs and prints the
+per-(arch × shape) roofline terms. Rerun the sweeps with
+``benchmarks/run_dryruns.sh`` / ``run_dryruns_multipod.sh``."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import format_table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(name: str):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    return json.load(open(path))
+
+
+def main(quick=False):
+    for name, title in (("dryrun_baseline.json", "single-pod 16×16 baseline"),
+                        ("dryrun_multipod.json", "multi-pod 2×16×16"),
+                        ("dryrun_sgns.json",
+                         "SGNS (the paper's workload): async vs sync vs local-SGD"),
+                        ("dryrun_perf.json", "§Perf variants")):
+        rows = load(name)
+        ok = [r for r in rows if "compute_s" in r]
+        skips = [r for r in rows if "skipped" in r]
+        fails = [r for r in rows if r.get("failed")]
+        if not rows:
+            print(f"\n[roofline] {title}: no results yet ({name})")
+            continue
+        print(f"\n[roofline] {title} — {len(ok)} compiled, "
+              f"{len(skips)} skipped, {len(fails)} failed")
+        if ok:
+            if "dryrun_perf" in name:
+                for r in ok:
+                    print(f"  {r['arch']:24s} {r['shape']:12s} "
+                          f"variant={r.get('variant'):18s} "
+                          f"dom={r['dominant']:10s} bound="
+                          f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.3e}s")
+            else:
+                print(format_table(ok))
+        for r in skips:
+            print(f"  SKIP {r['arch']} × {r['shape']}: {r['skipped'][:70]}")
+        for r in fails:
+            print(f"  FAIL {r['arch']} × {r['shape']}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

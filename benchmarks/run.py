@@ -1,0 +1,69 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  bench_kl        — Fig 1   (KL divergence of sampling strategies)
+  bench_sampling  — Table 2 (equal/random/shuffle × rates vs sync baseline)
+  bench_merge     — Table 3 (Concat/PCA/ALiR/average/single)
+  bench_wallclock — Table 4 + Fig 2 (training/merge wall-clock, scaling)
+  bench_oov       — Fig 3   (missing-vocabulary reconstruction)
+  bench_kernel    — SGNS step micro-bench + Pallas/oracle check
+  roofline_table  — §Roofline terms from the dry-run sweeps
+
+Prints a final ``name,us_per_call,derived`` CSV summary.
+Env: REPRO_BENCH_QUICK=1 for reduced step counts.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    csv: list[tuple[str, float, str]] = []
+
+    def run(name, fn, derive):
+        t0 = time.perf_counter()
+        try:
+            out = fn(quick=quick)
+            us = (time.perf_counter() - t0) * 1e6
+            csv.append((name, us, derive(out)))
+        except Exception as e:  # keep the harness running
+            csv.append((name, -1.0, f"FAILED:{type(e).__name__}"))
+            import traceback
+            traceback.print_exc()
+
+    from benchmarks import (bench_kl, bench_sampling, bench_merge,
+                            bench_wallclock, bench_oov, bench_kernel,
+                            roofline_table)
+
+    run("fig1_kl", lambda quick: bench_kl.main(),
+        lambda rows: "kl_random<kl_equal=%s" % (
+            next(r for r in rows if r['strategy'] == 'random')['kl_unigram'] <
+            next(r for r in rows if r['strategy'] == 'equal')['kl_unigram']))
+    run("table2_sampling", bench_sampling.main,
+        lambda rows: "best=%s" % max(
+            (r for r in rows if r['strategy'] != 'sync-baseline'),
+            key=lambda r: r['similarity'])['strategy'])
+    run("table3_merge", bench_merge.main,
+        lambda rows: "best=%s" % max(rows, key=lambda r: r['similarity'])['method'])
+    run("table4_wallclock", bench_wallclock.main,
+        lambda rows: "speedup=%.1fx" % rows["speedup_projected"])
+    run("fig3_oov", bench_oov.main,
+        lambda rows: "alir@50%%sim=%.3f" % next(
+            r['similarity'] for r in rows
+            if r['method'] == 'alir_pca' and r['removed_frac'] == 0.5))
+    run("kernel_sgns", bench_kernel.main,
+        lambda r: "pairs_per_s=%.2e" % r["pairs_per_s_sparse"])
+    run("roofline", roofline_table.main, lambda r: "see tables above")
+
+    print("\n=== summary (name,us_per_call,derived) ===")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+    if any(us < 0 for _, us, _ in csv):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

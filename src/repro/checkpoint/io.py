@@ -1,0 +1,114 @@
+"""Checkpointing: flat-key .npz save/restore for arbitrary pytrees.
+
+Scope-appropriate for this framework (single-host save of possibly
+sharded trees by device_get; restore re-shards via the caller's specs).
+Keys encode the tree path; dataclass-free trees (dict/list/tuple) only —
+which is all this codebase uses for params/opt state/caches.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            if not node:
+                out[_SEP.join(path) + "@emptydict"] = np.zeros(0)
+                return
+            for k in sorted(node):
+                walk(path + [str(k)], node[k])
+        elif isinstance(node, (list, tuple)):
+            if not node:
+                out[_SEP.join(path) + "@emptylist"] = np.zeros(0)
+                return
+            for i, v in enumerate(node):
+                walk(path + [f"#{i}"], v)
+        elif node is None:
+            out[_SEP.join(path) + "@none"] = np.zeros(0)
+        else:
+            out[_SEP.join(path)] = np.asarray(jax.device_get(node))
+
+    walk([], tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]):
+    _EMPTY_LIST = object()
+    _EMPTY_DICT = object()
+    root: dict = {}
+    for key, val in flat.items():
+        for tag, marker in (("@none", None), ("@emptylist", _EMPTY_LIST),
+                            ("@emptydict", _EMPTY_DICT)):
+            if key.endswith(tag):
+                key = key[: -len(tag)]
+                val = marker
+                break
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if node is _EMPTY_LIST:
+            return []
+        if node is _EMPTY_DICT:
+            return {}
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.startswith("#") for k in keys):
+            return [fix(node[f"#{i}"]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, tree, step: int | None = None,
+                    extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    meta = {"step": step, **(extra or {})}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str):
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path, allow_pickle=False)
+    tree = _unflatten({k: data[k] for k in data.files})
+    meta = {}
+    meta_path = path + ".meta.json" if os.path.exists(path + ".meta.json") \
+        else path[:-4] + ".npz.meta.json"
+    if os.path.exists(path + ".meta.json"):
+        meta = json.load(open(path + ".meta.json"))
+    elif os.path.exists(meta_path):
+        meta = json.load(open(meta_path))
+    return tree, meta
+
+
+def latest_step_path(ckpt_dir: str, prefix: str = "step_") -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith(prefix) and f.endswith(".npz"):
+            try:
+                steps.append((int(f[len(prefix):-4]), f))
+            except ValueError:
+                pass
+    if not steps:
+        return None
+    return os.path.join(ckpt_dir, max(steps)[1])

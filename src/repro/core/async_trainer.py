@@ -1,0 +1,270 @@
+"""The Train phase — zero-collective asynchronous sub-model training.
+
+The paper's reducers each train one SGNS sub-model with **no parameter
+synchronization whatsoever**. On a TPU mesh this maps to a ``worker``
+mesh axis: stacked sub-model tables ``(n, V, d)`` are sharded over
+``worker`` and the epoch function runs under ``shard_map`` with *no
+collective anywhere in the step* — asserted by
+:func:`assert_no_collectives`, and visible as a zero collective-bytes
+roofline term (EXPERIMENTS §Roofline).
+
+The synchronized strawman (`sync_train_epoch`) is conventional
+data-parallel SGNS: one table, batch sharded, gradient all-reduced every
+step — the TPU-native equivalent of the paper's Hogwild/MLLib baselines.
+
+Both run on one CPU device for tests (``vmap`` backend) and lower to the
+production mesh for the dry-run (``shard_map`` backend).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+
+from repro.core import sgns
+from repro.core.sgns import SGNSConfig
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+
+# ---------------------------------------------------------------------------
+# Single-worker epoch: scan over a fixed number of steps.
+# ---------------------------------------------------------------------------
+def make_worker_epoch(cfg: SGNSConfig, total_steps: int,
+                      sparse: bool = True, row_grad_fn=None):
+    """Returns epoch_fn(params, centers (S,B), contexts (S,B), neg_cdf, key, step0).
+
+    ``neg_cdf`` is the worker's *own* unigram^0.75 CDF — each sub-model
+    draws negatives from its own sample's noise distribution, exactly as
+    a standalone word2vec run on that sub-corpus would (paper §3.2).
+    """
+
+    def sample_negatives(neg_cdf, key, shape):
+        u = jax.random.uniform(key, shape, dtype=jnp.float32)
+        idx = jnp.searchsorted(neg_cdf, u)
+        return jnp.clip(idx, 0, neg_cdf.shape[0] - 1).astype(jnp.int32)
+
+    def step(params, centers_b, contexts_b, neg_cdf, key, step_idx):
+        negs = sample_negatives(neg_cdf, key, (centers_b.shape[0], cfg.negatives))
+        lr = sgns.linear_lr(step_idx, total_steps, cfg)
+        if sparse:
+            fn = row_grad_fn or sgns.sparse_row_grads
+            return sgns.train_step_sparse(params, centers_b, contexts_b, negs, lr,
+                                          row_grad_fn=fn)
+        sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(
+            params, centers_b, contexts_b, negs)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, sum_loss / centers_b.shape[0]
+
+    def epoch_fn(params, centers, contexts, neg_cdf, key, step0):
+        def body(carry, xs):
+            params, key, i = carry
+            c_b, x_b = xs
+            key, sub = jax.random.split(key)
+            params, loss = step(params, c_b, x_b, neg_cdf, sub, step0 + i)
+            return (params, key, i + 1), loss
+
+        (params, _, _), losses = jax.lax.scan(
+            body, (params, key, jnp.int32(0)), (centers, contexts))
+        return params, losses
+
+    return epoch_fn
+
+
+# ---------------------------------------------------------------------------
+# Async (paper) trainer
+# ---------------------------------------------------------------------------
+@dataclass
+class AsyncShardTrainer:
+    """Trains n sub-models fully asynchronously.
+
+    ``backend='vmap'``     — one device, workers vectorized (tests/CPU).
+    ``backend='shard_map'`` — workers sharded over the ``worker`` mesh
+    axis; the compiled step contains no collectives.
+    """
+
+    cfg: SGNSConfig
+    num_workers: int
+    total_steps: int
+    backend: str = "vmap"
+    mesh: Mesh | None = None
+    sparse: bool = True
+    row_grad_fn: object = None
+
+    def init(self, key: jax.Array) -> dict:
+        keys = jax.random.split(key, self.num_workers)
+        return jax.vmap(lambda k: sgns.init_params(k, self.cfg))(keys)
+
+    def _epoch_fn(self):
+        return make_worker_epoch(self.cfg, self.total_steps,
+                                 sparse=self.sparse, row_grad_fn=self.row_grad_fn)
+
+    def _sharded(self, epoch_fn):
+        spec = P("worker")
+        return jax.shard_map(
+            jax.vmap(epoch_fn),  # local worker block (n/devices per device)
+            mesh=self.mesh,
+            in_specs=(spec,) * 6,
+            out_specs=(spec, spec),
+            check_vma=False,
+        )
+
+    def epoch(self, params, centers, contexts, neg_cdf, key, step0=0):
+        """params: (n,V,d) pytree; centers/contexts: (n,S,B); neg_cdf: (n,V)."""
+        epoch_fn = self._epoch_fn()
+        keys = jax.random.split(key, self.num_workers)
+        step0 = jnp.full((self.num_workers,), step0, dtype=jnp.int32)
+        if self.backend == "vmap":
+            fn = jax.vmap(epoch_fn)
+        elif self.backend == "shard_map":
+            assert self.mesh is not None
+            fn = self._sharded(epoch_fn)
+        else:
+            raise ValueError(self.backend)
+        return jax.jit(fn)(params, centers, contexts, neg_cdf, keys, step0)
+
+    def lower_epoch(self, steps: int, batch: int):
+        """Lower the sharded epoch for the dry-run, ShapeDtypeStruct only."""
+        assert self.mesh is not None
+        n, V, d = self.num_workers, self.cfg.vocab_size, self.cfg.dim
+        spec = P("worker")
+        sh = lambda s, t: jax.ShapeDtypeStruct(
+            s, t, sharding=NamedSharding(self.mesh, spec))
+        params = {"W": sh((n, V, d), jnp.float32), "C": sh((n, V, d), jnp.float32)}
+        args = (
+            params,
+            sh((n, steps, batch), jnp.int32),   # centers
+            sh((n, steps, batch), jnp.int32),   # contexts
+            sh((n, V), jnp.float32),            # per-worker negative CDFs
+            sh((n, 2), jnp.uint32),             # PRNG keys
+            sh((n,), jnp.int32),                # step0
+        )
+        fn = self._sharded(self._epoch_fn())
+        return jax.jit(fn).lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# Synchronized baseline (Hogwild/MLLib stand-in): data-parallel + all-reduce
+# ---------------------------------------------------------------------------
+def make_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array, total_steps: int,
+                    mesh: Mesh | None = None, data_axis: str = "worker"):
+    """One shared table; per-step gradient synchronization.
+
+    Under a mesh, the batch is sharded over ``data_axis`` and the dense
+    gradient is psum'd — the per-step collective the paper eliminates.
+    """
+
+    def sample_negatives(key, shape):
+        u = jax.random.uniform(key, shape, dtype=jnp.float32)
+        return jnp.clip(jnp.searchsorted(neg_cdf, u), 0, neg_cdf.shape[0] - 1
+                        ).astype(jnp.int32)
+
+    def step(params, c_b, x_b, key, i):
+        negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
+        lr = sgns.linear_lr(i, total_steps, cfg)
+        sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(params, c_b, x_b, negs)
+        loss = sum_loss / c_b.shape[0]
+        if mesh is not None:
+            # Per-step synchronization: the collective the paper removes.
+            grads = jax.tree.map(partial(jax.lax.psum, axis_name=data_axis), grads)
+            loss = jax.lax.pmean(loss, axis_name=data_axis)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, loss
+
+    def epoch_fn(params, centers, contexts, key, step0):
+        def body(carry, xs):
+            params, key, i = carry
+            key, sub = jax.random.split(key)
+            params, loss = step(params, xs[0], xs[1], sub, step0 + i)
+            return (params, key, i + 1), loss
+        (params, _, _), losses = jax.lax.scan(
+            body, (params, key, jnp.int32(0)), (centers, contexts))
+        return params, losses
+
+    if mesh is None:
+        return jax.jit(epoch_fn)
+
+    return jax.jit(jax.shard_map(
+        epoch_fn, mesh=mesh,
+        in_specs=(P(), P(None, data_axis), P(None, data_axis), P(), P()),
+        out_specs=(P(), P()), check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: periodic-sync (local-SGD) SGNS — interpolates between the
+# per-step-synchronized baseline (k=1) and the paper's fully-asynchronous
+# training (k→∞, with the final ALiR merge as the one-time "sync").
+# Collective bytes scale as 1/k (EXPERIMENTS §Perf SGNS iterations).
+# ---------------------------------------------------------------------------
+def make_periodic_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array,
+                             total_steps: int, sync_every: int,
+                             mesh: Mesh, data_axis: str = "worker"):
+    """One shared table; parameters are *averaged* across workers every
+    ``sync_every`` steps (local SGD) instead of gradients every step."""
+
+    def sample_negatives(key, shape):
+        u = jax.random.uniform(key, shape, dtype=jnp.float32)
+        return jnp.clip(jnp.searchsorted(neg_cdf, u), 0,
+                        neg_cdf.shape[0] - 1).astype(jnp.int32)
+
+    def local_step(params, c_b, x_b, key, i):
+        negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
+        lr = sgns.linear_lr(i, total_steps, cfg)
+        sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(
+            params, c_b, x_b, negs)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, sum_loss / c_b.shape[0]
+
+    def epoch_fn(params, centers, contexts, key, step0):
+        # centers/contexts: (outer, sync_every, B_local)
+        def outer_body(carry, xs):
+            params, key, i = carry
+            c_o, x_o = xs
+
+            def inner_body(c2, xs2):
+                params2, key2, i2 = c2
+                key2, sub = jax.random.split(key2)
+                params2, loss = local_step(params2, xs2[0], xs2[1], sub, i2)
+                return (params2, key2, i2 + 1), loss
+
+            (params, key, i), losses = jax.lax.scan(
+                inner_body, (params, key, i), (c_o, x_o))
+            # the periodic synchronization: average parameters
+            params = jax.tree.map(
+                partial(jax.lax.pmean, axis_name=data_axis), params)
+            return (params, key, i), losses
+
+        (params, _, _), losses = jax.lax.scan(
+            outer_body, (params, key, step0), (centers, contexts))
+        return params, jax.lax.pmean(losses, axis_name=data_axis)
+
+    spec_b = P(None, None, data_axis)
+    return jax.jit(jax.shard_map(
+        epoch_fn, mesh=mesh,
+        in_specs=(P(), spec_b, spec_b, P(), P()),
+        out_specs=(P(), P()), check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+def assert_no_collectives(lowered) -> str:
+    """Raises if the lowered/compiled HLO contains any cross-device
+    collective — the paper's headline property for the train phase."""
+    txt = lowered.as_text()
+    hits = sorted(set(COLLECTIVE_RE.findall(txt)))
+    if hits:
+        raise AssertionError(f"async step unexpectedly contains collectives: {hits}")
+    return txt
+
+
+def count_collective_ops(hlo_text: str) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        out[m.group(1)] = out.get(m.group(1), 0) + 1
+    return out

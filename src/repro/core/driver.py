@@ -1,0 +1,272 @@
+"""End-to-end paper pipeline: divide → async train → merge → evaluate.
+
+This is the high-level API used by the examples, benchmarks and tests:
+
+    result = run_pipeline(corpus, gen, strategy="shuffle", num_workers=10, ...)
+
+Vocabulary policy (paper §4.2):
+
+* ``shuffle`` — one global frequency-capped vocabulary, precomputed
+  before epoch 0 and shared by all sub-models;
+* ``random`` / ``equal`` — each sub-model builds its own vocabulary from
+  its sample with ``min_count = base_min_count / num_workers``; merge
+  happens over the union (ALiR's case 2).
+
+All sub-models train in the *union* index space so tables stack into
+``(n, V_union, d)``; each worker's pair stream only ever emits its own
+vocabulary's ids, so absent rows are never touched.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sgns import SGNSConfig
+from repro.core.async_trainer import AsyncShardTrainer, make_sync_epoch
+from repro.core.merge import StackedModels, merge as merge_models
+from repro.data.corpus import Corpus
+from repro.data.vocab import Vocab, build_vocab, union_vocab, UNK
+from repro.data.pipeline import make_worker_streams
+
+
+# ---------------------------------------------------------------------------
+def _project_vocab(worker_vocab: Vocab, union: Vocab, raw_vocab_size: int) -> Vocab:
+    """Worker vocabulary re-indexed into union-vocab id space."""
+    lookup = np.full(raw_vocab_size, UNK, dtype=np.int32)
+    union_ids = union.lookup[worker_vocab.word_ids]
+    lookup[worker_vocab.word_ids] = union_ids
+    counts = np.zeros(union.size, dtype=np.int64)
+    counts[union_ids] = worker_vocab.counts
+    return Vocab(word_ids=union.word_ids, counts=counts, lookup=lookup)
+
+
+def build_worker_vocabs(
+    corpus: Corpus,
+    raw_vocab_size: int,
+    strategy: str,
+    num_workers: int,
+    rate: float,
+    max_vocab: int | None = 300_000,
+    base_min_count: int = 100,
+    seed: int = 0,
+) -> tuple[list[Vocab], Vocab, np.ndarray]:
+    """Returns (projected worker vocabs, union vocab, presence mask (n, V))."""
+    if strategy == "shuffle":
+        g = build_vocab(corpus, raw_vocab_size, min_count=1, max_size=max_vocab)
+        union = g
+        workers = [g] * num_workers
+        mask = np.ones((num_workers, union.size), dtype=bool)
+        return list(workers), union, mask
+
+    from repro.core.sampling import sample_sentence_indices
+
+    min_count = max(1, int(round(base_min_count / num_workers)))
+    per_worker = []
+    for w in range(num_workers):
+        idx = sample_sentence_indices(
+            corpus.num_sentences, strategy, rate, w, num_workers, epoch=0, seed=seed)
+        sub = corpus.select(idx)
+        per_worker.append(build_vocab(sub, raw_vocab_size, min_count=min_count,
+                                      max_size=max_vocab))
+    union = union_vocab(per_worker, raw_vocab_size)
+    projected = [_project_vocab(v, union, raw_vocab_size) for v in per_worker]
+    mask = np.zeros((num_workers, union.size), dtype=bool)
+    for w, v in enumerate(per_worker):
+        mask[w, union.lookup[v.word_ids]] = True
+    return projected, union, mask
+
+
+def _neg_cdfs(worker_vocabs: list[Vocab], power: float = 0.75) -> np.ndarray:
+    cdfs = []
+    for v in worker_vocabs:
+        p = v.counts.astype(np.float64) ** power
+        s = p.sum()
+        p = p / s if s > 0 else np.full_like(p, 1.0 / len(p))
+        c = np.cumsum(p)
+        c[-1] = 1.0
+        cdfs.append(c)
+    return np.stack(cdfs).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class PipelineResult:
+    strategy: str
+    num_workers: int
+    union_vocab: Vocab
+    stacked: StackedModels
+    merged: dict = field(default_factory=dict)       # method -> (emb, valid)
+    timings: dict = field(default_factory=dict)
+    losses: list = field(default_factory=list)
+
+
+def train_submodels(
+    corpus: Corpus,
+    raw_vocab_size: int,
+    strategy: str,
+    num_workers: int,
+    cfg: SGNSConfig,
+    epochs: int = 3,
+    batch_size: int = 512,
+    rate: float | None = None,
+    window: int | None = None,
+    subsample_t: float | None = 1e-4,
+    max_vocab: int | None = 300_000,
+    base_min_count: int = 100,
+    backend: str = "vmap",
+    mesh=None,
+    seed: int = 0,
+    max_steps_per_epoch: int | None = None,
+    sparse: bool = True,
+    row_grad_fn=None,
+) -> PipelineResult:
+    rate = rate if rate is not None else 1.0 / num_workers
+    window = window if window is not None else cfg.window
+
+    t0 = time.perf_counter()
+    worker_vocabs, union, mask = build_worker_vocabs(
+        corpus, raw_vocab_size, strategy, num_workers, rate,
+        max_vocab=max_vocab, base_min_count=base_min_count, seed=seed)
+    cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": union.size})
+    neg_cdf = jnp.asarray(_neg_cdfs(worker_vocabs))
+    t_vocab = time.perf_counter() - t0
+
+    # Pair streams per worker (worker vocab projected into union ids).
+    streams = []
+    for w in range(num_workers):
+        s = make_worker_streams(
+            corpus, worker_vocabs[w], num_workers=num_workers, strategy=strategy,
+            rate=rate, window=window, subsample_t=subsample_t, seed=seed)[w]
+        streams.append(s)
+
+    # Estimate steps/epoch from epoch-0 sample sizes (kept equal across
+    # workers — shorter streams tile, as word2vec re-iterates its shard).
+    probe = [s.pairs(0) for s in streams]
+    min_pairs = min(len(c) for c, _ in probe)
+    steps = max(1, min_pairs // batch_size)
+    if max_steps_per_epoch is not None:
+        steps = min(steps, max_steps_per_epoch)
+    total_steps = steps * epochs
+
+    trainer = AsyncShardTrainer(
+        cfg=cfg, num_workers=num_workers, total_steps=total_steps,
+        backend=backend, mesh=mesh, sparse=sparse, row_grad_fn=row_grad_fn)
+    params = trainer.init(jax.random.PRNGKey(cfg.seed))
+
+    losses = []
+    t_train0 = time.perf_counter()
+    need = steps * batch_size
+    for epoch in range(epochs):
+        centers = np.zeros((num_workers, need), dtype=np.int32)
+        contexts = np.zeros((num_workers, need), dtype=np.int32)
+        for w, s in enumerate(streams):
+            if epoch == 0:
+                c, x = probe[w]
+            else:
+                c, x = s.pairs(epoch)
+            if len(c) == 0:
+                raise ValueError(f"worker {w} epoch {epoch}: empty sample")
+            reps = int(np.ceil(need / len(c)))
+            centers[w] = np.tile(c, reps)[:need]
+            contexts[w] = np.tile(x, reps)[:need]
+        shp = (num_workers, steps, batch_size)
+        params, ep_losses = trainer.epoch(
+            params,
+            jnp.asarray(centers.reshape(shp)),
+            jnp.asarray(contexts.reshape(shp)),
+            neg_cdf,
+            jax.random.PRNGKey(seed * 1000 + epoch),
+            step0=epoch * steps,
+        )
+        losses.append(float(jnp.mean(ep_losses)))
+    jax.block_until_ready(params)
+    t_train = time.perf_counter() - t_train0
+
+    stacked = StackedModels(models=params["W"], mask=jnp.asarray(mask))
+    return PipelineResult(
+        strategy=strategy, num_workers=num_workers, union_vocab=union,
+        stacked=stacked, timings={"vocab_s": t_vocab, "train_s": t_train,
+                                  "steps_per_epoch": steps},
+        losses=losses)
+
+
+def run_pipeline(
+    corpus: Corpus,
+    raw_vocab_size: int,
+    strategy: str = "shuffle",
+    num_workers: int = 10,
+    cfg: SGNSConfig | None = None,
+    merge_methods: tuple[str, ...] = ("concat", "pca", "alir_pca"),
+    **kw,
+) -> PipelineResult:
+    cfg = cfg or SGNSConfig(vocab_size=0, dim=64)
+    res = train_submodels(corpus, raw_vocab_size, strategy, num_workers, cfg, **kw)
+    for method in merge_methods:
+        t0 = time.perf_counter()
+        emb, valid = merge_models(res.stacked, method, out_dim=cfg.dim,
+                                  key=jax.random.PRNGKey(42))
+        jax.block_until_ready(emb)
+        res.merged[method] = (np.asarray(emb), np.asarray(valid))
+        res.timings[f"merge_{method}_s"] = time.perf_counter() - t0
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Synchronized baseline (the paper's Hogwild stand-in) end-to-end.
+# ---------------------------------------------------------------------------
+def train_sync_baseline(
+    corpus: Corpus,
+    raw_vocab_size: int,
+    cfg: SGNSConfig,
+    epochs: int = 3,
+    batch_size: int = 512,
+    window: int | None = None,
+    subsample_t: float | None = 1e-4,
+    max_vocab: int | None = 300_000,
+    seed: int = 0,
+    max_steps_per_epoch: int | None = None,
+    mesh=None,
+):
+    from repro.data.pairs import extract_pairs
+
+    vocab = build_vocab(corpus, raw_vocab_size, min_count=1, max_size=max_vocab)
+    cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": vocab.size})
+    window = window if window is not None else cfg.window
+    p = vocab.counts.astype(np.float64) ** 0.75
+    p /= p.sum()
+    cdf = np.cumsum(p)
+    cdf[-1] = 1.0
+    neg_cdf = jnp.asarray(cdf, dtype=jnp.float32)
+
+    centers, contexts = extract_pairs(corpus, vocab, window=window,
+                                      subsample_t=subsample_t, seed=seed)
+    steps = max(1, len(centers) // batch_size)
+    if max_steps_per_epoch is not None:
+        steps = min(steps, max_steps_per_epoch)
+    total_steps = steps * epochs
+    epoch_fn = make_sync_epoch(cfg, neg_cdf, total_steps, mesh=mesh)
+
+    from repro.core import sgns as sgns_mod
+    params = sgns_mod.init_params(jax.random.PRNGKey(cfg.seed), cfg)
+    need = steps * batch_size
+    losses = []
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        rng = np.random.default_rng(seed * 77 + epoch)
+        perm = rng.permutation(len(centers))[:need]
+        if len(perm) < need:
+            perm = np.tile(perm, int(np.ceil(need / len(perm))))[:need]
+        c = jnp.asarray(centers[perm].reshape(steps, batch_size))
+        x = jnp.asarray(contexts[perm].reshape(steps, batch_size))
+        params, ep_losses = epoch_fn(params, c, x,
+                                     jax.random.PRNGKey(seed * 31 + epoch),
+                                     jnp.int32(epoch * steps))
+        losses.append(float(jnp.mean(ep_losses)))
+    jax.block_until_ready(params)
+    return params, vocab, {"train_s": time.perf_counter() - t0,
+                           "steps_per_epoch": steps, "losses": losses}

@@ -1,0 +1,225 @@
+"""The Merge phase — Concat, PCA, and ALiR (the paper's contribution).
+
+All merges operate on *stacked* sub-models: ``models (n, V, d)`` over the
+**union** vocabulary, plus a presence ``mask (n, V)`` marking which words
+each sub-model actually trained. Concat/PCA use the intersection rows
+(as in the paper); ALiR uses the union and reconstructs missing rows.
+
+ALiR (Alternating Linear Regression), a Generalized Procrustes Analysis
+variant (paper §3.3.2), per iteration:
+
+1. *Estimate translation* — for each sub-model i, solve Orthogonal
+   Procrustes on its **present** rows:  W_i = argmin ‖M_i' W − Y'‖_F
+   over orthogonal W  (closed form: UVᵀ from SVD of M_i'ᵀ Y').
+2. *Estimate missing values* — reconstruct M_i* from Y* via
+   Y* = M_i* W_i  ⇒  M_i* = Y* W_iᵀ (W_i orthogonal).
+3. *Update joint embedding* — Y ← mean over i of (M_i W_i), using the
+   reconstructed rows for the missing parts.
+
+Stops when the change in the average normalized Frobenius displacement
+``(1/n) Σ_i ‖Y − M_i W_i‖_F / sqrt(|V|·d)`` drops below ``tol``.
+
+Everything is vmapped over the model axis and jittable (SVDs are d×d —
+tiny next to training).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Building the stacked representation
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StackedModels:
+    models: jax.Array   # (n, V, d) union-vocab rows; garbage where absent
+    mask: jax.Array     # (n, V) bool presence
+
+    @property
+    def n(self) -> int:
+        return self.models.shape[0]
+
+    def intersection(self) -> jax.Array:
+        return jnp.all(self.mask, axis=0)
+
+    def union_present(self) -> jax.Array:
+        return jnp.any(self.mask, axis=0)
+
+
+def stack_models(models: list[np.ndarray], masks: list[np.ndarray]) -> StackedModels:
+    m = jnp.asarray(np.stack(models))
+    k = jnp.asarray(np.stack(masks)).astype(bool)
+    return StackedModels(models=m, mask=k)
+
+
+# ---------------------------------------------------------------------------
+# Concat / PCA (baselines from the paper)
+# ---------------------------------------------------------------------------
+def merge_concat(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    """(V, n*d) concatenation over intersection rows; rows outside the
+    intersection are zero (OOV for this merge). Returns (emb, valid)."""
+    n, V, d = stacked.models.shape
+    emb = jnp.transpose(stacked.models, (1, 0, 2)).reshape(V, n * d)
+    valid = stacked.intersection()
+    return emb * valid[:, None], valid
+
+
+def merge_pca(stacked: StackedModels, out_dim: int) -> tuple[jax.Array, jax.Array]:
+    """PCA of the concatenated matrix down to ``out_dim`` (paper's Pca).
+
+    Economy form: eigendecomposition of the (nd × nd) covariance over
+    intersection rows — never materializes a V×V anything.
+    """
+    emb, valid = merge_concat(stacked)
+    cnt = jnp.maximum(valid.sum(), 1)
+    mean = jnp.sum(emb * valid[:, None], axis=0) / cnt
+    X = (emb - mean) * valid[:, None]
+    cov = X.T @ X / cnt
+    eigval, eigvec = jnp.linalg.eigh(cov)          # ascending
+    comps = eigvec[:, -out_dim:][:, ::-1]          # (nd, out_dim)
+    return (X @ comps) * valid[:, None], valid
+
+
+# ---------------------------------------------------------------------------
+# Orthogonal Procrustes
+# ---------------------------------------------------------------------------
+def orthogonal_procrustes(A: jax.Array, B: jax.Array,
+                          weights: jax.Array | None = None) -> jax.Array:
+    """W minimizing ‖A W − B‖_F (rows optionally weighted), W orthogonal."""
+    if weights is not None:
+        A = A * weights[:, None]
+        # weight appears once: Aᵀ diag(w) B — weight either side, not both
+        M = A.T @ B
+    else:
+        M = A.T @ B
+    U, _, Vt = jnp.linalg.svd(M, full_matrices=False)
+    return U @ Vt
+
+
+# ---------------------------------------------------------------------------
+# ALiR
+# ---------------------------------------------------------------------------
+def _alir_iteration(Y: jax.Array, models: jax.Array, mask: jax.Array):
+    """One ALiR round. Returns (Y_new, displacement, W (n,d,d))."""
+    maskf = mask.astype(Y.dtype)                       # (n, V)
+
+    def per_model(M_i, m_i):
+        # Step 1: Procrustes on present rows.
+        A = M_i * m_i[:, None]
+        Byy = Y * m_i[:, None]
+        U, _, Vt = jnp.linalg.svd(A.T @ Byy, full_matrices=False)
+        W = U @ Vt                                     # (d, d)
+        aligned_present = M_i @ W                      # valid on present rows
+        # Step 2: reconstruct missing rows: M_i* = Y* W_iᵀ ⇒ aligned = Y*.
+        aligned_full = jnp.where(m_i[:, None] > 0, aligned_present, Y)
+        # Displacement on present rows (normalized Frobenius).
+        num_rows = jnp.maximum(m_i.sum(), 1.0)
+        disp = jnp.linalg.norm((Y - aligned_present) * m_i[:, None]) / jnp.sqrt(
+            num_rows * Y.shape[1])
+        return aligned_full, disp, W
+
+    aligned, disps, Ws = jax.vmap(per_model)(models, maskf)
+    # Step 3: mean of translations of all n models (reconstructed rows
+    # contribute the current Y, exactly as in the paper's formulation).
+    Y_new = jnp.mean(aligned, axis=0)
+    return Y_new, jnp.mean(disps), Ws
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def _alir_loop(Y0, models, mask, max_iters: int, tol: float):
+    def body(carry, _):
+        Y, prev_disp, done = carry
+        Y_new, disp, _ = _alir_iteration(Y, models, mask)
+        new_done = done | (jnp.abs(prev_disp - disp) < tol)
+        Y_out = jnp.where(done, Y, Y_new)
+        return (Y_out, disp, new_done), disp
+
+    (Y, _, _), disps = jax.lax.scan(
+        body, (Y0, jnp.inf, jnp.array(False)), None, length=max_iters)
+    return Y, disps
+
+
+def alir_init(stacked: StackedModels, out_dim: int, init: str, key: jax.Array):
+    n, V, d = stacked.models.shape
+    if init == "random":
+        return 0.1 * jax.random.normal(key, (V, out_dim), dtype=jnp.float32)
+    if init == "pca":
+        pca_emb, valid = merge_pca(stacked, out_dim)
+        rnd = 0.1 * jax.random.normal(key, (V, out_dim), dtype=jnp.float32)
+        # intersection rows from PCA; other union rows random (paper init ii)
+        return jnp.where(valid[:, None], pca_emb, rnd)
+    raise ValueError(f"unknown init {init!r}")
+
+
+def merge_alir(
+    stacked: StackedModels,
+    out_dim: int | None = None,
+    init: str = "pca",
+    max_iters: int = 10,
+    tol: float = 1e-4,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (Y (V, d), valid (V,), per-iteration displacements).
+
+    ``valid`` marks union-vocabulary rows (present in ≥1 sub-model);
+    every valid row has a representation — that is ALiR's point.
+    """
+    n, V, d = stacked.models.shape
+    out_dim = out_dim or d
+    if out_dim != d:
+        raise ValueError("ALiR aligns in the sub-model dimension; out_dim must equal d")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    Y0 = alir_init(stacked, out_dim, init, key)
+    models = stacked.models * stacked.mask[..., None]
+    Y, disps = _alir_loop(Y0, models, stacked.mask, max_iters, tol)
+    valid = stacked.union_present()
+    return Y * valid[:, None], valid, disps
+
+
+def reconstruct_missing(stacked: StackedModels, Y: jax.Array) -> jax.Array:
+    """Per-sub-model reconstruction of its missing rows in its own space:
+    M_i* = Y* W_iᵀ. Returns completed models (n, V, d)."""
+    _, _, Ws = _alir_iteration(Y, stacked.models * stacked.mask[..., None],
+                               stacked.mask)
+    def back(M_i, m_i, W):
+        rec = Y @ W.T
+        return jnp.where(m_i[:, None], M_i, rec)
+    return jax.vmap(back)(stacked.models, stacked.mask, Ws)
+
+
+# ---------------------------------------------------------------------------
+# Naive averaging (the paper's counter-example) — for tests/benchmarks.
+# ---------------------------------------------------------------------------
+def merge_average(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    maskf = stacked.mask.astype(stacked.models.dtype)
+    num = jnp.sum(stacked.models * maskf[..., None], axis=0)
+    den = jnp.maximum(jnp.sum(maskf, axis=0), 1.0)
+    return num / den[:, None], stacked.union_present()
+
+
+MERGE_METHODS = ("concat", "pca", "alir_rand", "alir_pca", "average", "single")
+
+
+def merge(stacked: StackedModels, method: str, out_dim: int,
+          key: jax.Array | None = None, **kw):
+    if method == "concat":
+        return merge_concat(stacked)
+    if method == "pca":
+        return merge_pca(stacked, out_dim)
+    if method == "alir_rand":
+        Y, v, _ = merge_alir(stacked, out_dim, init="random", key=key, **kw)
+        return Y, v
+    if method == "alir_pca":
+        Y, v, _ = merge_alir(stacked, out_dim, init="pca", key=key, **kw)
+        return Y, v
+    if method == "average":
+        return merge_average(stacked)
+    if method == "single":
+        return stacked.models[0], stacked.mask[0]
+    raise ValueError(f"unknown merge method {method!r}")

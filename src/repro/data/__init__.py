@@ -1,0 +1,31 @@
+"""Data substrate: corpus synthesis, vocabulary, skip-gram pairs, streams.
+
+The paper trains on raw text (Wikipedia 14 GB / Web 268 GB). Offline we
+substitute a synthetic corpus drawn from a generative model with *known*
+semantic structure (`corpus.SemanticCorpusModel`) so that the evaluation
+benchmarks (similarity / analogy / categorization) have exact gold data.
+Everything downstream (vocab building, subsampling, window extraction,
+negative-sampling tables, per-worker sample streams) is implemented in
+full, as it would be for real text.
+"""
+
+from repro.data.corpus import SemanticCorpusModel, Corpus
+from repro.data.vocab import Vocab, build_vocab
+from repro.data.pairs import (
+    extract_pairs,
+    NegativeSampler,
+    subsample_mask,
+)
+from repro.data.pipeline import WorkerStream, make_worker_streams
+
+__all__ = [
+    "SemanticCorpusModel",
+    "Corpus",
+    "Vocab",
+    "build_vocab",
+    "extract_pairs",
+    "NegativeSampler",
+    "subsample_mask",
+    "WorkerStream",
+    "make_worker_streams",
+]

@@ -1,0 +1,106 @@
+"""Skip-gram (center, context) pair extraction + negative sampling.
+
+Faithful to word2vec/the paper:
+
+* dynamic window — the effective window for each center is drawn
+  uniformly from [1, win] (word2vec's ``b`` trick);
+* frequent-word subsampling with the usual ``(sqrt(f/t)+1)·t/f`` keep
+  probability;
+* negative samples drawn from the unigram distribution raised to 3/4.
+
+Pair extraction is vectorized numpy (host-side input pipeline); negative
+sampling is a jittable inverse-CDF lookup so it can run on-device inside
+the training step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.corpus import Corpus
+from repro.data.vocab import Vocab, UNK
+
+
+def subsample_mask(
+    tokens: np.ndarray, vocab: Vocab, t: float = 1e-4, rng: np.random.Generator | None = None
+) -> np.ndarray:
+    """word2vec frequent-word subsampling. tokens are vocab ids (UNK allowed)."""
+    rng = rng or np.random.default_rng(0)
+    freqs = vocab.unigram_probs()
+    f = np.where(tokens == UNK, 1.0, freqs[np.clip(tokens, 0, None)])
+    keep_prob = np.minimum(1.0, (np.sqrt(f / t) + 1.0) * (t / np.maximum(f, 1e-12)))
+    keep = rng.random(len(tokens)) < keep_prob
+    return keep & (tokens != UNK)
+
+
+def extract_pairs(
+    corpus: Corpus,
+    vocab: Vocab,
+    window: int = 10,
+    subsample_t: float | None = 1e-4,
+    seed: int = 0,
+    max_pairs: int | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Return (centers, contexts) vocab-id arrays for the whole corpus.
+
+    Implements word2vec semantics: subsampled/UNK tokens are removed from
+    the stream *before* windowing (so windows reach across removed
+    words), and each center uses a dynamic window size.
+    """
+    rng = np.random.default_rng(seed)
+    toks = vocab.encode(corpus.tokens)
+    if subsample_t is not None:
+        keep = subsample_mask(toks, vocab, t=subsample_t, rng=rng)
+    else:
+        keep = toks != UNK
+
+    # Sentence id per token, so windows never cross sentence boundaries.
+    sent_id = np.repeat(
+        np.arange(corpus.num_sentences, dtype=np.int64),
+        np.diff(corpus.offsets),
+    )
+    toks, sent_id = toks[keep], sent_id[keep]
+    n = len(toks)
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+
+    dyn = rng.integers(1, window + 1, size=n)
+    centers_parts, contexts_parts = [], []
+    for off in range(1, window + 1):
+        # pair (i, i+off) valid both directions when off <= dyn of the center
+        valid = np.arange(n - off)
+        same_sent = sent_id[valid] == sent_id[valid + off]
+        fwd = same_sent & (off <= dyn[valid])
+        bwd = same_sent & (off <= dyn[valid + off])
+        i = valid[fwd]
+        centers_parts.append(toks[i])
+        contexts_parts.append(toks[i + off])
+        j = valid[bwd]
+        centers_parts.append(toks[j + off])
+        contexts_parts.append(toks[j])
+    centers = np.concatenate(centers_parts).astype(np.int32)
+    contexts = np.concatenate(contexts_parts).astype(np.int32)
+    perm = rng.permutation(len(centers))
+    centers, contexts = centers[perm], contexts[perm]
+    if max_pairs is not None:
+        centers, contexts = centers[:max_pairs], contexts[:max_pairs]
+    return centers, contexts
+
+
+class NegativeSampler:
+    """Unigram^0.75 sampler: inverse-CDF lookup, jittable and vectorized."""
+
+    def __init__(self, vocab_counts: np.ndarray, power: float = 0.75):
+        p = vocab_counts.astype(np.float64) ** power
+        p /= p.sum()
+        cdf = np.cumsum(p)
+        cdf[-1] = 1.0
+        self.cdf = jnp.asarray(cdf, dtype=jnp.float32)
+        self.probs = jnp.asarray(p, dtype=jnp.float32)
+
+    def sample(self, key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+        u = jax.random.uniform(key, shape, dtype=jnp.float32)
+        idx = jnp.searchsorted(self.cdf, u)
+        return jnp.clip(idx, 0, self.cdf.shape[0] - 1).astype(jnp.int32)

@@ -1,0 +1,117 @@
+"""Per-worker sample streams — the paper's mapper/reducer, TPU-style.
+
+In the paper a MapReduce mapper assigns each sentence to each of the
+``n`` sub-corpora independently with probability ``r/100`` and ships it
+to the matching reducer. Sampling with replacement is *stateless*, so on
+a TPU pod we invert control: each worker draws its own sample directly
+from the (shared, read-only) corpus with a deterministic PRNG stream —
+``seed = hash(worker, epoch)`` for Shuffle, ``hash(worker)`` for fixed
+RANDOM SAMPLING. No shuffle network phase exists at all.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+from repro.data.vocab import Vocab
+from repro.data.pairs import extract_pairs
+from repro.core.sampling import sample_sentence_indices
+
+
+@dataclass
+class WorkerStream:
+    """One sub-model's training stream for one epoch."""
+
+    corpus: Corpus
+    vocab: Vocab
+    worker: int
+    strategy: str           # 'equal' | 'random' | 'shuffle'
+    rate: float             # sampling rate r in (0, 1]
+    num_workers: int
+    window: int = 10
+    subsample_t: float | None = 1e-4
+    seed: int = 0
+
+    def sentence_indices(self, epoch: int) -> np.ndarray:
+        return sample_sentence_indices(
+            num_sentences=self.corpus.num_sentences,
+            strategy=self.strategy,
+            rate=self.rate,
+            worker=self.worker,
+            num_workers=self.num_workers,
+            epoch=epoch,
+            seed=self.seed,
+        )
+
+    def pairs(self, epoch: int, max_pairs: int | None = None):
+        idx = self.sentence_indices(epoch)
+        sub = self.corpus.select(idx)
+        return extract_pairs(
+            sub,
+            self.vocab,
+            window=self.window,
+            subsample_t=self.subsample_t,
+            seed=self.seed * 7919 + self.worker * 104729 + epoch,
+            max_pairs=max_pairs,
+        )
+
+    def batches(
+        self, epoch: int, batch_size: int, max_pairs: int | None = None
+    ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        centers, contexts = self.pairs(epoch, max_pairs=max_pairs)
+        n = (len(centers) // batch_size) * batch_size
+        for i in range(0, n, batch_size):
+            yield centers[i : i + batch_size], contexts[i : i + batch_size]
+
+
+def make_worker_streams(
+    corpus: Corpus,
+    vocab: Vocab,
+    num_workers: int,
+    strategy: str,
+    rate: float | None = None,
+    **kw,
+) -> list[WorkerStream]:
+    rate = rate if rate is not None else 1.0 / num_workers
+    return [
+        WorkerStream(
+            corpus=corpus,
+            vocab=vocab,
+            worker=w,
+            strategy=strategy,
+            rate=rate,
+            num_workers=num_workers,
+            **kw,
+        )
+        for w in range(num_workers)
+    ]
+
+
+def stacked_pair_batches(
+    streams: list[WorkerStream],
+    epoch: int,
+    batch_size: int,
+    num_batches: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(n_workers, num_batches, batch) arrays for the async shard trainer.
+
+    Streams shorter than requested wrap around — word2vec also iterates
+    its stream multiple times; sub-models stay perfectly load-balanced.
+    """
+    n = len(streams)
+    need = batch_size * num_batches
+    centers = np.zeros((n, need), dtype=np.int32)
+    contexts = np.zeros((n, need), dtype=np.int32)
+    for w, s in enumerate(streams):
+        c, x = s.pairs(epoch)
+        if len(c) == 0:
+            raise ValueError(f"worker {w} drew an empty sample")
+        reps = int(np.ceil(need / len(c)))
+        centers[w] = np.tile(c, reps)[:need]
+        contexts[w] = np.tile(x, reps)[:need]
+    shape = (n, num_batches, batch_size)
+    return centers.reshape(shape), contexts.reshape(shape)

@@ -1,0 +1,17 @@
+from repro.eval.benchmarks import (
+    spearman,
+    evaluate_similarity,
+    evaluate_analogy,
+    evaluate_categorization,
+    evaluate_all,
+    BenchmarkSuite,
+)
+
+__all__ = [
+    "spearman",
+    "evaluate_similarity",
+    "evaluate_analogy",
+    "evaluate_categorization",
+    "evaluate_all",
+    "BenchmarkSuite",
+]

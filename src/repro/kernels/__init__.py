@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+* ``sgns_update`` — fused SGNS forward+backward on gathered rows
+  (pl.pallas_call + BlockSpec VMEM tiling); ``ops`` holds the jit'd
+  wrappers (padding, gather/scatter); ``ref`` the pure-jnp oracles.
+* ``swa_decode`` — flash-style single-token sliding-window decode
+  attention (online softmax, VMEM scratch accumulators) — the hot op of
+  the long_500k shape for dense archs.
+
+Kernels are validated in ``interpret=True`` mode on CPU (the kernel body
+runs in Python) and target TPU Mosaic unchanged.
+"""
+
+from repro.kernels.ops import (
+    sgns_row_grads,
+    sgns_apply_step,
+    make_row_grad_fn,
+)
+from repro.kernels.ref import sgns_row_grads_ref, swa_decode_ref
+from repro.kernels.swa_decode import swa_decode_kernel
+
+__all__ = [
+    "sgns_row_grads",
+    "sgns_apply_step",
+    "make_row_grad_fn",
+    "sgns_row_grads_ref",
+    "swa_decode_ref",
+    "swa_decode_kernel",
+]

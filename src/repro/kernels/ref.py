@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgns_row_grads_ref(
+    w: jax.Array, c_pos: jax.Array, c_neg: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused SGNS forward+backward on gathered rows (sum-loss semantics).
+
+    w (B, D), c_pos (B, D), c_neg (B, K, D)  →
+    (per_pair_loss (B,), dW (B, D), dC_pos (B, D), dC_neg (B, K, D)).
+
+    Computed in f32 regardless of input dtype; outputs cast back.
+    """
+    dt = w.dtype
+    w32 = w.astype(jnp.float32)
+    cp32 = c_pos.astype(jnp.float32)
+    cn32 = c_neg.astype(jnp.float32)
+    s_pos = jnp.sum(w32 * cp32, axis=-1)                 # (B,)
+    s_neg = jnp.einsum("bd,bkd->bk", w32, cn32)          # (B, K)
+    loss = jax.nn.softplus(-s_pos) + jnp.sum(jax.nn.softplus(s_neg), axis=-1)
+    g_pos = jax.nn.sigmoid(s_pos) - 1.0                  # (B,)
+    g_neg = jax.nn.sigmoid(s_neg)                        # (B, K)
+    d_w = g_pos[:, None] * cp32 + jnp.einsum("bk,bkd->bd", g_neg, cn32)
+    d_cp = g_pos[:, None] * w32
+    d_cn = g_neg[..., None] * w32[:, None, :]
+    return loss, d_w.astype(dt), d_cp.astype(dt), d_cn.astype(dt)
+
+
+def swa_decode_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array
+) -> jax.Array:
+    """Sliding-window single-token decode attention oracle.
+
+    q (B, H, D), k (B, W, H, D), v (B, W, H, D) — the cache already holds
+    exactly the window. Returns (B, H, D).
+    """
+    s = jnp.einsum("bhd,bwhd->bhw", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhw,bwhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+"""Launch layer: meshes, dry-run, roofline, training/serving drivers.
+
+NOTE: import ``repro.launch.dryrun`` only as a script entry point — it
+sets XLA_FLAGS for 512 placeholder devices at import time.
+"""

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first init. 512 placeholder host devices back the production meshes
+# (16×16 single pod, 2×16×16 multi-pod). Never set this in conftest —
+# smoke tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) case.
+
+For each case this builds the real step function (train_step with the
+arch's production optimizer and microbatching, prefill forward, or
+one-token decode against a full-length cache), binds ShapeDtypeStruct
+inputs carrying NamedShardings from repro.sharding.rules, compiles for
+the production mesh, and prints ``memory_analysis()`` (fits?) and
+``cost_analysis()`` + collective-bytes (the §Roofline inputs).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod] --json out.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_IDS, SHAPES, get_config, supports_shape, config_for_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+from repro.models import Model
+from repro.models import transformer as tfm
+from repro.optim import get_optimizer
+from repro.sharding import (
+    tree_param_specs, tree_data_specs, tree_cache_specs, with_sharding)
+from repro.sharding import ctx as shctx
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _sds_key():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def build_case(arch_id: str, shape_name: str, mesh, *,
+               variant: str = "baseline"):
+    """Returns (lowered, meta) for one (arch, shape, mesh) case."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch_id)
+    ok, why = supports_shape(cfg, shape_name)
+    if not ok:
+        raise SkipCase(why)
+    cfg = config_for_shape(cfg, shape_name).with_overrides(dtype="bfloat16")
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant, shape_name)
+    model = Model(cfg)
+
+    params_sds = jax.eval_shape(model.init, _sds_key())
+    p_specs = tree_param_specs(params_sds, mesh, fsdp=cfg.fsdp)
+    params_in = with_sharding(params_sds, p_specs, mesh)
+
+    meta = {
+        "arch": arch_id, "shape": shape_name, "variant": variant,
+        "params": rl.count_params(params_sds),
+        "active_params": rl.active_params(cfg, params_sds),
+        "model_flops": rl.model_flops_for(cfg, params_sds, shape),
+    }
+
+    if shape.kind == "train":
+        opt = get_optimizer(cfg.train_optimizer)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        o_specs = tree_param_specs(opt_sds, mesh, fsdp=cfg.fsdp)
+        opt_in = with_sharding(opt_sds, o_specs, mesh)
+        batch_sds = model.example_batch(shape, concrete=False)
+        b_specs = tree_data_specs(batch_sds, mesh)
+        batch_in = with_sharding(batch_sds, b_specs, mesh)
+        step_in = jax.ShapeDtypeStruct((), jnp.int32)
+        # per-microbatch batch must stay divisible by the batch shards
+        # (pod×data), else GSPMD unshards the batch dim inside the scan
+        import math
+        n_shards = math.prod(
+            s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+            if a in ("pod", "data"))
+        mb = cfg.train_microbatches
+        while mb > 1 and (shape.global_batch % mb or
+                          (shape.global_batch // mb) % n_shards):
+            mb //= 2
+        train_step = model.make_train_step(opt, microbatches=max(mb, 1))
+        fn = jax.jit(
+            train_step,
+            out_shardings=(p_specs_to_shardings(p_specs, mesh),
+                           p_specs_to_shardings(o_specs, mesh),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+        with mesh, shctx.use_mesh_constraints(mesh):
+            lowered = fn.lower(params_in, opt_in, batch_in, step_in)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch_sds = model.example_batch(shape, concrete=False)
+        b_specs = tree_data_specs(batch_sds, mesh)
+        batch_in = with_sharding(batch_sds, b_specs, mesh)
+
+        def prefill(params, batch):
+            logits, _, _ = tfm.forward_logits(params, cfg, batch)
+            return logits
+
+        with mesh, shctx.use_mesh_constraints(mesh):
+            lowered = jax.jit(prefill).lower(params_in, batch_in)
+        return lowered, meta
+
+    # decode
+    B = shape.global_batch
+    cache_len = model.decode_cache_len(shape)
+    enc_len = shape.seq_len if cfg.encoder_layers else None
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, cache_len, enc_len=enc_len))
+    c_specs = tree_cache_specs(cache_sds, mesh)
+    cache_in = with_sharding(cache_sds, c_specs, mesh)
+    tok_in = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=NamedSharding(mesh, tree_data_specs(
+            jax.ShapeDtypeStruct((B, 1), jnp.int32), mesh)))
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+    decode = model.make_decode_step()
+    fn = jax.jit(decode,
+                 out_shardings=(NamedSharding(mesh, P()),
+                                p_specs_to_shardings(c_specs, mesh)),
+                 donate_argnums=(1,))
+    with mesh, shctx.use_mesh_constraints(mesh):
+        lowered = fn.lower(params_in, cache_in, tok_in, pos_in)
+    meta["cache_len"] = cache_len
+    return lowered, meta
+
+
+def p_specs_to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class SkipCase(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Variants for §Perf hillclimbing (beyond-paper optimizations).
+# ---------------------------------------------------------------------------
+def apply_variant(cfg, variant: str, shape_name: str):
+    from dataclasses import replace
+    if variant == "no_remat":
+        return cfg.with_overrides(remat=False)
+    if variant == "remat_per_layer":
+        return cfg.with_overrides(remat_per_layer=True)
+    if variant == "no_fsdp":          # pure TP × DP (no ZeRO-3 regather)
+        return cfg.with_overrides(fsdp=False)
+    if variant == "seq_mlstm":        # xlstm pre-optimization baseline
+        return cfg.with_overrides(
+            ssm=replace(cfg.ssm, mlstm_chunk=0, slstm_segment=0))
+    if variant == "no_slstm_segment":
+        return cfg.with_overrides(ssm=replace(cfg.ssm, slstm_segment=0))
+    if variant.startswith("mlstm_chunk_"):
+        return cfg.with_overrides(
+            ssm=replace(cfg.ssm, mlstm_chunk=int(variant.rsplit("_", 1)[1])))
+    if variant == "more_microbatch":
+        return cfg.with_overrides(
+            train_microbatches=cfg.train_microbatches * 2)
+    if variant == "less_microbatch":
+        return cfg.with_overrides(
+            train_microbatches=max(1, cfg.train_microbatches // 2))
+    if variant == "ungrouped_moe":   # pre-optimization MoE dispatch
+        return cfg.with_overrides(moe=replace(cfg.moe, groups=1))
+    if variant.startswith("capacity_"):
+        f = float(variant.split("_", 1)[1])
+        return cfg.with_overrides(moe=replace(cfg.moe, capacity_factor=f))
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+def run_case(arch_id: str, shape_name: str, *, multi_pod: bool,
+             variant: str = "baseline", verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    lowered, meta = build_case(arch_id, shape_name, mesh, variant=variant)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    # On the (pod=2,data=16,model=16) mesh, replica groups containing the
+    # pod axis have sizes {2, 32, 512} — those cross DCN.
+    dcn_sizes = frozenset({2, 32, 512}) if multi_pod else frozenset()
+    r = rl.analyze(arch_id, shape_name, compiled, chips,
+                   model_flops=meta["model_flops"],
+                   dcn_group_sizes=dcn_sizes or None)
+    row = r.row()
+    row.update(variant=variant, multi_pod=multi_pod,
+               params=meta["params"], active_params=meta["active_params"],
+               lower_s=t1 - t0, compile_s=t2 - t1)
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"== {arch_id} × {shape_name} ({'2x16x16' if multi_pod else '16x16'}"
+              f", variant={variant})")
+        print(f"   params={meta['params']/1e9:.2f}B "
+              f"active={meta['active_params']/1e9:.2f}B "
+              f"lower={t1-t0:.1f}s compile={t2-t1:.1f}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   cost_analysis: flops/chip={r.flops_per_chip:.3e} "
+              f"bytes/chip={r.bytes_per_chip:.3e}")
+        print(f"   collectives: {r.collectives.count_by_op} "
+              f"bytes/chip={r.collective_bytes_per_chip:.3e}")
+        print(f"   roofline: compute={r.compute_s:.3e}s memory={r.memory_s:.3e}s"
+              f" collective={r.collective_s:.3e}s → {r.dominant}-bound; "
+              f"MODEL/HLO flops={r.flops_utilization:.3f}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--json", default=None, help="append rows to this file")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(SHAPES) if args.shape == "all" else (args.shape,)
+
+    rows = []
+    for a in archs:
+        for s in shapes:
+            try:
+                rows.append(run_case(a, s, multi_pod=args.multi_pod,
+                                     variant=args.variant))
+            except SkipCase as e:
+                print(f"== {a} × {s}: SKIP ({e})")
+                rows.append({"arch": a, "shape": s, "skipped": str(e),
+                             "variant": args.variant,
+                             "multi_pod": args.multi_pod})
+            except Exception:
+                print(f"== {a} × {s}: FAILED")
+                traceback.print_exc()
+                rows.append({"arch": a, "shape": s, "failed": True,
+                             "variant": args.variant,
+                             "multi_pod": args.multi_pod})
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            existing = json.load(open(args.json))
+        json.dump(existing + rows, open(args.json, "w"), indent=1)
+    ok_rows = [r for r in rows if "compute_s" in r]
+    if ok_rows:
+        print()
+        print(rl.format_table(ok_rows))
+    failed = [r for r in rows if r.get("failed")]
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

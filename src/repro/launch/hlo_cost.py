@@ -1,0 +1,429 @@
+"""Trip-count-aware static cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned program (scan-over-layers, microbatch accumulation, recurrent
+seq scans) is under-reported by its trip count. This walker parses the
+post-optimization HLO, multiplies loop bodies by their
+``known_trip_count`` (emitted by XLA for lax.scan loops), recurses into
+fusions/calls, and produces:
+
+  * flops          — 2·M·N·K for dots, |out| for elementwise/reductions
+  * bytes          — HBM traffic model: operand+output bytes at fusion /
+                     top-level op boundaries (reads inside a fusion stay
+                     in registers/VMEM, which is the point of fusion)
+  * collective_bytes / counts per op kind, with trip multipliers, and a
+    ``dcn_bytes`` split for replica groups that span more than one pod
+    (detected from the group-size annotation vs. pod size).
+
+Everything is per-partition (the SPMD module is the per-device program),
+matching the roofline formulas in repro.launch.roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+_SHAPE_ATOM = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+ELEMENTWISE_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "reshape", "domain", "opt-barrier", "get-dimension-size",
+}
+
+
+def shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_ATOM.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operand list + attributes (rest of line)
+
+    def operand_names(self) -> list[str]:
+        # operands are before the first "), " attr boundary; just scan the
+        # call-paren region
+        depth = 0
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return _OPERAND_NAME.findall(self.rest[:end])
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        m = _COMP_HDR.match(s.strip()) if s.strip().endswith("{") else None
+        if m and ("->" in s):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_LINE.match(s)
+        if om:
+            op = Op(om.group(1), om.group(2), om.group(3), om.group(4))
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.shape
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    dcn_bytes: float = 0.0
+    warnings: list = field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.dcn_bytes += mult * other.dcn_bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + mult * v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + mult * v
+        self.warnings.extend(other.warnings)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str, pod_chips: int | None = None,
+                 dcn_group_sizes: frozenset | None = None):
+        """``dcn_group_sizes``: replica-group sizes that must cross pods
+        (on the (pod=2,data=16,model=16) mesh: axis subsets containing
+        'pod' give sizes {2, 32, 512}); in-pod groups (16, 256) don't.
+        Falls back to 'larger than a pod' when not provided."""
+        self.comps = parse_module(text)
+        self.pod_chips = pod_chips
+        self.dcn_group_sizes = dcn_group_sizes
+        self._memo: dict[tuple[str, bool], Cost] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                if m:
+                    entry = m.group(1)
+                break
+        # fall back: computation named like main
+        self.entry = entry or next(
+            (n for n in self.comps if n.startswith("main")), None)
+        if self.entry is None and self.comps:
+            self.entry = next(iter(self.comps))
+
+    # -------------------------------------------------------------- flops
+    def _dot_flops(self, op: Op, comp: Computation) -> float:
+        _, out_elems = shape_elems_bytes(op.shape)[0], None
+        out_elems = shape_elems_bytes(op.shape)[0]
+        m = _CONTRACT_RE.search(op.rest)
+        contract = 1
+        names = op.operand_names()
+        if m and names:
+            lhs_shape = comp.shapes.get(names[0], "")
+            atoms = _SHAPE_ATOM.findall(lhs_shape)
+            if atoms:
+                dims = [int(d) for d in atoms[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def _operand_bytes(self, op: Op, comp: Computation) -> float:
+        total = 0
+        for n in op.operand_names():
+            sh = comp.shapes.get(n)
+            if sh:
+                total += shape_elems_bytes(sh)[1]
+        return float(total)
+
+    def _fusion_io_bytes(self, op: Op, comp: Computation,
+                         inner_name: str | None, out_bytes: int) -> float:
+        """HBM traffic of a fusion's operands, modelling XLA aliasing:
+
+        * a fusion whose root is a dynamic-update-slice writing into an
+          operand of the SAME shape is an in-place scan-stacking write —
+          only the updated slice moves, not the whole (S, …) buffer;
+        * a fusion that dynamic-slices/gathers a big operand down to a
+          much smaller output only reads the slice.
+        Without this, scan forward/backward stacking is charged the full
+        buffer per step — a ~S× overcount (observed 343 GB→8 GB case).
+        """
+        inner = self.comps.get(inner_name) if inner_name else None
+        dus_update_bytes = None
+        has_big_slice_read = False
+        if inner is not None:
+            for iop in inner.ops:
+                if iop.opcode == "dynamic-update-slice":
+                    names = iop.operand_names()
+                    if len(names) >= 2:
+                        upd = inner.shapes.get(names[1])
+                        if upd:
+                            b = shape_elems_bytes(upd)[1]
+                            dus_update_bytes = (dus_update_bytes or 0) + b
+                elif iop.opcode in ("dynamic-slice", "gather"):
+                    has_big_slice_read = True
+                elif iop.opcode == "pad":
+                    # pad-to-buffer stacking (CPU lowering of scan
+                    # stacking; DUS on TPU): treat like an in-place write
+                    names = iop.operand_names()
+                    if names:
+                        src = inner.shapes.get(names[0])
+                        if src:
+                            b = shape_elems_bytes(src)[1]
+                            ob = shape_elems_bytes(iop.shape)[1]
+                            if ob > 8 * max(b, 1):
+                                dus_update_bytes = (dus_update_bytes or 0) + b
+
+        total = 0.0
+        for n in op.operand_names():
+            sh = comp.shapes.get(n)
+            if not sh:
+                continue
+            b = shape_elems_bytes(sh)[1]
+            if dus_update_bytes is not None and b == out_bytes and b > 0:
+                # aliased in-place buffer: charge the slice write (R+W)
+                total += 2.0 * dus_update_bytes
+            elif has_big_slice_read and b > 8 * max(out_bytes, 1):
+                total += float(out_bytes)     # slice read, not full buffer
+            else:
+                total += b
+        return total
+
+    # ------------------------------------------------------------- bodies
+    def comp_cost(self, name: str, fused: bool = False) -> Cost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        c = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            c.warnings.append(f"missing computation {name}")
+            self._memo[key] = c
+            return c
+        for op in comp.ops:
+            c.add(self.op_cost(op, comp, fused=fused))
+        self._memo[key] = c
+        return c
+
+    def op_cost(self, op: Op, comp: Computation, fused: bool = False) -> Cost:
+        c = Cost()
+        code = op.opcode
+        out_elems, out_bytes = shape_elems_bytes(op.shape)
+
+        if code in ELEMENTWISE_FREE:
+            return c
+
+        if code == "while":
+            body = _BODY_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            trips_m = _TRIP_RE.search(op.rest)
+            trips = int(trips_m.group(1)) if trips_m else 1
+            if not trips_m:
+                c.warnings.append(f"while {op.name}: no known_trip_count")
+            if body:
+                c.add(self.comp_cost(body.group(1)), mult=trips)
+            if cond:
+                c.add(self.comp_cost(cond.group(1)), mult=trips)
+            return c
+
+        if code == "conditional":
+            bm = _BRANCHES_RE.search(op.rest)
+            if bm:
+                branches = _OPERAND_NAME.findall(bm.group(1))
+                if branches:  # assume worst-case branch
+                    costs = [self.comp_cost(b) for b in branches]
+                    c.add(max(costs, key=lambda x: x.flops))
+            return c
+
+        if code == "fusion":
+            cm = _CALLS_RE.search(op.rest)
+            inner_name = cm.group(1) if cm else None
+            if inner_name:
+                inner = self.comp_cost(inner_name, fused=True)
+                c.add(inner)  # flops (+ any collectives inside)
+            if not fused:
+                c.bytes += out_bytes + self._fusion_io_bytes(
+                    op, comp, inner_name, out_bytes)
+            return c
+
+        if code in ("call", "async-start", "async-done"):
+            cm = _CALLS_RE.search(op.rest)
+            if cm:
+                c.add(self.comp_cost(cm.group(1), fused=fused))
+            return c
+
+        base = code.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            if code.endswith("-done"):
+                return c
+            moved = max(out_bytes, int(self._operand_bytes(op, comp)))
+            c.coll_bytes[base] = c.coll_bytes.get(base, 0.0) + moved
+            c.coll_counts[base] = c.coll_counts.get(base, 0.0) + 1
+            g = _GROUPS_RE.search(op.rest)
+            if g:
+                group_size = int(g.group(2))
+                if self.dcn_group_sizes is not None:
+                    if group_size in self.dcn_group_sizes:
+                        c.dcn_bytes += moved
+                elif self.pod_chips and group_size > self.pod_chips:
+                    c.dcn_bytes += moved
+            if not fused:
+                c.bytes += out_bytes + self._operand_bytes(op, comp)
+            return c
+
+        if code == "dot":
+            c.flops += self._dot_flops(op, comp)
+            if not fused:
+                c.bytes += out_bytes + self._operand_bytes(op, comp)
+            return c
+
+        if code == "convolution":
+            # depthwise/small convs only in this codebase; approximate
+            c.flops += 2.0 * out_elems * 8
+            if not fused:
+                c.bytes += out_bytes + self._operand_bytes(op, comp)
+            return c
+
+        if code == "dynamic-update-slice":
+            if not fused:
+                names = op.operand_names()
+                upd = comp.shapes.get(names[1]) if len(names) > 1 else None
+                ub = shape_elems_bytes(upd)[1] if upd else out_bytes
+                c.bytes += 2.0 * ub          # in-place: slice R+W only
+            return c
+
+        if code in ("dynamic-slice", "slice", "gather"):
+            if not fused:
+                c.bytes += 2.0 * out_bytes   # read the slice, write it
+            return c
+
+        if code in ("copy", "copy-start", "copy-done", "concatenate", "pad",
+                    "scatter", "transpose", "reverse",
+                    "broadcast", "select-and-scatter", "sort", "custom-call"):
+            if not fused:
+                c.bytes += out_bytes + self._operand_bytes(op, comp)
+            if code == "scatter":
+                c.flops += out_elems
+            return c
+
+        # elementwise / reduce / rng / compare / etc.
+        c.flops += float(out_elems)
+        if code == "reduce":
+            c.flops += self._operand_bytes(op, comp) / 4.0  # ≈ input elems
+        if not fused:
+            c.bytes += out_bytes + self._operand_bytes(op, comp)
+        return c
+
+    # --------------------------------------------------------------- main
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str, pod_chips: int | None = None,
+                dcn_group_sizes: frozenset | None = None) -> Cost:
+    return HloCostModel(text, pod_chips=pod_chips,
+                        dcn_group_sizes=dcn_group_sizes).total()
+
+
+def top_collectives(text: str, n: int = 12) -> list[tuple[float, float, str, str]]:
+    """(bytes·trips, count·trips, opcode, jax op_name) — attribution of
+    collective traffic to source ops, trip-count aware."""
+    m = HloCostModel(text)
+    acc: dict[tuple[str, str], list[float]] = {}
+    opname_re = re.compile(r'op_name="([^"]+)"')
+
+    def walk(comp_name, mult):
+        comp = m.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                b = _BODY_RE.search(op.rest)
+                tr = _TRIP_RE.search(op.rest)
+                trips = int(tr.group(1)) if tr else 1
+                if b:
+                    walk(b.group(1), mult * trips)
+            elif op.opcode in ("fusion", "call"):
+                c = _CALLS_RE.search(op.rest)
+                if c:
+                    walk(c.group(1), mult)
+            else:
+                base = op.opcode.replace("-start", "")
+                if base in COLLECTIVE_OPS and not op.opcode.endswith("-done"):
+                    nm = opname_re.search(op.rest)
+                    key = (base, nm.group(1)[:100] if nm else "?")
+                    b = shape_elems_bytes(op.shape)[1]
+                    acc.setdefault(key, [0.0, 0.0])
+                    acc[key][0] += mult * b
+                    acc[key][1] += mult
+
+    walk(m.entry, 1.0)
+    rows = [(v[0], v[1], k[0], k[1]) for k, v in acc.items()]
+    rows.sort(reverse=True)
+    return rows[:n]

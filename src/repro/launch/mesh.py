@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init,
+smoke tests keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e pod mesh: 16×16 = 256 chips per pod; 2 pods multi-pod.
+
+    Axes: ``data`` (FSDP/batch), ``model`` (tensor/expert parallel),
+    plus ``pod`` (pure DP over DCN) when multi_pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_worker_mesh(num_workers: int) -> Mesh:
+    """Mesh for the paper's async SGNS training: one axis, one worker per
+    slice, zero collectives inside the step."""
+    return jax.make_mesh((num_workers,), ("worker",))
+
+
+def make_smoke_mesh() -> Mesh:
+    """1-device mesh with production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

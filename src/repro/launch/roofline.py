@@ -1,0 +1,236 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs / (chips × 197 TF/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` reports the *per-partition* (SPMD) module;
+we scale by chip count to get global HLO_FLOPs/bytes, so the formulas
+above reduce to per-chip seconds. collective_bytes is not in
+cost_analysis — we parse the compiled HLO and sum output-shape bytes of
+every collective op (per-partition, i.e. bytes moved per chip), counting
+DCN-crossing collectives (replica-group spans > one pod) separately.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link used)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one tensor shape like  bf16[16,4096,1024]{2,1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        st.bytes_by_op[op] = st.bytes_by_op.get(op, 0) + b
+        st.count_by_op[op] = st.count_by_op.get(op, 0) + 1
+    return st
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: CollectiveStats
+    peak_memory_per_chip: float = 0.0
+    model_flops: float = 0.0           # 6·N_active·D global
+    dcn_bytes_per_chip: float = 0.0    # collectives whose group spans pods
+    xla_flops_per_chip: float = 0.0    # raw cost_analysis (loop bodies ×1)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def flops_utilization(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — how much compiled compute is
+        'useful'; catches remat/redundancy waste."""
+        hlo_global = self.flops_per_chip * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "flops_util": self.flops_utilization,
+            "hbm_gb_per_chip": self.peak_memory_per_chip / 2**30,
+            "collective_ops": dict(self.collectives.count_by_op),
+            "collective_bytes_by_op": dict(self.collectives.bytes_by_op),
+            "dcn_bytes_per_chip": self.dcn_bytes_per_chip,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "xla_flops_per_chip": self.xla_flops_per_chip,
+        }
+
+
+def analyze(arch: str, shape: str, compiled, chips: int,
+            model_flops: float = 0.0, pod_chips: int = 256,
+            dcn_group_sizes: frozenset | None = None) -> Roofline:
+    """Roofline terms from the compiled module.
+
+    Primary source is the trip-count-aware static model over the HLO
+    (repro.launch.hlo_cost) — ``compiled.cost_analysis()`` counts while
+    bodies once, so scanned programs (layers/microbatches/recurrences)
+    would be under-reported by their trip counts. cost_analysis is kept
+    as a cross-check lower bound.
+    """
+    from repro.launch import hlo_cost
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze_hlo(hlo, pod_chips=pod_chips,
+                                dcn_group_sizes=dcn_group_sizes)
+    flops = max(cost.flops, float(ca.get("flops", 0.0)))
+    byts = max(cost.bytes, 0.0)
+    coll = CollectiveStats(
+        bytes_by_op=dict(cost.coll_bytes),
+        count_by_op={k: int(v) for k, v in cost.coll_counts.items()})
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    return Roofline(
+        arch=arch, shape=shape, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        collective_bytes_per_chip=float(coll.total_bytes),
+        collectives=coll, peak_memory_per_chip=peak,
+        model_flops=model_flops, dcn_bytes_per_chip=cost.dcn_bytes,
+        xla_flops_per_chip=float(ca.get("flops", 0.0)))
+
+
+# ---------------------------------------------------------------------------
+def count_params(tree) -> int:
+    import jax
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg, params_tree) -> float:
+    """Active parameter count (MoE: only top_k of num_experts count)."""
+    import jax
+    total = 0.0
+    def add(path, leaf):
+        nonlocal total
+        n = math.prod(leaf.shape)
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if cfg.moe is not None and len(leaf.shape) >= 3 and any(
+                str(x) in ("gate", "up", "down") for x in names) and (
+                leaf.shape[-3] == cfg.moe.num_experts or
+                (len(leaf.shape) >= 4 and leaf.shape[-3] == cfg.moe.num_experts)):
+            n = n * cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    jax.tree_util.tree_map_with_path(add, params_tree)
+    return total
+
+
+def model_flops_for(cfg, params_tree, shape) -> float:
+    """6·N_active·D (training) or 2·N_active·D (inference fwd only)."""
+    n_active = active_params(cfg, params_tree)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'chips':>5s} {'compute_s':>11s} "
+           f"{'memory_s':>11s} {'collect_s':>11s} {'dominant':>10s} "
+           f"{'MF/HLO':>7s} {'HBM GB':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['chips']:5d} "
+            f"{r['compute_s']:11.3e} {r['memory_s']:11.3e} "
+            f"{r['collective_s']:11.3e} {r['dominant']:>10s} "
+            f"{r['flops_util']:7.3f} {r['hbm_gb_per_chip']:7.2f}")
+    return "\n".join(lines)

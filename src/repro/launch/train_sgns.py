@@ -1,0 +1,96 @@
+"""The paper's training driver: divide → async train → merge → evaluate.
+
+  PYTHONPATH=src python -m repro.launch.train_sgns \
+      --strategy shuffle --workers 10 --epochs 6 --dim 64 \
+      --sentences 30000 --merge alir_pca concat pca
+
+Runs the full pipeline on the synthetic corpus (see DESIGN.md §4) and
+prints paper-style scores + timings. ``--use-kernel`` routes the row
+gradients through the Pallas kernel (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.driver import run_pipeline, train_sync_baseline
+from repro.core.sgns import SGNSConfig
+from repro.data.corpus import SemanticCorpusModel
+from repro.eval.benchmarks import BenchmarkSuite, evaluate_all
+from repro.checkpoint import save_checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="shuffle",
+                    choices=("equal", "random", "shuffle"))
+    ap.add_argument("--workers", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--window", type=int, default=5)
+    ap.add_argument("--negatives", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=2000)
+    ap.add_argument("--sentences", type=int, default=30000)
+    ap.add_argument("--merge", nargs="+",
+                    default=("concat", "pca", "alir_pca"))
+    ap.add_argument("--baseline", action="store_true",
+                    help="also train the synchronized baseline")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    args = ap.parse_args(argv)
+
+    gen = SemanticCorpusModel.create(vocab_size=args.vocab, seed=0)
+    corpus = gen.generate(num_sentences=args.sentences, seed=1)
+    suite = BenchmarkSuite.from_model(gen, top_words=int(args.vocab * 0.6))
+    cfg = SGNSConfig(vocab_size=0, dim=args.dim, window=args.window,
+                     negatives=args.negatives)
+
+    row_grad_fn = None
+    if args.use_kernel:
+        from repro.kernels import make_row_grad_fn
+        row_grad_fn = make_row_grad_fn(interpret=True)
+
+    res = run_pipeline(
+        corpus, args.vocab, strategy=args.strategy, num_workers=args.workers,
+        cfg=cfg, epochs=args.epochs, batch_size=args.batch, rate=args.rate,
+        window=args.window, max_vocab=None, base_min_count=20,
+        merge_methods=tuple(args.merge), row_grad_fn=row_grad_fn)
+    print(f"strategy={args.strategy} workers={args.workers} "
+          f"train={res.timings['train_s']:.1f}s "
+          f"steps/epoch={res.timings['steps_per_epoch']} "
+          f"losses={['%.3f' % l for l in res.losses]}")
+    for m, (emb, valid) in res.merged.items():
+        scores = evaluate_all(emb, valid, res.union_vocab, suite)
+        print(f"  {m:10s} sim={scores['similarity']:.3f}"
+              f"({scores['similarity_oov']}) "
+              f"ana={scores['analogy']:.3f}({scores['analogy_oov']}) "
+              f"cat={scores['categorization']:.3f}"
+              f"({scores['categorization_oov']}) "
+              f"merge={res.timings.get('merge_%s_s' % m, 0):.2f}s")
+
+    if args.baseline:
+        params, vocab, info = train_sync_baseline(
+            corpus, args.vocab, cfg, epochs=args.epochs,
+            batch_size=args.batch, window=args.window, max_vocab=None)
+        emb = np.asarray(params["W"])
+        scores = evaluate_all(emb, np.ones(vocab.size, bool), vocab, suite)
+        print(f"  sync-base  sim={scores['similarity']:.3f} "
+              f"ana={scores['analogy']:.3f} "
+              f"cat={scores['categorization']:.3f} "
+              f"train={info['train_s']:.1f}s")
+
+    if args.save:
+        best = args.merge[-1]
+        emb, valid = res.merged[best]
+        save_checkpoint(args.save, {"embedding": emb, "valid": valid,
+                                    "word_ids": res.union_vocab.word_ids},
+                        extra={"method": best, "strategy": args.strategy})
+        print(f"saved merged embedding → {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Attention mixers: GQA (optionally sliding-window), MLA, cross-attention.
+
+All functions are pure: ``init_*`` builds the param pytree, ``*_forward``
+does full-sequence (train/prefill) attention, ``*_decode`` does one-token
+decode against a cache. Caches:
+
+* GQA full attention — k/v ``(B, S_max, Hkv, hd)`` + scalar length;
+* GQA sliding window — ring buffer ``(B, W, Hkv, hd)`` (cache never
+  exceeds the window: this is what makes dense archs eligible for the
+  ``long_500k`` shape);
+* MLA (DeepSeek-V2) — the *compressed* cache: ``c_kv (B, S, r_kv)`` +
+  decoupled rope key ``k_rope (B, S, hd_rope)`` — the paper-faithful
+  memory saving (arXiv:2405.04434).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype, qkv_bias: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, S, n_kv, head_dim),
+            v.reshape(B, S, n_kv, head_dim))
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D), GQA by head repetition. mask (Sq,Sk)
+    or (B,1,Sq,Sk) additive."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qf = q.reshape(B, Sq, Hkv, rep, D).astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        else:  # (B,1,Sq,Sk) → (B,1,1,Sq,Sk)
+            mask = mask[:, :, None]
+        s = s + mask
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, window: int | None = None,
+                offset: int = 0) -> jax.Array:
+    """Additive (Sq, Sk) mask; query i attends keys j with
+    j <= i+offset and (window is None or j > i+offset-window)."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Sk)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_forward(params, x, positions, *, n_heads, n_kv, head_dim,
+                rope_theta=1e4, window=None, causal=True,
+                rope_cos_sin=None) -> jax.Array:
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    if rope_cos_sin is None:
+        cos, sin = rope_angles(positions, head_dim, rope_theta)
+    else:
+        cos, sin = rope_cos_sin
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    S = x.shape[1]
+    mask = causal_mask(S, S, window) if causal else None
+    o = _sdpa(q, k, v, mask)
+    return o.reshape(x.shape[0], S, n_heads * head_dim) @ params["wo"]
+
+
+def init_gqa_cache(batch, cache_len, n_kv, head_dim, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+    }
+
+
+def gqa_decode(params, cache, x, pos, *, n_heads, n_kv, head_dim,
+               rope_theta=1e4, window=None, rope_cos_sin=None):
+    """One-token decode. x (B,1,d); pos scalar int32 (tokens so far).
+
+    Full attention: cache_len == S_max, slot = pos.
+    Sliding window:  cache_len == window, slot = pos % window (ring).
+    """
+    B = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    if rope_cos_sin is None:
+        p1 = jnp.full((B, 1), pos, dtype=jnp.int32)
+        cos, sin = rope_angles(p1, head_dim, rope_theta)
+    else:
+        cos, sin = rope_cos_sin
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = pos % cache_len if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(cache_len)
+    if window is not None:
+        valid = (idx <= slot) | (pos >= cache_len)  # ring: all valid once full
+    else:
+        valid = idx <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]  # (1,Sk)
+    o = _sdpa(q, ck, cv, mask)
+    out = o.reshape(B, 1, n_heads * head_dim) @ params["wo"]
+    return {"k": ck, "v": cv}, out
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+def cross_forward(params, x, enc_kv, *, n_heads, n_kv, head_dim):
+    """x (B,Sq,d) attends precomputed encoder k/v (B,Se,Hkv,hd)."""
+    B, Sq, _ = x.shape
+    q = (x @ params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, Sq, n_heads, head_dim)
+    o = _sdpa(q, enc_kv["k"], enc_kv["v"], None)
+    return o.reshape(B, Sq, n_heads * head_dim) @ params["wo"]
+
+
+def encode_kv(params, enc_out, *, n_kv, head_dim):
+    B, Se, _ = enc_out.shape
+    k = enc_out @ params["wk"]
+    v = enc_out @ params["wv"]
+    if "bk" in params:
+        k, v = k + params["bk"], v + params["bv"]
+    return {"k": k.reshape(B, Se, n_kv, head_dim),
+            "v": v.reshape(B, Se, n_kv, head_dim)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+def init_mla(key, d_model: int, n_heads: int, *, kv_lora_rank: int,
+             head_dim: int, rope_head_dim: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        # queries (V2-Lite: no q compression)
+        "wq_nope": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wq_rope": dense_init(ks[1], d_model, n_heads * rope_head_dim, dtype),
+        # compressed KV path
+        "w_dkv": dense_init(ks[2], d_model, kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[3], kv_lora_rank, n_heads * head_dim, dtype),
+        "w_uv": dense_init(ks[4], kv_lora_rank, n_heads * head_dim, dtype),
+        # decoupled shared rope key
+        "w_krope": dense_init(ks[5], d_model, rope_head_dim, dtype),
+        "wo": dense_init(ks[6], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _mla_qk(params, x, positions, n_heads, head_dim, rope_head_dim, rope_theta):
+    B, S, _ = x.shape
+    q_nope = (x @ params["wq_nope"]).reshape(B, S, n_heads, head_dim)
+    q_rope = (x @ params["wq_rope"]).reshape(B, S, n_heads, rope_head_dim)
+    cos, sin = rope_angles(positions, rope_head_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_kv = x @ params["w_dkv"]                                   # (B,S,r)
+    k_rope = (x @ params["w_krope"]).reshape(B, S, 1, rope_head_dim)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]               # (B,S,hr)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attend(q_nope, q_rope, c_kv, k_rope, params, n_heads, head_dim,
+               mask, absorb: bool):
+    """Score/combine either by expanding K/V (naive) or by absorbing
+    W_UK/W_UV into the query/output path (decode-efficient variant —
+    attends directly over the compressed cache)."""
+    B, Sq = q_nope.shape[:2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim + q_rope.shape[-1]))
+    if absorb:
+        w_uk = params["w_uk"].reshape(-1, n_heads, head_dim)     # (r,H,hd)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))             # (B,Sq,H,r)
+        s = jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv.astype(jnp.float32))
+    else:
+        k_nope = jnp.einsum(
+            "bkr,rhd->bkhd", c_kv.astype(jnp.float32),
+            params["w_uk"].reshape(-1, n_heads, head_dim).astype(jnp.float32))
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope)
+    s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))
+    s = s * scale
+    if mask is not None:
+        s = s + (mask[None, None] if mask.ndim == 2 else mask)
+    p = jax.nn.softmax(s, axis=-1)
+    if absorb:
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", p, c_kv.astype(jnp.float32))
+        o = jnp.einsum(
+            "bqhr,rhd->bqhd", o_lat,
+            params["w_uv"].reshape(-1, n_heads, head_dim).astype(jnp.float32))
+    else:
+        v = jnp.einsum(
+            "bkr,rhd->bkhd", c_kv.astype(jnp.float32),
+            params["w_uv"].reshape(-1, n_heads, head_dim).astype(jnp.float32))
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    o = o.reshape(B, Sq, n_heads * head_dim).astype(q_nope.dtype)
+    return o @ params["wo"]
+
+
+def mla_forward(params, x, positions, *, n_heads, head_dim, rope_head_dim,
+                rope_theta=1e4, window=None, absorb=False):
+    q_nope, q_rope, c_kv, k_rope = _mla_qk(
+        params, x, positions, n_heads, head_dim, rope_head_dim, rope_theta)
+    S = x.shape[1]
+    mask = causal_mask(S, S, window)
+    return mla_attend(q_nope, q_rope, c_kv, k_rope, params, n_heads, head_dim,
+                      mask, absorb)
+
+
+def init_mla_cache(batch, cache_len, kv_lora_rank, rope_head_dim, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, cache, x, pos, *, n_heads, head_dim, rope_head_dim,
+               rope_theta=1e4, window=None, absorb=True):
+    B = x.shape[0]
+    cache_len = cache["c_kv"].shape[1]
+    p1 = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qk(
+        params, x, p1, n_heads, head_dim, rope_head_dim, rope_theta)
+    slot = pos % cache_len if window is not None else pos
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    idx = jnp.arange(cache_len)
+    valid = ((idx <= slot) | (pos >= cache_len)) if window is not None else (idx <= pos)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]
+    out = mla_attend(q_nope, q_rope, c_kv, k_rope, params, n_heads, head_dim,
+                     mask, absorb)
+    return {"c_kv": c_kv, "k_rope": k_rope}, out

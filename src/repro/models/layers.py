@@ -1,0 +1,128 @@
+"""Shared building blocks: norms, MLPs, RoPE / M-RoPE, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, fan_in: int, fan_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return (scale * jax.random.normal(key, (fan_in, fan_out))).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (0.02 * jax.random.normal(key, (vocab, dim))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def init_rms(dim: int, dtype) -> jax.Array:
+    return jnp.ones((dim,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (llama-family FFN)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions (..., S) → cos/sin (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_angles(positions_3d: jax.Array, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> tuple:
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    ``positions_3d`` (3, B, S): temporal/height/width position ids.
+    ``sections`` split the head_dim/2 frequency bands among (t, h, w);
+    must sum to head_dim // 2.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_per_axis = positions_3d.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    # choose which axis drives each band
+    band = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_per_axis, 0, -1),        # (B,S,half,3)
+        band[None, None, :, None], axis=-1)[..., 0]  # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def text_mrope_positions(batch: int, seq: int, start: jax.Array | int = 0) -> jax.Array:
+    """For pure-text spans all three M-RoPE axes share the position id."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None] + jnp.asarray(start, jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    return jnp.broadcast_to(pos[None], (3, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy LM loss
+# ---------------------------------------------------------------------------
+def lm_loss(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None
+            ) -> jax.Array:
+    """Mean next-token cross-entropy. logits (B,S,V) already aligned with
+    labels (B,S) (caller shifts).
+
+    Uses the one-hot/where formulation instead of take_along_axis: a
+    gather along a vocab-sharded axis would force GSPMD to all-gather the
+    full (B,S,V) fp32 logits; the elementwise select keeps the vocab dim
+    sharded and reduces locally (one tiny all-reduce of (B,S))."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, len(lg.shape) - 1)
+    picked = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None].astype(jnp.int32), lg, 0.0),
+        axis=-1)
+    ll = picked - lse
+    if mask is None:
+        return -jnp.mean(ll)
+    m = mask.astype(jnp.float32)
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,146 @@
+"""Model facade: train/serve step builders + input specs per shape.
+
+One class ties a ModelConfig to:
+  * ``init(key)``                      — parameter pytree;
+  * ``make_train_step(optimizer, microbatches)``
+                                       — jit-able (state, batch, step) step
+                                         with gradient accumulation;
+  * ``make_prefill`` / ``make_decode_step``
+                                       — serving entry points;
+  * ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for
+                                         every input (the dry-run path).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as tf
+from repro.models.layers import lm_loss
+from repro.optim import Optimizer
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ----------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        return tf.init_model(key, self.cfg)
+
+    # ----------------------------------------------------------------- loss
+    def loss_fn(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        logits, aux, mask = tf.forward_logits(params, cfg, batch)
+        labels = batch["labels"]
+        S_lab = labels.shape[1]
+        # Logits cover the full (possibly frontend-extended) sequence;
+        # labels cover the text/decoder positions — take the tail.
+        logits = logits[:, -S_lab:]
+        mask = mask[:, -S_lab:]
+        # next-token shift
+        loss = lm_loss(logits[:, :-1], labels[:, 1:], mask[:, 1:])
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_weight * aux
+        return loss
+
+    # ----------------------------------------------------------- train step
+    def make_train_step(self, optimizer: Optimizer, microbatches: int = 1):
+        cfg = self.cfg
+
+        def split_mb(x):
+            B = x.shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+
+        def train_step(params, opt_state, batch, step):
+            if microbatches == 1:
+                loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+            else:
+                mb = jax.tree.map(split_mb, batch)
+
+                def body(acc, mb_i):
+                    l, g = jax.value_and_grad(self.loss_fn)(params, mb_i)
+                    return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+                zero = (jnp.float32(0.0),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params))
+                (loss, grads), _ = jax.lax.scan(body, zero, mb)
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+            new_params, new_state = optimizer.update(grads, opt_state, params,
+                                                     step)
+            return new_params, new_state, loss
+
+        return train_step
+
+    # ------------------------------------------------------------- serving
+    def make_decode_step(self):
+        cfg = self.cfg
+
+        def decode_step(params, cache, token, pos):
+            return tf.decode_step(params, cfg, cache, token, pos)
+
+        return decode_step
+
+    def init_cache(self, batch: int, cache_len: int, enc_len: int | None = None):
+        return tf.init_cache(self.cfg, batch, cache_len, enc_len)
+
+    # ---------------------------------------------------------- input specs
+    def example_batch(self, shape: InputShape, key=None, concrete: bool = True):
+        """Concrete arrays (smoke tests) or ShapeDtypeStructs (dry-run)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        def toks(shape_, hi):
+            if concrete:
+                return jax.random.randint(key, shape_, 0, hi, dtype=jnp.int32)
+            return jax.ShapeDtypeStruct(shape_, jnp.int32)
+
+        def dense(shape_):
+            if concrete:
+                return jnp.zeros(shape_, dt)
+            return jax.ShapeDtypeStruct(shape_, dt)
+
+        V = cfg.vocab_size
+        if shape.kind == "train":
+            if cfg.encoder_layers:
+                S_dec = max(S // 4, 8)
+                return {"frames": dense((B, S, cfg.d_model)),
+                        "tokens": toks((B, S_dec), V),
+                        "labels": toks((B, S_dec), V)}
+            if cfg.frontend == "vision":
+                P = cfg.frontend_tokens
+                S_text = S - P
+                return {"tokens": toks((B, S_text), V),
+                        "patch_embeds": dense((B, P, cfg.d_model)),
+                        "labels": toks((B, S_text), V)}
+            return {"tokens": toks((B, S), V), "labels": toks((B, S), V)}
+        if shape.kind == "prefill":
+            if cfg.encoder_layers:
+                S_dec = max(S // 4, 8)
+                return {"frames": dense((B, S, cfg.d_model)),
+                        "tokens": toks((B, S_dec), V)}
+            if cfg.frontend == "vision":
+                P = cfg.frontend_tokens
+                return {"tokens": toks((B, S - P), V),
+                        "patch_embeds": dense((B, P, cfg.d_model))}
+            return {"tokens": toks((B, S), V)}
+        # decode kinds
+        return {"token": toks((B, 1), V),
+                "pos": (jnp.int32(S - 1) if concrete
+                        else jax.ShapeDtypeStruct((), jnp.int32))}
+
+    def decode_cache_len(self, shape: InputShape) -> int:
+        cfg = self.cfg
+        if cfg.attention_window is not None:
+            return min(shape.seq_len, cfg.attention_window)
+        return shape.seq_len

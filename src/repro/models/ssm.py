@@ -1,0 +1,398 @@
+"""State-space / recurrent mixers: Mamba (Jamba), sLSTM and mLSTM (xLSTM).
+
+All three carry O(1)-per-token state, which is what makes the hybrid/SSM
+architectures eligible for the ``long_500k`` decode shape: the "cache" is
+a fixed-size recurrent state, independent of context length.
+
+* Mamba — selective SSM (arXiv:2312.00752, as used in Jamba
+  arXiv:2403.19887): depthwise causal conv + input-dependent (Δ, B, C),
+  first-order diagonal recurrence evaluated with an associative scan
+  (log-depth on TPU) for train/prefill and a single-step update for decode.
+* sLSTM — scalar-memory LSTM with exponential gating and a normalizer/
+  stabilizer state, block-diagonal per-head recurrence (arXiv:2405.04517).
+  Strictly sequential (real recurrence) → ``lax.scan``.
+* mLSTM — matrix-memory LSTM: C_t = f C_{t-1} + i v kᵀ, read h = C q.
+  Implemented as a scan; per-step cost is O(H·dh²) — the TPU-friendly
+  systolic formulation of the paper's "fully parallelizable" claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+def init_mamba(key, d_model: int, *, d_inner: int, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int | None = None, dtype) -> dict:
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (d_conv, d_inner))).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.0, dtype),   # softplus ≈ 0.018
+        "A_log": jnp.log(A),                             # f32
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def _mamba_conv_full(xs: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over S. xs (B,S,di), w (d_conv, di)."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xs.shape[1]] * w[i] for i in range(d_conv))
+    return out + b
+
+
+def _mamba_dbc(params, xs, dt_rank, d_state):
+    proj = xs @ params["x_proj"]
+    dt_in, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"])
+    return dt.astype(jnp.float32), B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def _selective_scan_combine(a, b):
+    (a1, b1), (a2, b2) = a, b
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba_forward(params: dict, x: jax.Array, *, d_inner: int,
+                  d_state: int = 16, dt_rank: int | None = None,
+                  chunk: int = 512) -> jax.Array:
+    """Selective SSM with a CHUNKED parallel scan: associative scan
+    (log-depth, MXU/VPU-parallel) *within* chunks of length ``chunk``,
+    first-order carry *across* chunks (lax.scan + remat). The monolithic
+    associative scan materializes (B,S,d_inner,d_state) fp32 buffers at
+    every level — for jamba train_4k that alone blows HBM (EXPERIMENTS
+    §Perf jamba note); chunking caps the live set at
+    (B,chunk,d_inner,d_state) while keeping the parallel math."""
+    dt_rank = dt_rank or max(1, x.shape[-1] // 16)
+    B, S, d = x.shape
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_mamba_conv_full(xs, params["conv_w"], params["conv_b"]))
+    dt, B_, C_ = _mamba_dbc(params, xs, dt_rank, d_state)
+    A = -jnp.exp(params["A_log"])                                   # (di, ds)
+
+    def seg(xs_c, dt_c, B_c, C_c, h0):
+        dA = jnp.exp(dt_c[..., None] * A)                           # (B,c,di,ds)
+        dBx = (dt_c * xs_c.astype(jnp.float32))[..., None] * B_c[:, :, None, :]
+        # fold the incoming state into the first element
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+        dAc, h = jax.lax.associative_scan(
+            _selective_scan_combine, (dA, dBx), axis=1)
+        y = jnp.sum(h * C_c[:, :, None, :], axis=-1)                # (B,c,di)
+        return y, h[:, -1]
+
+    if chunk and S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        as_chunks = lambda a: jnp.moveaxis(
+            a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+
+        def body(h0, xs_i):
+            y, h1 = seg(*xs_i, h0)
+            return h1, y
+
+        h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+        _, ys = jax.lax.scan(jax.checkpoint(body), h0,
+                             (as_chunks(xs), as_chunks(dt),
+                              as_chunks(B_), as_chunks(C_)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_inner)
+    else:
+        y, _ = seg(xs, dt, B_, C_,
+                   jnp.zeros((B, d_inner, d_state), jnp.float32))
+    y = y + params["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(batch, d_inner, d_state, d_conv, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, cache: dict, x: jax.Array, *, d_inner: int,
+                 d_state: int = 16, dt_rank: int | None = None):
+    """x (B,1,d) → (cache', y (B,1,d))."""
+    dt_rank = dt_rank or max(1, x.shape[-1] // 16)
+    xz = x[:, 0] @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                               # (B,di)
+    hist = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)    # (B,dc,di)
+    conv = jnp.sum(hist * params["conv_w"][None], axis=1) + params["conv_b"]
+    xs_c = jax.nn.silu(conv)
+    dt, B_, C_ = _mamba_dbc(params, xs_c[:, None], dt_rank, d_state)
+    dt, B_, C_ = dt[:, 0], B_[:, 0], C_[:, 0]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                                 # (B,di,ds)
+    h = dA * cache["h"] + (dt * xs_c.astype(jnp.float32))[..., None] * B_[:, None, :]
+    y = jnp.sum(h * C_[:, None, :], axis=-1) + params["D"] * xs_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    new_cache = {"conv": hist[:, 1:], "h": h}
+    return new_cache, (y @ params["out_proj"])[:, None]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),   # z,i,f,o pre-acts
+        "r": (0.02 * jax.random.normal(ks[1], (4, n_heads, dh, dh))).astype(dtype),
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+        "norm": jnp.ones((d_model,), dtype),
+    }
+
+
+def _slstm_step(params, carry, pre, n_heads, dh):
+    """carry: (h, c, n, m) each (B, H, dh) f32; pre (B, 4·d) input
+    pre-activations (the x_t @ w_in matmul is hoisted OUT of the scan —
+    one big (B,S,4d) matmul instead of S small sharded ones, which would
+    otherwise emit a collective per step)."""
+    h, c, n, m = carry
+    B = pre.shape[0]
+    pre = pre.reshape(B, 4, n_heads, dh).astype(jnp.float32)
+    r = params["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)                         # (B,4,H,dh)
+    z_t = jnp.tanh(pre[:, 0] + rec[:, 0])
+    i_t = pre[:, 1] + rec[:, 1]
+    f_t = pre[:, 2] + rec[:, 2]
+    o_t = jax.nn.sigmoid(pre[:, 3] + rec[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def init_slstm_state(batch, n_heads, dh):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return (z, z, z, jnp.zeros((batch, n_heads, dh), jnp.float32))
+
+
+def slstm_forward(params: dict, x: jax.Array, *, n_heads: int,
+                  segment: int = 64) -> jax.Array:
+    """sLSTM is a true recurrence (not parallelizable — the xLSTM paper's
+    own point), so train/prefill scans the sequence. To keep backward
+    memory O(S/segment) instead of O(S), the scan is segmented with remat:
+    the outer scan checkpoints only segment-boundary states and the
+    backward pass recomputes the per-step gates inside each segment
+    (EXPERIMENTS §Perf xlstm iteration 3)."""
+    from repro.models.layers import rms_norm
+    B, S, d = x.shape
+    dh = d // n_heads
+    carry0 = init_slstm_state(B, n_heads, dh)
+    pre = x @ params["w_in"] + params["b"]          # hoisted out of the scan
+
+    def body(carry, pre_t):
+        new = _slstm_step(params, carry, pre_t, n_heads, dh)
+        return new, new[0]
+
+    if segment and S % segment == 0 and S > segment:
+        pre_seg = jnp.moveaxis(
+            pre.reshape(B, S // segment, segment, 4 * d), 1, 0)  # (ns,B,c,4d)
+
+        def seg_body(carry, pre_c):
+            c2, hs_c = jax.lax.scan(body, carry, jnp.moveaxis(pre_c, 1, 0))
+            return c2, hs_c
+
+        _, hs = jax.lax.scan(jax.checkpoint(seg_body), carry0, pre_seg)
+        hs = hs.reshape(S, B, n_heads, dh)
+    else:
+        _, hs = jax.lax.scan(body, carry0, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    return y @ params["out_proj"]
+
+
+def slstm_decode(params: dict, state, x: jax.Array, *, n_heads: int):
+    from repro.models.layers import rms_norm
+    B, _, d = x.shape
+    dh = d // n_heads
+    pre = x[:, 0] @ params["w_in"] + params["b"]
+    new = _slstm_step(params, state, pre, n_heads, dh)
+    y = new[0].reshape(B, 1, d).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    return new, y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, d_model: int, n_heads: int, *, expand: int = 2, dtype) -> dict:
+    di = expand * d_model
+    dh = di // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d_model, 2 * di, dtype),           # x branch + gate
+        "wq": dense_init(ks[1], di, di, dtype),
+        "wk": dense_init(ks[2], di, di, dtype),
+        "wv": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * n_heads, dtype),         # i,f pre-acts
+        "norm": jnp.ones((di,), dtype),
+        "down": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def init_mlstm_state(batch, n_heads, dh):
+    return (
+        jnp.zeros((batch, n_heads, dh, dh), jnp.float32),   # C
+        jnp.zeros((batch, n_heads, dh), jnp.float32),       # n
+        jnp.zeros((batch, n_heads), jnp.float32),           # m
+    )
+
+
+def _mlstm_step(carry, qkv_if, n_heads, dh):
+    """One stabilized mLSTM step. Forget gate in log-sigmoid space
+    (the xLSTM "chunkwise kernels" convention), running-max stabilizer m;
+    denominator max(|n·q|, exp(−m)) per the stabilized read-out."""
+    C, n, m = carry
+    q, k, v, i_t, f_t = qkv_if
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)[..., None]                   # (B,H,1)
+    f_p = jnp.exp(lf + m - m_new)[..., None]
+    kn = k / jnp.sqrt(jnp.float32(dh))
+    C_new = f_p[..., None] * C + i_p[..., None] * (v[..., None] * kn[..., None, :])
+    n_new = f_p * n + i_p * kn
+    num = jnp.einsum("bhde,bhe->bhd", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.sum(n_new * q, axis=-1)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_qkv(params, xs, n_heads, dh):
+    B, S, di = xs.shape
+    q = (xs @ params["wq"]).reshape(B, S, n_heads, dh).astype(jnp.float32)
+    k = (xs @ params["wk"]).reshape(B, S, n_heads, dh).astype(jnp.float32)
+    v = (xs @ params["wv"]).reshape(B, S, n_heads, dh).astype(jnp.float32)
+    if_pre = (xs @ params["w_if"]).reshape(B, S, 2, n_heads).astype(jnp.float32)
+    return q, k, v, if_pre[:, :, 0], if_pre[:, :, 1]
+
+
+def _mlstm_chunk_scan(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM (the TPU-idiomatic form).
+
+    Exactly equivalent to scanning :func:`_mlstm_step` over S, but:
+      * within a chunk of length c the output is a causal (c×c)
+        attention-like matmul (MXU work, parallel over positions);
+      * the (dh×dh) matrix state is carried only across S/c chunk
+        boundaries — backward saves S/c states instead of S (the 343 GB →
+        ~1 GB fix for xlstm train_4k, see EXPERIMENTS §Perf).
+
+    Derivation (log-space, per head): with local cumulative log-forget
+    b_t = Σ_{s≤t} lf_s and running stabilizer m_t = b_t + cummax(m_0,
+    max_{s≤t}(li_s − b_s)), the step-t output splits into an inter-chunk
+    term exp(m_0 + b_t − m_t)·C_0 q_t and an intra-chunk term
+    Σ_{s≤t} exp(b_t − b_s + li_s − m_t)(q_t·k̄_s) v_s.
+    """
+    B, S, H, dh = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    shp = (B, nc, chunk, H)
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+
+    kn = k / jnp.sqrt(jnp.float32(dh))
+    qc, kc, vc = to_chunks(q), to_chunks(kn), to_chunks(v)    # (nc,B,c,H,dh)
+    lf = jax.nn.log_sigmoid(f_pre)                             # (B,S,H)
+    lic = to_chunks(i_pre)                                     # (nc,B,c,H)
+    lfc = to_chunks(lf)
+
+    def chunk_body(carry, xs):
+        C0, n0, m0 = carry            # (B,H,dh,dh), (B,H,dh), (B,H)
+        qb, kb, vb, lib, lfb = xs     # (B,c,H,dh) / (B,c,H)
+        b = jnp.cumsum(lfb, axis=1)                            # (B,c,H)
+        g = jax.lax.cummax(jnp.maximum(m0[:, None], lib - b), axis=1)
+        m = b + g                                              # (B,c,H) = m_t
+        # inter-chunk contribution
+        inter_w = jnp.exp(m0[:, None] + b - m)                 # (B,c,H)
+        inter_h = jnp.einsum("bhde,bche->bchd", C0, qb)
+        inter_n = jnp.einsum("bhe,bche->bch", n0, qb)
+        # intra-chunk causal attention with decay matrix D
+        li_minus_b = lib - b
+        logD = b[:, :, None] + (li_minus_b)[:, None, :] - m[:, :, None]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(causal[None, :, :, None], jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bchd,bshd->bcsh", qb, kb)         # (B,c,c,H)
+        intra_h = jnp.einsum("bcsh,bshd->bchd", D * scores, vb)
+        intra_n = jnp.einsum("bcsh,bcsh->bch", D, scores)
+        num = inter_w[..., None] * inter_h + intra_h
+        nq = inter_w * inter_n + intra_n
+        den = jnp.maximum(jnp.abs(nq), jnp.exp(-m))[..., None]
+        h = num / den                                          # (B,c,H,dh)
+        # end-of-chunk state
+        bc = b[:, -1]                                          # (B,H)
+        mc = m[:, -1]
+        w0 = jnp.exp(m0 + bc - mc)                             # (B,H)
+        ws = jnp.exp(bc[:, None] - b + lib - mc[:, None])      # (B,c,H)
+        C_new = w0[..., None, None] * C0 + jnp.einsum(
+            "bch,bchd,bche->bhde", ws, vb, kb)
+        n_new = w0[..., None] * n0 + jnp.einsum("bch,bchd->bhd", ws, kb)
+        return (C_new, n_new, mc), h
+
+    carry0 = init_mlstm_state(B, H, dh)
+    body = jax.checkpoint(chunk_body)
+    _, hs = jax.lax.scan(body, carry0, (qc, kc, vc, lic, lfc))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+
+
+def mlstm_forward(params: dict, x: jax.Array, *, n_heads: int,
+                  expand: int = 2, chunk: int = 256) -> jax.Array:
+    from repro.models.layers import rms_norm
+    B, S, d = x.shape
+    di = expand * d
+    dh = di // n_heads
+    up = x @ params["up"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, xs, n_heads, dh)
+    if chunk and S % chunk == 0 and S > chunk:
+        hs = _mlstm_chunk_scan(q, k, v, i_pre, f_pre, chunk)
+        y = hs.reshape(B, S, di).astype(x.dtype)
+    else:
+        carry0 = init_mlstm_state(B, n_heads, dh)
+
+        def body(carry, t):
+            return _mlstm_step(carry, t, n_heads, dh)
+
+        xs_t = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+                jnp.moveaxis(v, 1, 0),
+                jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0))
+        _, hs = jax.lax.scan(body, carry0, xs_t)
+        y = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z)
+    return y @ params["down"]
+
+
+def mlstm_decode(params: dict, state, x: jax.Array, *, n_heads: int,
+                 expand: int = 2):
+    from repro.models.layers import rms_norm
+    B, _, d = x.shape
+    di = expand * d
+    dh = di // n_heads
+    up = x[:, 0] @ params["up"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, xs[:, None], n_heads, dh)
+    new, h = _mlstm_step(state, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0],
+                                 f_pre[:, 0]), n_heads, dh)
+    y = h.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y, params["norm"]) * jax.nn.silu(z[:, None])
+    return new, y @ params["down"]

@@ -1,0 +1,475 @@
+"""Architecture assembly: layer stacks, scan-over-cycles, caches.
+
+The stack is ``prefix_codes`` (unrolled) + ``cycle_codes × num_cycles``
+(lax.scan over stacked params — keeps HLO size independent of depth,
+which is what makes 72-layer multi-pod dry-run compiles tractable).
+See configs/base.py for the layer-code grammar.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    dense_init, embed_init, init_mlp, init_rms, mlp, rms_norm,
+    rope_angles, mrope_angles,
+)
+from repro.sharding import ctx as shctx
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def init_layer(key, code: str, cfg: ModelConfig) -> dict:
+    mixer, ffn = cfg.parse_code(code)
+    keys = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p: dict = {"norm": init_rms(d, dt)}
+    if mixer in ("A", "S", "C"):
+        p["attn"] = attn.init_gqa(keys[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, dt,
+                                  qkv_bias=cfg.qkv_bias)
+        if mixer == "C":
+            p["norm_x"] = init_rms(d, dt)
+            p["cross"] = attn.init_gqa(keys[2], d, cfg.num_heads,
+                                       cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, dt,
+                                       qkv_bias=cfg.qkv_bias)
+    elif mixer == "L":
+        p["attn"] = attn.init_mla(keys[0], d, cfg.num_heads,
+                                  kv_lora_rank=cfg.mla.kv_lora_rank,
+                                  head_dim=cfg.resolved_head_dim,
+                                  rope_head_dim=cfg.mla.rope_head_dim, dtype=dt)
+    elif mixer == "M":
+        p["mixer"] = ssm.init_mamba(keys[0], d,
+                                    d_inner=cfg.ssm.expand * d,
+                                    d_state=cfg.ssm.d_state,
+                                    d_conv=cfg.ssm.d_conv,
+                                    dt_rank=cfg.ssm.dt_rank, dtype=dt)
+    elif mixer == "m":
+        p["mixer"] = ssm.init_mlstm(keys[0], d, cfg.num_heads,
+                                    expand=cfg.ssm.mlstm_expand, dtype=dt)
+    elif mixer == "s":
+        p["mixer"] = ssm.init_slstm(keys[0], d, cfg.num_heads, dt)
+    else:
+        raise ValueError(code)
+
+    if ffn == "D":
+        p["norm2"] = init_rms(d, dt)
+        p["ffn"] = init_mlp(keys[1], d, cfg.d_ff, dt)
+    elif ffn == "E":
+        p["norm2"] = init_rms(d, dt)
+        p["ffn"] = moe_mod.init_moe(
+            keys[1], d, cfg.moe.d_ff_expert, cfg.moe.num_experts,
+            cfg.moe.top_k, dt, num_shared=cfg.moe.num_shared,
+            d_ff_shared=cfg.moe.d_ff_shared)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Context threaded through layers
+# ---------------------------------------------------------------------------
+@dataclass
+class Ctx:
+    cfg: ModelConfig
+    positions: jax.Array | None = None      # (B,S) or (3,B,S) for mrope
+    rope_cos_sin: tuple | None = None
+    enc_kv: dict | None = None               # decoder cross-attn K/V
+    window: int | None = None                # effective SWA window
+
+
+def _mixer_kwargs(cfg: ModelConfig):
+    return dict(n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+
+
+def apply_layer_forward(lp: dict, code: str, x: jax.Array, ctx: Ctx):
+    cfg = ctx.cfg
+    mixer, ffn = cfg.parse_code(code)
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    if mixer in ("A", "S", "C"):
+        y = attn.gqa_forward(lp["attn"], h, ctx.positions,
+                             window=ctx.window,
+                             rope_cos_sin=ctx.rope_cos_sin,
+                             **_mixer_kwargs(cfg))
+    elif mixer == "L":
+        y = attn.mla_forward(lp["attn"], h, ctx.positions,
+                             n_heads=cfg.num_heads,
+                             head_dim=cfg.resolved_head_dim,
+                             rope_head_dim=cfg.mla.rope_head_dim,
+                             rope_theta=cfg.rope_theta, window=ctx.window)
+    elif mixer == "M":
+        y = ssm.mamba_forward(lp["mixer"], h, d_inner=cfg.ssm.expand * cfg.d_model,
+                              d_state=cfg.ssm.d_state, dt_rank=cfg.ssm.dt_rank)
+    elif mixer == "m":
+        y = ssm.mlstm_forward(lp["mixer"], h, n_heads=cfg.num_heads,
+                              expand=cfg.ssm.mlstm_expand,
+                              chunk=cfg.ssm.mlstm_chunk)
+    elif mixer == "s":
+        y = ssm.slstm_forward(lp["mixer"], h, n_heads=cfg.num_heads,
+                              segment=cfg.ssm.slstm_segment)
+    x = x + y
+    if mixer == "C":
+        hx = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        x = x + attn.cross_forward(lp["cross"], hx, ctx.enc_kv,
+                                   n_heads=cfg.num_heads,
+                                   n_kv=cfg.num_kv_heads,
+                                   head_dim=cfg.resolved_head_dim)
+    if ffn == "D":
+        x = x + mlp(lp["ffn"], rms_norm(x, lp["norm2"], cfg.norm_eps))
+    elif ffn == "E":
+        y, a = moe_mod.moe_forward(
+            lp["ffn"], rms_norm(x, lp["norm2"], cfg.norm_eps),
+            num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, groups=cfg.moe.groups)
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+def apply_layer_decode(lp: dict, code: str, cache, x: jax.Array,
+                       pos: jax.Array, ctx: Ctx):
+    cfg = ctx.cfg
+    mixer, ffn = cfg.parse_code(code)
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    if mixer in ("A", "S", "C"):
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        new_cache, y = attn.gqa_decode(lp["attn"], self_cache, h, pos,
+                                       window=ctx.window,
+                                       rope_cos_sin=ctx.rope_cos_sin,
+                                       **_mixer_kwargs(cfg))
+    elif mixer == "L":
+        new_cache, y = attn.mla_decode(lp["attn"], cache, h, pos,
+                                       n_heads=cfg.num_heads,
+                                       head_dim=cfg.resolved_head_dim,
+                                       rope_head_dim=cfg.mla.rope_head_dim,
+                                       rope_theta=cfg.rope_theta,
+                                       window=ctx.window, absorb=True)
+    elif mixer == "M":
+        new_cache, y = ssm.mamba_decode(lp["mixer"], cache, h,
+                                        d_inner=cfg.ssm.expand * cfg.d_model,
+                                        d_state=cfg.ssm.d_state,
+                                        dt_rank=cfg.ssm.dt_rank)
+    elif mixer == "m":
+        st = (cache["C"], cache["n"], cache["m"])
+        st, y = ssm.mlstm_decode(lp["mixer"], st, h, n_heads=cfg.num_heads,
+                                 expand=cfg.ssm.mlstm_expand)
+        new_cache = {"C": st[0], "n": st[1], "m": st[2]}
+    elif mixer == "s":
+        st = (cache["h"], cache["c"], cache["n"], cache["m"])
+        st, y = ssm.slstm_decode(lp["mixer"], st, h, n_heads=cfg.num_heads)
+        new_cache = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+    x = x + y
+    if mixer == "C":
+        hx = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        enc_kv = {"k": cache["cross_k"], "v": cache["cross_v"]}
+        x = x + attn.cross_forward(lp["cross"], hx, enc_kv,
+                                   n_heads=cfg.num_heads,
+                                   n_kv=cfg.num_kv_heads,
+                                   head_dim=cfg.resolved_head_dim)
+        new_cache = dict(new_cache, cross_k=cache["cross_k"],
+                         cross_v=cache["cross_v"])
+    if ffn == "D":
+        x = x + mlp(lp["ffn"], rms_norm(x, lp["norm2"], cfg.norm_eps))
+    elif ffn == "E":
+        y, _ = moe_mod.moe_forward(
+            lp["ffn"], rms_norm(x, lp["norm2"], cfg.norm_eps),
+            num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, groups=cfg.moe.groups)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache init per layer
+# ---------------------------------------------------------------------------
+def init_layer_cache(code: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype, enc_len: int | None = None) -> dict:
+    mixer, _ = cfg.parse_code(code)
+    d = cfg.d_model
+    if mixer in ("A", "S", "C"):
+        c = attn.init_gqa_cache(batch, cache_len, cfg.num_kv_heads,
+                                cfg.resolved_head_dim, dtype)
+        if mixer == "C":
+            c["cross_k"] = jnp.zeros(
+                (batch, enc_len, cfg.num_kv_heads, cfg.resolved_head_dim), dtype)
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+    if mixer == "L":
+        return attn.init_mla_cache(batch, cache_len, cfg.mla.kv_lora_rank,
+                                   cfg.mla.rope_head_dim, dtype)
+    if mixer == "M":
+        return ssm.init_mamba_cache(batch, cfg.ssm.expand * d, cfg.ssm.d_state,
+                                    cfg.ssm.d_conv, dtype)
+    if mixer == "m":
+        di = cfg.ssm.mlstm_expand * d
+        dh = di // cfg.num_heads
+        C, n, m = ssm.init_mlstm_state(batch, cfg.num_heads, dh)
+        return {"C": C, "n": n, "m": m}
+    if mixer == "s":
+        dh = d // cfg.num_heads
+        h, c, n, m = ssm.init_slstm_state(batch, cfg.num_heads, dh)
+        return {"h": h, "c": c, "n": n, "m": m}
+    raise ValueError(code)
+
+
+# ---------------------------------------------------------------------------
+# Stack init
+# ---------------------------------------------------------------------------
+def _init_cycle(key, codes, cfg) -> dict:
+    ks = jax.random.split(key, len(codes))
+    return {str(j): init_layer(ks[j], c, cfg) for j, c in enumerate(codes)}
+
+
+def init_stack(key, cfg: ModelConfig, codes_prefix, codes_cycle, n_cycles):
+    kp, kc = jax.random.split(key)
+    prefix = [init_layer(k, c, cfg)
+              for k, c in zip(jax.random.split(kp, max(len(codes_prefix), 1)),
+                              codes_prefix)]
+    cycle = None
+    if n_cycles:
+        cycle = jax.vmap(lambda k: _init_cycle(k, codes_cycle, cfg))(
+            jax.random.split(kc, n_cycles))
+    return {"prefix": prefix, "cycle": cycle}
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": init_rms(cfg.d_model, dt),
+        "stack": init_stack(ks[1], cfg, cfg.prefix_codes, cfg.cycle_codes,
+                            cfg.resolved_num_cycles),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dt)
+    if cfg.encoder_layers:
+        # Encoder: plain bidirectional attention cycle ("A-D").
+        enc_cycles = cfg.encoder_layers
+        params["enc"] = {
+            "stack": init_stack(ks[3], cfg, (), ("A-D",), enc_cycles),
+            "final_norm": init_rms(cfg.d_model, dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _make_ctx_forward(cfg: ModelConfig, B: int, S: int,
+                      positions=None, enc_kv=None) -> Ctx:
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.rope_kind == "mrope":
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+        cos, sin = mrope_angles(positions, cfg.resolved_head_dim,
+                                cfg.rope_theta, cfg.mrope_sections)
+        rope = (cos, sin)
+        pos2d = positions[0]
+    else:
+        cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        rope = (cos, sin)
+        pos2d = positions
+    return Ctx(cfg=cfg, positions=pos2d, rope_cos_sin=rope, enc_kv=enc_kv,
+               window=cfg.attention_window)
+
+
+def run_stack_forward(stack: dict, cfg: ModelConfig, x: jax.Array, ctx: Ctx,
+                      codes_prefix, codes_cycle):
+    aux = jnp.float32(0.0)
+    x = shctx.shard_batch(x)
+    for lp, code in zip(stack["prefix"], codes_prefix):
+        x, a = apply_layer_forward(lp, code, x, ctx)
+        x = shctx.shard_batch(x)
+        aux = aux + a
+    if stack["cycle"] is not None:
+        def one_layer(lp, code, xx):
+            xx, a = apply_layer_forward(lp, code, xx, ctx)
+            return shctx.shard_batch(xx), a
+
+        if cfg.remat_per_layer:
+            one_layer = jax.checkpoint(one_layer, static_argnums=(1,))
+
+        def body(carry, lp_cycle):
+            xx, au = carry
+            for j, code in enumerate(codes_cycle):
+                xx, a = one_layer(lp_cycle[str(j)], code, xx)
+                au = au + a
+            return (xx, au), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stack["cycle"])
+    return x, aux
+
+
+def forward_logits(params: dict, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward. batch:
+       dense/moe/ssm:  {tokens (B,S)}
+       vlm:            {tokens (B,S_text), patch_embeds (B,P,d), [positions]}
+       audio enc-dec:  {frames (B,S_enc,d), tokens (B,S_dec)}
+    Returns (logits (B,S,Vp), aux_loss, loss_mask (B,S))."""
+    if cfg.encoder_layers:
+        enc_x = batch["frames"]
+        B, Se, _ = enc_x.shape
+        enc_ctx = _make_ctx_forward(cfg, B, Se)
+        enc_ctx.window = None
+        enc_out, _ = run_stack_forward(params["enc"]["stack"], cfg, enc_x,
+                                       enc_ctx, (), ("A-D",))
+        enc_out = rms_norm(enc_out, params["enc"]["final_norm"], cfg.norm_eps)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        # per-layer cross K/V are computed inside 'C' layers from enc_out;
+        # to keep the scan homogeneous we precompute shared K/V per cycle
+        # position lazily via the layer's own projections (enc_kv below is
+        # recomputed per layer from enc_out).
+        ctx = _make_ctx_forward(cfg, B, S)
+        ctx.enc_out = enc_out  # type: ignore[attr-defined]
+
+        # Wrap apply to inject per-layer cross K/V.
+        aux = jnp.float32(0.0)
+
+        x = shctx.shard_batch(x)
+
+        def body(carry, lp_cycle):
+            xx, au = carry
+            for j, code in enumerate(cfg.cycle_codes):
+                lp = lp_cycle[str(j)]
+                mixer, _ = cfg.parse_code(code)
+                if mixer == "C":
+                    ctx.enc_kv = attn.encode_kv(
+                        lp["cross"], enc_out, n_kv=cfg.num_kv_heads,
+                        head_dim=cfg.resolved_head_dim)
+                xx, a = apply_layer_forward(lp, code, xx, ctx)
+                xx = shctx.shard_batch(xx)
+                au = au + a
+            return (xx, au), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["stack"]["cycle"])
+        mask = jnp.ones_like(tokens, dtype=jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        x = params["embed"][tokens]
+        mask = jnp.ones((B, S_text), jnp.float32)
+        positions = batch.get("positions")
+        pe = batch.get("patch_embeds")
+        if cfg.frontend == "vision" and pe is not None:
+            x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((B, pe.shape[1]), jnp.float32), mask], axis=1)
+        B, S, _ = x.shape
+        ctx = _make_ctx_forward(cfg, B, S, positions=positions)
+        x, aux = run_stack_forward(params["stack"], cfg, x, ctx,
+                                   cfg.prefix_codes, cfg.cycle_codes)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shctx.shard_batch(x @ head, model_dim=-1)
+    return logits, aux, mask
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               enc_len: int | None = None):
+    """Stacked caches mirroring the param structure."""
+    dt = jnp.dtype(cfg.dtype)
+    # effective per-layer cache length: SWA caches only hold the window
+    def cl(code):
+        mixer, _ = cfg.parse_code(code)
+        if mixer in ("A", "S", "C", "L") and cfg.attention_window is not None:
+            return min(cache_len, cfg.attention_window)
+        return cache_len
+
+    prefix = [init_layer_cache(c, cfg, batch, cl(c), dt, enc_len)
+              for c in cfg.prefix_codes]
+    cycle = None
+    if cfg.resolved_num_cycles:
+        def one(_):
+            return {str(j): init_layer_cache(c, cfg, batch, cl(c), dt, enc_len)
+                    for j, c in enumerate(cfg.cycle_codes)}
+        cycle = jax.vmap(one)(jnp.arange(cfg.resolved_num_cycles))
+    return {"prefix": prefix, "cycle": cycle}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, token: jax.Array,
+                pos: jax.Array):
+    """token (B,1) int32; pos scalar int32. Returns (logits (B,1,Vp), cache)."""
+    B = token.shape[0]
+    x = shctx.shard_batch(params["embed"][token])
+    p1 = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if cfg.rope_kind == "mrope":
+        p3 = jnp.broadcast_to(p1[None], (3, B, 1))
+        cos, sin = mrope_angles(p3, cfg.resolved_head_dim, cfg.rope_theta,
+                                cfg.mrope_sections)
+    else:
+        cos, sin = rope_angles(p1, cfg.resolved_head_dim, cfg.rope_theta)
+    ctx = Ctx(cfg=cfg, positions=p1, rope_cos_sin=(cos, sin),
+              window=cfg.attention_window)
+
+    new_prefix = []
+    for lp, code, c in zip(params["stack"]["prefix"], cfg.prefix_codes,
+                           cache["prefix"]):
+        x, nc = apply_layer_decode(lp, code, c, x, pos, ctx)
+        new_prefix.append(nc)
+
+    new_cycle = None
+    if params["stack"]["cycle"] is not None:
+        def body(xx, inputs):
+            lp_cycle, c_cycle = inputs
+            ncs = {}
+            for j, code in enumerate(cfg.cycle_codes):
+                xx, nc = apply_layer_decode(lp_cycle[str(j)], code,
+                                            c_cycle[str(j)], xx, pos, ctx)
+                xx = shctx.shard_batch(xx)
+                ncs[str(j)] = nc
+            return xx, ncs
+
+        x, new_cycle = jax.lax.scan(body, x,
+                                    (params["stack"]["cycle"], cache["cycle"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, {"prefix": new_prefix, "cycle": new_cycle}
+
+
+def prefill_encoder(params: dict, cfg: ModelConfig, frames: jax.Array,
+                    cache, batch: int):
+    """Run the encoder and fill decoder cross-attn K/V into the cache."""
+    B, Se, _ = frames.shape
+    ctx = _make_ctx_forward(cfg, B, Se)
+    ctx.window = None
+    enc_out, _ = run_stack_forward(params["enc"]["stack"], cfg, frames, ctx,
+                                   (), ("A-D",))
+    enc_out = rms_norm(enc_out, params["enc"]["final_norm"], cfg.norm_eps)
+
+    def fill(lp_cycle, c_cycle):
+        for j, code in enumerate(cfg.cycle_codes):
+            mixer, _ = cfg.parse_code(code)
+            if mixer == "C":
+                kv = attn.encode_kv(lp_cycle[str(j)]["cross"], enc_out,
+                                    n_kv=cfg.num_kv_heads,
+                                    head_dim=cfg.resolved_head_dim)
+                c_cycle[str(j)] = dict(c_cycle[str(j)],
+                                       cross_k=kv["k"], cross_v=kv["v"])
+        return c_cycle
+
+    new_cycle = jax.vmap(fill)(params["stack"]["cycle"], cache["cycle"])
+    return {"prefix": cache["prefix"], "cycle": new_cycle}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, adamw, adafactor, get_optimizer,
+)
+
+__all__ = ["Optimizer", "sgd", "adamw", "adafactor", "get_optimizer"]

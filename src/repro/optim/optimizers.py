@@ -1,0 +1,139 @@
+"""Optimizers (optax-free, minimal but real).
+
+* ``sgd``       — plain SGD (+momentum); what word2vec/SGNS uses.
+* ``adamw``     — fp32 moments + decoupled weight decay; default for the
+                  transformer zoo.
+* ``adafactor`` — factored second moment, no first moment; the only
+                  optimizer whose state fits for the 398B jamba config at
+                  train_4k on a single 256-chip pod (see DESIGN.md).
+
+All are (init_fn, update_fn) pairs over arbitrary pytrees and are safe
+under jit/scan/pjit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (new_params, new_state)
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        del step
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                               params, grads)
+            return new, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        new = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+        return new, {"mu": mu}
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z32, params), "v": jax.tree.map(z32, params)}
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_ = b1 * m + (1 - b1) * g32
+            v_ = b2 * v + (1 - b2) * g32 * g32
+            upd_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            p_ = p.astype(jnp.float32) - lr * (upd_ + weight_decay * p.astype(jnp.float32))
+            return p_.astype(p.dtype), m_, v_
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30,
+              decay: float = 0.8, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment only (Shazeer & Stern): state for an (n, m)
+    matrix is n + m floats instead of 2·n·m."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(one, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def one(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                           + 1e-30)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / (jnp.sqrt(v) + 1e-30)
+                ns = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        # state is a pytree-of-dicts mirroring params
+        flat_s = jax.tree.flatten(
+            state, is_leaf=lambda x: isinstance(x, dict) and (
+                "v" in x or "vr" in x))[0]
+        out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_s = jax.tree.unflatten(tree, [o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}[name](**kw)

@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    param_spec, tree_param_specs, data_spec, cache_spec,
+    tree_data_specs, tree_cache_specs, with_sharding, batch_axes,
+)
+
+__all__ = [
+    "param_spec", "tree_param_specs", "data_spec", "cache_spec",
+    "tree_data_specs", "tree_cache_specs", "with_sharding", "batch_axes",
+]

@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules → PartitionSpec, with divisibility fallback.
+
+Mesh axes: ``data`` (FSDP/batch), ``model`` (tensor/expert parallel),
+optionally ``pod`` (pure data parallel across pods — only gradient
+all-reduce crosses DCN).
+
+Parameters are matched by the *name of their leaf path* (e.g. ``wq``,
+``down``, ``embed``) — names are stable across the whole zoo because all
+layers are built from the same building blocks. Any proposed axis whose
+mesh size does not divide the corresponding dim is dropped (replicated),
+which is what makes the same rule table work for 15-head smollm and
+64-head jamba alike. Cycle-stacked params (leading ``num_cycles`` dim)
+are detected by path and get a ``None`` prepended.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# name → proposed spec for the *unstacked* param
+# ("data" on the fan-in/d_model-ish dim = FSDP; "model" on the
+# head/ffn/vocab dim = tensor parallel; experts (3D) = expert parallel)
+_RULES_2D = {
+    "embed": ("model", "data"),       # (V, d): vocab-sharded
+    "lm_head": ("data", "model"),     # (d, V)
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "wq_nope": ("data", "model"),
+    "wq_rope": ("data", "model"),
+    "w_dkv": ("data", None),
+    "w_uk": (None, "model"),
+    "w_uv": (None, "model"),
+    "w_krope": ("data", None),
+    "gate": ("data", "model"),
+    "up": ("data", "model"),
+    "down": ("model", "data"),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "w_if": ("model", None),
+    "w_in": ("data", "model"),
+    "router": ("data", None),
+    "conv_w": (None, "model"),
+    "A_log": ("model", None),
+}
+
+_RULES_3D_EXPERT = {  # (E, in, out)
+    "gate": ("model", "data", None),
+    "up": ("model", "data", None),
+    "down": ("model", None, "data"),
+}
+
+_VEC_SHARD_MIN = 4096  # 1-D params smaller than this are replicated
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    # works for both Mesh and AbstractMesh
+    return {name: int(size) for name, size in mesh.shape.items()}
+
+
+def _check(spec: tuple, shape: tuple, sizes: dict) -> P:
+    out = []
+    for ax, dim in zip(spec, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        size = math.prod(sizes[a] for a in (ax if isinstance(ax, tuple) else (ax,)))
+        out.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*out)
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh,
+               fsdp: bool = True) -> P:
+    sizes = _axis_sizes(mesh)
+    stacked = "cycle" in path
+    # the param's own name: last path element not an optimizer-state leaf
+    leaf_names = [p for p in path if p not in ("m", "v", "vr", "vc", "mu")]
+    name = leaf_names[-1] if leaf_names else ""
+    core_shape = shape[1:] if stacked and len(shape) > 1 else shape
+    nd = len(core_shape)
+
+    if name in ("gate", "up", "down") and nd == 3:
+        rule = _RULES_3D_EXPERT[name]
+    elif name in _RULES_2D and nd == 2:
+        rule = _RULES_2D[name]
+    elif name == "r" and nd == 4:
+        # sLSTM recurrent (4,H,dh,dh): REPLICATED — it is tiny (~17 MB)
+        # and sharding it puts a collective inside every scan step
+        # (EXPERIMENTS §Perf xlstm iteration 2).
+        rule = (None, None, None, None)
+    elif nd == 1:
+        rule = ("model",) if core_shape[0] >= _VEC_SHARD_MIN else (None,)
+    else:
+        # fallback: shard the largest divisible dim over 'model'
+        rule = [None] * nd
+        order = sorted(range(nd), key=lambda i: -core_shape[i])
+        for i in order:
+            if core_shape[i] % sizes.get("model", 1) == 0 and core_shape[i] >= sizes.get("model", 1):
+                rule[i] = "model"
+                break
+        rule = tuple(rule)
+
+    if not fsdp:
+        # pure tensor-parallel: drop the 'data' weight shard (no per-use
+        # re-gather; weights replicated across the data axis)
+        rule = tuple(None if ax == "data" else ax for ax in rule)
+    spec = _check(rule, core_shape, sizes)
+    if stacked and len(shape) > len(core_shape):
+        spec = P(None, *spec)
+    return spec
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def tree_param_specs(tree, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec pytree for a params/opt-state pytree (of arrays or
+    ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return param_spec(_path_names(path), leaf.shape, mesh, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Input-batch arrays: dim0 = global batch over (pod, data)."""
+    sizes = _axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    n = math.prod(sizes[a] for a in ba)
+    if not shape:
+        return P()
+    if shape[0] % n == 0 and shape[0] >= n:
+        return P(ba, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """KV caches / recurrent state: batch over data axes when divisible,
+    else the sequence dim over 'data' (flash-decoding style); the largest
+    remaining divisible feature dim over 'model'."""
+    sizes = _axis_sizes(mesh)
+    ba = batch_axes(mesh)
+    nb = math.prod(sizes[a] for a in ba)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if nd and shape[0] % nb == 0 and shape[0] >= nb:
+        spec[0] = ba
+    elif nd > 1 and shape[1] % sizes.get("data", 1) == 0 and shape[1] > sizes.get("data", 1):
+        spec[1] = "data"
+    m = sizes.get("model", 1)
+    free = [i for i in range(nd) if spec[i] is None]
+    for i in sorted(free, key=lambda i: -shape[i]):
+        if shape[i] % m == 0 and shape[i] >= m and shape[i] > 1:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def tree_data_specs(tree, mesh: Mesh):
+    return jax.tree.map(lambda l: data_spec(l.shape, mesh), tree)
+
+
+def tree_cache_specs(tree, mesh: Mesh):
+    return jax.tree.map(lambda l: cache_spec(l.shape, mesh), tree)
+
+
+def with_sharding(tree, specs, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)

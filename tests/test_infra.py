@@ -1,0 +1,153 @@
+"""Infrastructure layers: checkpoint, optimizers, sharding rules,
+HLO cost model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step_path
+from repro.optim import get_optimizer
+from repro.sharding.rules import param_spec, data_spec, cache_spec
+from repro.launch.hlo_cost import (
+    parse_module, analyze_hlo, shape_elems_bytes, HloCostModel)
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "b": [jnp.ones((4,)), {"c": jnp.zeros((2, 2), jnp.int32)}],
+            "none": None}
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree, step=7, extra={"note": "x"})
+    out, meta = load_checkpoint(p)
+    assert meta["step"] == 7 and meta["note"] == "x"
+    np.testing.assert_array_equal(out["a"]["w"], np.arange(6.0).reshape(2, 3))
+    np.testing.assert_array_equal(out["b"][0], np.ones(4))
+    assert out["b"][1]["c"].dtype == np.int32
+    assert out["none"] is None
+
+
+def test_latest_step_path(tmp_path):
+    for s in (10, 200, 30):
+        save_checkpoint(str(tmp_path / f"step_{s}.npz"), {"x": jnp.ones(1)},
+                        step=s)
+    assert latest_step_path(str(tmp_path)).endswith("step_200.npz")
+
+
+# --------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(name):
+    opt = get_optimizer(name, lr=0.1 if name != "adamw" else 0.05)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] + p["b"][None] - target) ** 2) / 8.0
+
+    loss0 = float(loss_fn(params))
+    for i in range(150):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, jnp.int32(i))
+    assert float(loss_fn(params)) < loss0 * 0.1, name
+
+
+def test_adafactor_state_is_factored():
+    opt = get_optimizer("adafactor")
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    st = opt.init(params)
+    assert st["w"]["vr"].shape == (64,)
+    assert st["w"]["vc"].shape == (32,)
+    assert st["b"]["v"].shape == (32,)
+
+
+# ------------------------------------------------------------ sharding rules
+@pytest.fixture(scope="module")
+def mesh16():
+    # single real device is fine: specs are pure functions of axis sizes,
+    # but Mesh wants real devices — use an abstract mesh instead.
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_param_spec_rules(mesh16):
+    assert param_spec(("embed",), (128256, 4096), mesh16) == P("model", "data")
+    assert param_spec(("stack", "cycle", "0", "attn", "wq"),
+                      (32, 4096, 4096), mesh16) == P(None, "data", "model")
+    # non-divisible axes drop to replication: 15 heads → 960 still divides
+    assert param_spec(("attn", "wq"), (960, 960), mesh16) == P("data", "model")
+    # truly non-divisible: replicate that axis
+    assert param_spec(("attn", "wk"), (960, 28 * 11), mesh16) == P("data", None)
+    # expert params: expert-parallel
+    assert param_spec(("ffn", "gate"), (128, 2048, 768), mesh16) == \
+        P("model", "data", None)
+    # tiny 1-D params replicate
+    assert param_spec(("norm",), (1024,), mesh16) == P(None)
+    # optimizer state mirrors its parameter
+    assert param_spec(("m", "stack", "cycle", "0", "ffn", "down"),
+                      (32, 14336, 4096), mesh16) == P(None, "model", "data")
+
+
+def test_data_and_cache_specs(mesh16):
+    assert data_spec((256, 4096), mesh16) == P(("data",), None)
+    assert data_spec((1, 128), mesh16) == P(None, None)   # batch 1: replicate
+    # KV cache: batch over data, heads over model when divisible
+    assert cache_spec((128, 32768, 16, 128), mesh16)[0] in ("data", ("data",))
+    # batch-1 long-context cache: shard the sequence dim
+    spec = cache_spec((1, 524288, 8, 128), mesh16)
+    assert spec[1] == "data"
+
+
+def test_multipod_batch_axes():
+    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    assert data_spec((256, 4096), mesh) == P(("pod", "data"), None)
+
+
+# ------------------------------------------------------------- hlo cost model
+SYNTH_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %y = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[64,64]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[64,64]) tuple(%zero, %a)
+  %w = (s32[], f32[64,64]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_cost_counts_loop_trips():
+    cost = analyze_hlo(SYNTH_HLO)
+    # 7 iterations × 2·64³ dot flops
+    assert cost.flops == pytest.approx(7 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_shape_bytes():
+    assert shape_elems_bytes("bf16[4,8]{1,0}") == (32, 64)
+    assert shape_elems_bytes("(f32[2], s32[3])") == (5, 20)
+
+
+def test_parse_module_finds_computations():
+    comps = parse_module(SYNTH_HLO)
+    assert set(comps) >= {"body", "cond", "main"}
+    assert any(o.opcode == "while" for o in comps["main"].ops)

@@ -1,0 +1,161 @@
+"""Pallas kernel ⇔ pure-jnp oracle allclose, swept over shapes/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sgns
+from repro.kernels import ops, ref
+from repro.kernels.sgns_update import _pick_block_b
+
+
+def _rand(key, B, K, D, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (B, D), dtype) * 0.3
+    cp = jax.random.normal(k2, (B, D), dtype) * 0.3
+    cn = jax.random.normal(k3, (B, K, D), dtype) * 0.3
+    return w, cp, cn
+
+
+@pytest.mark.parametrize("B", [8, 64, 100])
+@pytest.mark.parametrize("K", [1, 5])
+@pytest.mark.parametrize("D", [128, 500])  # 500 = the paper's dim (padded inside)
+def test_kernel_matches_ref_shapes(B, K, D):
+    w, cp, cn = _rand(jax.random.PRNGKey(B * 1000 + K * 10 + D), B, K, D,
+                      jnp.float32)
+    loss_k, dw_k, dcp_k, dcn_k = ops.sgns_row_grads(w, cp, cn, interpret=True)
+    loss_r, dw_r, dcp_r, dcn_r = ref.sgns_row_grads_ref(w, cp, cn)
+    np.testing.assert_allclose(loss_k, jnp.mean(loss_r), rtol=1e-5)
+    np.testing.assert_allclose(dw_k, dw_r, atol=1e-5)
+    np.testing.assert_allclose(dcp_k, dcp_r, atol=1e-5)
+    np.testing.assert_allclose(dcn_k, dcn_r, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    w, cp, cn = _rand(jax.random.PRNGKey(0), 32, 5, 128, dtype)
+    loss_k, dw_k, dcp_k, dcn_k = ops.sgns_row_grads(w, cp, cn, interpret=True)
+    loss_r, dw_r, dcp_r, dcn_r = ref.sgns_row_grads_ref(w, cp, cn)
+    assert dw_k.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(loss_k, jnp.mean(loss_r), rtol=tol)
+    np.testing.assert_allclose(np.asarray(dw_k, np.float32),
+                               np.asarray(dw_r, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(dcn_k, np.float32),
+                               np.asarray(dcn_r, np.float32), atol=tol)
+
+
+def test_kernel_matches_autodiff():
+    """Oracle itself must equal autodiff of the sum loss."""
+    cfg = sgns.SGNSConfig(vocab_size=50, dim=128, negatives=3)
+    p = sgns.init_params(jax.random.PRNGKey(0), cfg)
+    p = {"W": p["W"], "C": 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                                    p["C"].shape)}
+    B = 16
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.integers(0, 50, B, dtype=np.int32))
+    x = jnp.asarray(rng.integers(0, 50, B, dtype=np.int32))
+    n = jnp.asarray(rng.integers(0, 50, (B, 3), dtype=np.int32))
+    lr = jnp.float32(0.07)
+    p_dense, _ = sgns.train_step_dense(jax.tree.map(jnp.copy, p), c, x, n, lr)
+    p_kern, _ = ops.sgns_apply_step(jax.tree.map(jnp.copy, p), c, x, n, lr,
+                                    interpret=True)
+    np.testing.assert_allclose(p_dense["W"], p_kern["W"], atol=1e-5)
+    np.testing.assert_allclose(p_dense["C"], p_kern["C"], atol=1e-5)
+
+
+def test_kernel_plugs_into_trainer():
+    """AsyncShardTrainer with row_grad_fn = Pallas kernel trains identically."""
+    from repro.core.async_trainer import AsyncShardTrainer
+    cfg = sgns.SGNSConfig(vocab_size=64, dim=128, negatives=2)
+    tr_ref = AsyncShardTrainer(cfg=cfg, num_workers=2, total_steps=4)
+    tr_k = AsyncShardTrainer(cfg=cfg, num_workers=2, total_steps=4,
+                             row_grad_fn=ops.make_row_grad_fn(interpret=True))
+    params = tr_ref.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, 64, (2, 4, 16), dtype=np.int32))
+    x = jnp.asarray(rng.integers(0, 64, (2, 4, 16), dtype=np.int32))
+    cdf = jnp.tile(jnp.linspace(0, 1, 64, dtype=jnp.float32)[None], (2, 1))
+    key = jax.random.PRNGKey(5)
+    p1, l1 = tr_ref.epoch(jax.tree.map(jnp.copy, params), c, x, cdf, key)
+    p2, l2 = tr_k.epoch(jax.tree.map(jnp.copy, params), c, x, cdf, key)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(p1["W"], p2["W"], atol=1e-5)
+
+
+def test_block_picker_fits_budget():
+    for K in (1, 5, 20):
+        for D in (128, 512, 1024):
+            bt = _pick_block_b(4096, K, D)
+            assert bt >= 8
+            assert (4 + 2 * K) * D * 4 * 2 * bt <= 16 * 2**20
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 70),
+    K=st.integers(1, 8),
+    D=st.sampled_from([64, 128, 200, 384]),
+    seed=st.integers(0, 2**30),
+)
+def test_kernel_matches_ref_property(B, K, D, seed):
+    """Property: arbitrary (B, K, D) incl. non-aligned — wrapper pads."""
+    w, cp, cn = _rand(jax.random.PRNGKey(seed), B, K, D, jnp.float32)
+    loss_k, dw_k, dcp_k, dcn_k = ops.sgns_row_grads(w, cp, cn, interpret=True)
+    loss_r, dw_r, dcp_r, dcn_r = ref.sgns_row_grads_ref(w, cp, cn)
+    np.testing.assert_allclose(loss_k, jnp.mean(loss_r), rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(dw_k, dw_r, atol=2e-5)
+    np.testing.assert_allclose(dcp_k, dcp_r, atol=2e-5)
+    np.testing.assert_allclose(dcn_k, dcn_r, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# swa_decode: flash-style sliding-window decode kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,W,H,D,chunk", [
+    (2, 256, 4, 64, 64),
+    (1, 512, 8, 128, 128),
+    (3, 128, 2, 32, 32),
+    (2, 256, 4, 64, 256),   # single chunk = whole window
+])
+def test_swa_decode_matches_ref(B, W, H, D, chunk):
+    from repro.kernels.swa_decode import swa_decode_kernel
+    ks = jax.random.split(jax.random.PRNGKey(B * W + chunk), 3)
+    q = jax.random.normal(ks[0], (B, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, W, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, W, H, D)) * 0.5
+    out_k = swa_decode_kernel(q, k, v, chunk=chunk, interpret=True)
+    out_r = ref.swa_decode_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_decode_dtypes(dtype):
+    from repro.kernels.swa_decode import swa_decode_kernel
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = (jax.random.normal(ks[0], (2, 4, 64)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (2, 128, 4, 64)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (2, 128, 4, 64)) * 0.5).astype(dtype)
+    out_k = swa_decode_kernel(q, k, v, chunk=64, interpret=True)
+    out_r = ref.swa_decode_ref(q, k, v)
+    assert out_k.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=tol)
+
+
+def test_swa_decode_online_softmax_stability():
+    """Large score magnitudes: the online max-shift must stay finite."""
+    from repro.kernels.swa_decode import swa_decode_kernel
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 32)) * 20.0
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)) * 20.0
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = swa_decode_kernel(q, k, v, chunk=32, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.swa_decode_ref(q, k, v)),
+                               atol=1e-4)

@@ -1,0 +1,116 @@
+"""Merge phase: Concat / PCA / ALiR — alignment, OOV reconstruction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import merge as mg
+
+
+def make_rotated_models(V=120, d=12, n=4, miss_frac=0.0, noise=0.0, seed=0):
+    """Sub-models = ground truth under random orthogonal maps (+noise),
+    with randomly missing rows. This is exactly ALiR's data model."""
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        M = Y @ q.astype(np.float32) + noise * rng.normal(size=(V, d)).astype(np.float32)
+        # model 0 keeps everything so the union always covers the vocab
+        mask = np.ones(V, bool) if i == 0 else (rng.random(V) >= miss_frac)
+        mask[: d + 2] = True  # keep enough shared rows to anchor alignment
+        M[~mask] = 0.0
+        models.append(M.astype(np.float32))
+        masks.append(mask)
+    return Y, mg.stack_models(models, masks)
+
+
+def procrustes_distance(A, B):
+    """Residual after optimally rotating A onto B, normalized."""
+    W = np.asarray(mg.orthogonal_procrustes(jnp.asarray(A), jnp.asarray(B)))
+    return float(np.linalg.norm(A @ W - B) / np.linalg.norm(B))
+
+
+def test_procrustes_is_orthogonal_and_exact():
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(50, 8)).astype(np.float32)
+    q, _ = np.linalg.qr(rng.normal(size=(8, 8)))
+    B = A @ q.astype(np.float32)
+    W = np.asarray(mg.orthogonal_procrustes(jnp.asarray(A), jnp.asarray(B)))
+    np.testing.assert_allclose(W.T @ W, np.eye(8), atol=1e-4)
+    np.testing.assert_allclose(A @ W, B, atol=1e-4)
+
+
+def test_alir_recovers_consensus_full_vocab():
+    Y, stacked = make_rotated_models(miss_frac=0.0, noise=0.01)
+    out, valid, disps = mg.merge_alir(stacked, init="random", max_iters=12)
+    assert bool(valid.all())
+    assert procrustes_distance(np.asarray(out), Y) < 0.05
+    # displacement decreases over iterations
+    d = np.asarray(disps)
+    assert d[-1] <= d[0]
+
+
+def test_alir_reconstructs_missing_rows():
+    Y, stacked = make_rotated_models(V=150, n=5, miss_frac=0.3, noise=0.005, seed=3)
+    out, valid, _ = mg.merge_alir(stacked, init="pca", max_iters=15)
+    assert bool(valid.all())  # union covers everything by construction
+    # consensus close to truth up to rotation
+    assert procrustes_distance(np.asarray(out), Y) < 0.08
+    # per-model reconstruction of missing rows lands near truth-in-model-space
+    completed = np.asarray(mg.reconstruct_missing(stacked, jnp.asarray(out)))
+    mask = np.asarray(stacked.mask)
+    for i in range(stacked.n):
+        missing = ~mask[i]
+        if missing.sum() == 0:
+            continue
+        # the completed missing rows, mapped to consensus space, match Y
+        err = procrustes_distance(completed[i], np.asarray(out))
+        assert err < 0.1, (i, err)
+
+
+def test_average_fails_without_alignment_alir_does_not():
+    """Paper §3.3.1 counter-example: sub-models differing by a rotation.
+
+    Element-wise averaging destroys neighborhood structure; ALiR keeps it.
+    """
+    Y, stacked = make_rotated_models(V=100, n=3, noise=0.0, seed=5)
+
+    def neighbor_overlap(emb):
+        e = emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+        g = Y / np.linalg.norm(Y, axis=1, keepdims=True)
+        sim_e, sim_g = e @ e.T, g @ g.T
+        np.fill_diagonal(sim_e, -np.inf)
+        np.fill_diagonal(sim_g, -np.inf)
+        return float((sim_e.argmax(1) == sim_g.argmax(1)).mean())
+
+    avg, _ = mg.merge_average(stacked)
+    alir, _, _ = mg.merge_alir(stacked, init="random", max_iters=12)
+    assert neighbor_overlap(np.asarray(alir)) > neighbor_overlap(np.asarray(avg)) + 0.2
+
+
+def test_concat_dims_and_intersection():
+    _, stacked = make_rotated_models(V=80, d=8, n=3, miss_frac=0.2, seed=7)
+    emb, valid = mg.merge_concat(stacked)
+    assert emb.shape == (80, 3 * 8)
+    inter = np.asarray(stacked.mask).all(0)
+    np.testing.assert_array_equal(np.asarray(valid), inter)
+    assert np.all(np.asarray(emb)[~inter] == 0)
+
+
+def test_pca_shape_and_variance_order():
+    _, stacked = make_rotated_models(V=200, d=10, n=4, seed=9)
+    emb, valid = mg.merge_pca(stacked, out_dim=10)
+    assert emb.shape == (200, 10)
+    e = np.asarray(emb)[np.asarray(valid)]
+    var = e.var(axis=0)
+    assert np.all(var[:-1] >= var[1:] - 1e-5)  # descending components
+
+
+def test_merge_dispatch_all_methods():
+    _, stacked = make_rotated_models(V=60, d=6, n=3, miss_frac=0.1, seed=11)
+    for m in mg.MERGE_METHODS:
+        emb, valid = mg.merge(stacked, m, out_dim=6, key=jax.random.PRNGKey(0))
+        assert emb.shape[0] == 60
+        assert np.isfinite(np.asarray(emb)).all(), m

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Each assigned arch instantiates its REDUCED variant (≤2 cycles,
+d_model ≤ 128, ≤4 experts) and runs one forward/train step on CPU,
+asserting output shapes and absence of NaNs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_shape
+from repro.models import Model
+from repro.optim import get_optimizer
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            m = Model(cfg)
+            cache[arch] = (m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, built):
+    m, params = built(arch)
+    cfg = m.cfg
+    batch = m.example_batch(smoke_shape("train"))
+    from repro.models import transformer as tf
+    logits, aux, mask = jax.jit(
+        lambda p, b: tf.forward_logits(p, cfg, b))(params, batch)
+    B = batch["labels"].shape[0]
+    assert logits.shape[0] == B
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+    assert mask.shape == logits.shape[:2]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, built):
+    m, params = built(arch)
+    opt = get_optimizer(m.cfg.train_optimizer)
+    state = opt.init(params)
+    step_fn = jax.jit(m.make_train_step(opt, microbatches=1))
+    batch = m.example_batch(smoke_shape("train"))
+    new_params, new_state, loss = step_fn(params, state, batch, jnp.int32(0))
+    assert bool(jnp.isfinite(loss)), arch
+    # at least the embedding moved
+    assert not np.allclose(np.asarray(new_params["embed"], np.float32),
+                           np.asarray(params["embed"], np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_decode_step(arch, built):
+    m, params = built(arch)
+    cfg = m.cfg
+    B, cache_len = 2, 64
+    cache = m.init_cache(B, cache_len,
+                         enc_len=16 if cfg.encoder_layers else None)
+    step = jax.jit(m.make_decode_step())
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache = step(params, cache, tok, jnp.int32(5))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+def test_training_reduces_loss_dense():
+    cfg = get_config("smollm-360m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = get_optimizer("adamw", lr=3e-3)
+    state = opt.init(params)
+    step_fn = jax.jit(m.make_train_step(opt))
+    rng = np.random.default_rng(0)
+    # fixed tiny batch → should memorize quickly
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32), dtype=np.int32))
+    batch = {"tokens": toks, "labels": toks}
+    losses = []
+    for i in range(30):
+        params, state, loss = step_fn(params, state, batch, jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_training_reduces_loss_moe():
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = get_optimizer("adamw", lr=3e-3)
+    state = opt.init(params)
+    step_fn = jax.jit(m.make_train_step(opt))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32), dtype=np.int32))
+    batch = {"tokens": toks, "labels": toks}
+    losses = []
+    for i in range(30):
+        params, state, loss = step_fn(params, state, batch, jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_training_reduces_loss_ssm():
+    cfg = get_config("xlstm-1.3b").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = get_optimizer("adamw", lr=3e-3)
+    state = opt.init(params)
+    step_fn = jax.jit(m.make_train_step(opt))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32), dtype=np.int32))
+    batch = {"tokens": toks, "labels": toks}
+    losses = []
+    for i in range(30):
+        params, state, loss = step_fn(params, state, batch, jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = get_optimizer("sgd", lr=0.1)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16), dtype=np.int32))
+    batch = {"tokens": toks, "labels": toks}
+    s1 = jax.jit(m.make_train_step(opt, microbatches=1))
+    s2 = jax.jit(m.make_train_step(opt, microbatches=2))
+    p1, _, l1 = s1(params, opt.init(params), batch, jnp.int32(0))
+    p2, _, l2 = s2(params, opt.init(params), batch, jnp.int32(0))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-5)
+
+
+def test_vocab_padding():
+    cfg = get_config("seamless-m4t-large-v2")
+    assert cfg.vocab_size == 256206
+    assert cfg.padded_vocab == 256256
+    assert cfg.padded_vocab % 256 == 0

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import merge as mg
+from repro.core.sampling import sample_sentence_indices
+from repro.core.distributions import theorem2_threshold
+from repro.data.pairs import NegativeSampler
+from repro.data.vocab import build_vocab, union_vocab
+from repro.data.corpus import Corpus
+
+
+# ---------------------------------------------------------------- sampling
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(100, 5000), workers=st.integers(2, 20),
+       worker=st.integers(0, 19), epoch=st.integers(0, 5),
+       seed=st.integers(0, 2**20))
+def test_sampling_deterministic_and_in_range(n, workers, worker, epoch, seed):
+    worker = worker % workers
+    for strategy in ("equal", "random", "shuffle"):
+        idx = sample_sentence_indices(n, strategy, 1 / workers, worker,
+                                      workers, epoch=epoch, seed=seed)
+        idx2 = sample_sentence_indices(n, strategy, 1 / workers, worker,
+                                       workers, epoch=epoch, seed=seed)
+        np.testing.assert_array_equal(idx, idx2)
+        assert (idx >= 0).all() and (idx < n).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.floats(0.01, 0.9), length=st.floats(2.0, 500.0))
+def test_theorem2_threshold_is_probability(rate, length):
+    thr = theorem2_threshold(rate, length)
+    assert 0.0 < thr < 1.0
+    # monotone: higher sampling rate → lower miss threshold
+    assert theorem2_threshold(min(rate * 1.5, 0.95), length) <= thr + 1e-12
+
+
+# ---------------------------------------------------------------- merging
+@settings(max_examples=15, deadline=None)
+@given(v=st.integers(20, 80), d=st.integers(3, 10), seed=st.integers(0, 999))
+def test_procrustes_orthogonality_property(v, d, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(v, d)).astype(np.float32)
+    B = rng.normal(size=(v, d)).astype(np.float32)
+    W = np.asarray(mg.orthogonal_procrustes(jnp.asarray(A), jnp.asarray(B)))
+    np.testing.assert_allclose(W.T @ W, np.eye(d), atol=1e-3)
+    # optimality: residual no worse than identity map
+    assert np.linalg.norm(A @ W - B) <= np.linalg.norm(A - B) + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 5), seed=st.integers(0, 999))
+def test_alir_displacement_never_explodes(n, seed):
+    rng = np.random.default_rng(seed)
+    V, d = 40, 6
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) > 0.2
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 0
+        models.append(M)
+        masks.append(mask)
+    stacked = mg.stack_models(models, masks)
+    out, valid, disps = mg.merge_alir(stacked, init="random", max_iters=10)
+    d_arr = np.asarray(disps)
+    assert np.isfinite(np.asarray(out)).all()
+    assert d_arr[-1] <= d_arr[0] + 1e-5     # displacement non-increasing-ish
+
+
+# ------------------------------------------------------------ data substrate
+@settings(max_examples=15, deadline=None)
+@given(v=st.integers(10, 200), seed=st.integers(0, 999))
+def test_negative_sampler_in_vocab(v, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, 1000, size=v)
+    s = NegativeSampler(counts)
+    out = np.asarray(s.sample(jax.random.PRNGKey(seed), (64, 3)))
+    assert (out >= 0).all() and (out < v).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), min_count=st.integers(1, 5))
+def test_vocab_frequency_sorted_and_union_superset(seed, min_count):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 50, size=2000).astype(np.int32)
+    offs = np.arange(0, 2001, 20, dtype=np.int64)
+    c = Corpus(tokens=toks, offsets=offs)
+    vocab = build_vocab(c, 50, min_count=min_count)
+    assert (np.diff(vocab.counts) <= 0).all()          # sorted desc
+    assert (vocab.counts >= min_count).all()
+    sub = Corpus(tokens=toks[:500], offsets=offs[offs <= 500])
+    v2 = build_vocab(sub, 50, min_count=min_count)
+    u = union_vocab([vocab, v2], 50)
+    assert set(vocab.word_ids) <= set(u.word_ids)

@@ -1,0 +1,128 @@
+"""Divide phase: strategies, determinism, Theorems 1–2, KL (Fig. 1)."""
+
+import numpy as np
+import pytest
+
+from repro.core.sampling import sample_sentence_indices, coverage_stats
+from repro.core.distributions import (
+    unigram_distribution,
+    bigram_distribution,
+    kl_divergence_dense,
+    kl_divergence_sparse,
+    theorem2_threshold,
+)
+from repro.data.corpus import SemanticCorpusModel, Corpus
+
+
+@pytest.fixture(scope="module")
+def corpus_and_gen():
+    gen = SemanticCorpusModel.create(vocab_size=800, seed=0)
+    return gen.generate(num_sentences=6000, seed=1), gen
+
+
+def test_equal_partition_covers_exactly_once():
+    n, W = 1000, 8
+    seen = np.zeros(n, int)
+    for w in range(W):
+        idx = sample_sentence_indices(n, "equal", 1 / W, w, W)
+        seen[idx] += 1
+    assert (seen == 1).all()
+
+
+def test_random_fixed_across_epochs_shuffle_not():
+    kw = dict(num_sentences=5000, rate=0.1, worker=2, num_workers=10, seed=3)
+    r0 = sample_sentence_indices(strategy="random", epoch=0, **kw)
+    r1 = sample_sentence_indices(strategy="random", epoch=1, **kw)
+    np.testing.assert_array_equal(r0, r1)
+    s0 = sample_sentence_indices(strategy="shuffle", epoch=0, **kw)
+    s1 = sample_sentence_indices(strategy="shuffle", epoch=1, **kw)
+    assert not np.array_equal(s0, s1)
+    # deterministic given (worker, epoch, seed)
+    np.testing.assert_array_equal(
+        s0, sample_sentence_indices(strategy="shuffle", epoch=0, **kw))
+
+
+def test_workers_draw_distinct_samples():
+    kw = dict(num_sentences=5000, rate=0.1, num_workers=10, seed=3, epoch=0)
+    a = sample_sentence_indices(strategy="random", worker=0, **kw)
+    b = sample_sentence_indices(strategy="random", worker=1, **kw)
+    assert not np.array_equal(a, b)
+
+
+def test_sample_sizes_match_rate():
+    idx = sample_sentence_indices(10_000, "random", 0.07, 0, 14, seed=0)
+    assert len(idx) == 700
+
+
+def test_theorem1_unigram_preserved_in_expectation(corpus_and_gen):
+    """E[unigram of sample] == corpus unigram (Theorem 1) — check the
+    average over sub-corpora is far closer than any single partition."""
+    corpus, gen = corpus_and_gen
+    V = gen.vocab_size
+    ref = unigram_distribution(corpus, V)
+    samples = []
+    for w in range(10):
+        idx = sample_sentence_indices(corpus.num_sentences, "random", 0.1, w, 10,
+                                      seed=5)
+        samples.append(unigram_distribution(corpus.select(idx), V))
+    avg = np.mean(samples, axis=0)
+    assert kl_divergence_dense(avg, ref) < 0.01
+    mean_single = np.mean([kl_divergence_dense(s, ref) for s in samples])
+    assert kl_divergence_dense(avg, ref) < mean_single
+
+
+def test_fig1_random_sampling_beats_equal_partitioning_on_kl(corpus_and_gen):
+    """Paper Fig. 1 comparative claim, on a corpus with topical drift."""
+    gen = SemanticCorpusModel.create(vocab_size=600, num_topics=8, seed=2)
+    corpus = gen.generate(num_sentences=4000, seed=3)
+    # Introduce drift: sort sentences by topic (equal partitioning then
+    # slices topic-correlated chunks — its worst case, per the paper).
+    V = gen.vocab_size
+    ref_u = unigram_distribution(corpus, V)
+    ref_b = bigram_distribution(corpus, V)
+
+    def mean_kl(strategy):
+        kls_u, kls_b = [], []
+        for w in range(8):
+            idx = sample_sentence_indices(corpus.num_sentences, strategy, 1 / 8,
+                                          w, 8, seed=5)
+            sub = corpus.select(idx)
+            kls_u.append(kl_divergence_dense(unigram_distribution(sub, V), ref_u))
+            kls_b.append(kl_divergence_sparse(bigram_distribution(sub, V), ref_b))
+        return np.mean(kls_u), np.mean(kls_b)
+
+    # sort by topic to create drift
+    order = np.argsort([corpus.sentence(i)[0] % 8 for i in range(corpus.num_sentences)])
+    corpus = corpus.select(np.asarray(order))
+    ku_r, kb_r = mean_kl("random")
+    ku_e, kb_e = mean_kl("equal")
+    assert ku_r < ku_e, (ku_r, ku_e)
+    assert kb_r < kb_e, (kb_r, kb_e)
+
+
+def test_theorem2_threshold_example_from_paper():
+    # u = 0.1, ℓ = 100 → ≈ 0.0095 (paper §3.1)
+    assert theorem2_threshold(0.1, 100) == pytest.approx(0.0095, rel=0.05)
+
+
+def test_theorem2_frequent_words_always_covered(corpus_and_gen):
+    corpus, gen = corpus_and_gen
+    V = gen.vocab_size
+    ref = unigram_distribution(corpus, V)
+    mean_len = corpus.num_tokens / corpus.num_sentences
+    thr = theorem2_threshold(0.1, mean_len)
+    frequent = np.where(ref > thr)[0]
+    assert len(frequent) > 0
+    for w in range(6):
+        idx = sample_sentence_indices(corpus.num_sentences, "random", 0.1, w, 10,
+                                      seed=9)
+        sub_counts = np.bincount(corpus.select(idx).tokens, minlength=V)
+        assert (sub_counts[frequent] > 0).all()
+
+
+def test_coverage_stats(corpus_and_gen):
+    corpus, _ = corpus_and_gen
+    idxs = [sample_sentence_indices(corpus.num_sentences, "random", 0.2, w, 5,
+                                    seed=1) for w in range(5)]
+    st = coverage_stats(idxs, corpus.num_sentences)
+    assert 0.5 < st["union_coverage"] <= 1.0

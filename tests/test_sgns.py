@@ -1,0 +1,96 @@
+"""SGNS objective + step functions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sgns
+from repro.core.sgns import SGNSConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SGNSConfig(vocab_size=97, dim=16, negatives=4)
+
+
+@pytest.fixture(scope="module")
+def batch(cfg):
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    B = 32
+    centers = jax.random.randint(k1, (B,), 0, cfg.vocab_size)
+    contexts = jax.random.randint(k2, (B,), 0, cfg.vocab_size)
+    negatives = jax.random.randint(k3, (B, cfg.negatives), 0, cfg.vocab_size)
+    return centers, contexts, negatives
+
+
+def test_init_matches_word2vec(cfg):
+    p = sgns.init_params(jax.random.PRNGKey(0), cfg)
+    assert p["W"].shape == (cfg.vocab_size, cfg.dim)
+    assert float(jnp.abs(p["W"]).max()) <= 0.5 / cfg.dim + 1e-6
+    assert float(jnp.abs(p["C"]).max()) == 0.0
+
+
+def test_loss_at_init_is_log2_times_k_plus_1(cfg, batch):
+    # C = 0 ⇒ all logits 0 ⇒ loss = (k+1)·log 2.
+    p = sgns.init_params(jax.random.PRNGKey(0), cfg)
+    loss = sgns.loss_fn(p, *batch)
+    np.testing.assert_allclose(loss, (cfg.negatives + 1) * np.log(2), rtol=1e-5)
+
+
+def test_sparse_step_matches_dense_step(cfg, batch):
+    p0 = sgns.init_params(jax.random.PRNGKey(1), cfg)
+    # Make C nonzero so both tables receive real gradients.
+    p0 = {"W": p0["W"], "C": 0.01 * jax.random.normal(
+        jax.random.PRNGKey(2), p0["C"].shape)}
+    lr = jnp.float32(0.05)
+    pd, loss_d = sgns.train_step_dense(jax.tree.map(jnp.copy, p0), *batch, lr)
+    ps, loss_s = sgns.train_step_sparse(p0, *batch, lr)
+    np.testing.assert_allclose(loss_d, loss_s, rtol=1e-5)
+    np.testing.assert_allclose(pd["W"], ps["W"], atol=1e-6)
+    np.testing.assert_allclose(pd["C"], ps["C"], atol=1e-6)
+
+
+def test_duplicate_indices_accumulate(cfg):
+    """Same center repeated in a batch must accumulate updates (scatter-add)."""
+    p = sgns.init_params(jax.random.PRNGKey(1), cfg)
+    p = {"W": p["W"], "C": 0.01 * jnp.ones_like(p["C"])}
+    centers = jnp.array([3, 3, 3, 3])
+    contexts = jnp.array([5, 5, 5, 5])
+    negs = jnp.full((4, cfg.negatives), 7)
+    ps, _ = sgns.train_step_sparse(jax.tree.map(jnp.copy, p), centers, contexts,
+                                   negs, jnp.float32(0.1))
+    pd, _ = sgns.train_step_dense(jax.tree.map(jnp.copy, p), centers, contexts,
+                                  negs, jnp.float32(0.1))
+    np.testing.assert_allclose(ps["W"], pd["W"], atol=1e-6)
+    np.testing.assert_allclose(ps["C"], pd["C"], atol=1e-6)
+    # Rows other than 3 unchanged in W.
+    mask = jnp.ones(cfg.vocab_size, bool).at[3].set(False)
+    np.testing.assert_allclose(ps["W"][mask], p["W"][mask])
+
+
+def test_training_reduces_loss(cfg):
+    """A few hundred steps on a tiny structured problem reduce the loss."""
+    rng = np.random.default_rng(0)
+    p = sgns.init_params(jax.random.PRNGKey(3), cfg)
+    B = 64
+    lr = jnp.float32(0.05)
+    first = last = None
+    for i in range(200):
+        c = rng.integers(0, 20, size=B).astype(np.int32)
+        x = ((c + rng.integers(1, 3, size=B)) % 20).astype(np.int32)  # structured
+        n = rng.integers(40, 97, size=(B, cfg.negatives)).astype(np.int32)
+        p, loss = sgns.train_step_sparse(p, jnp.asarray(c), jnp.asarray(x),
+                                         jnp.asarray(n), lr)
+        if i == 0:
+            first = float(loss)
+        last = float(loss)
+    assert last < first * 0.8, (first, last)
+
+
+def test_linear_lr_decay(cfg):
+    assert float(sgns.linear_lr(jnp.int32(0), 100, cfg)) == pytest.approx(cfg.lr)
+    mid = float(sgns.linear_lr(jnp.int32(50), 100, cfg))
+    assert mid == pytest.approx(cfg.lr * 0.5, rel=1e-3)
+    assert float(sgns.linear_lr(jnp.int32(1000), 100, cfg)) == pytest.approx(cfg.lr_min)
