@@ -3,15 +3,23 @@ merged with ALiR(PCA), vs the synchronized single-model baseline.
 
 Scores are similarity (Spearman ρ), analogy (3CosAdd acc) and
 categorization (purity) on the synthetic gold suites, with OOV counts in
-parentheses exactly as the paper reports them."""
+parentheses exactly as the paper reports them.
+
+Also hosts the negative-sampler micro-bench: inverse-CDF
+(O(log V) searchsorted) vs Vose alias table (O(1), two gathers) per
+draw, at word2vec-scale vocabularies."""
 
 from __future__ import annotations
 
+import time
+
 import jax
+import numpy as np
 
 from benchmarks.common import fixture, timer
 from repro.core.driver import run_pipeline, train_sync_baseline
 from repro.core.sgns import SGNSConfig
+from repro.data.pairs import AliasSampler, NegativeSampler
 from repro.eval.benchmarks import evaluate_all
 
 DIM = 64
@@ -72,11 +80,49 @@ def fmt(rows):
     return "\n".join(out)
 
 
+def negative_sampler_microbench(
+    vocab_sizes=(10_000, 100_000), batch=4096, negatives=5, reps=50,
+    quick=False):
+    """us/draw-batch and speedup of alias over inverse-CDF per vocab size."""
+    if quick:
+        vocab_sizes, reps = (100_000,), 20
+    rng = np.random.default_rng(0)
+    rows = []
+    for V in vocab_sizes:
+        counts = rng.zipf(1.3, V).astype(np.float64)
+        samplers = {"cdf": NegativeSampler(counts), "alias": AliasSampler(counts)}
+        us = {}
+        for name, s in samplers.items():
+            fn = jax.jit(lambda k, s=s: s.sample(k, (batch, negatives)))
+            key = jax.random.PRNGKey(0)
+            fn(key).block_until_ready()
+            t0 = time.perf_counter()
+            for i in range(reps):
+                key = jax.random.fold_in(key, i)
+                fn(key).block_until_ready()
+            us[name] = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"V": V, "us_cdf": us["cdf"], "us_alias": us["alias"],
+                     "speedup": us["cdf"] / us["alias"]})
+    return rows
+
+
+def fmt_microbench(rows):
+    out = [f"{'V':>8s} {'cdf_us':>9s} {'alias_us':>9s} {'speedup':>8s}"]
+    for r in rows:
+        out.append(f"{r['V']:8d} {r['us_cdf']:9.1f} {r['us_alias']:9.1f} "
+                   f"{r['speedup']:7.2f}x")
+    return "\n".join(out)
+
+
 def main(quick=False):
     rates = (0.1,) if quick else (0.1, 0.05)
     rows, secs = run(rates=rates, quick=quick)
     print(f"\n[Table 2] sampling strategies ({secs:.1f}s)")
     print(fmt(rows))
+
+    micro = negative_sampler_microbench(quick=quick)
+    print("\n[micro] negative draws, batch 4096 × 5 (CDF vs alias)")
+    print(fmt_microbench(micro))
 
     def get(strat, rate):
         return next(r for r in rows if r["strategy"] == strat

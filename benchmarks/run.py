@@ -9,21 +9,35 @@
   roofline_table  — §Roofline terms from the dry-run sweeps
 
 Prints a final ``name,us_per_call,derived`` CSV summary.
-Env: REPRO_BENCH_QUICK=1 for reduced step counts.
+Env: REPRO_BENCH_QUICK=1 for reduced step counts;
+     REPRO_BENCH_ONLY=a,b to run only the named benchmarks.
+Args: --out FILE writes the CSV summary to FILE (CI artifact).
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV summary to this file")
+    args = ap.parse_args(argv)
+
     quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
+    only_names = {n.strip() for n in only.split(",") if n.strip()}
     csv: list[tuple[str, float, str]] = []
+    seen_names: set[str] = set()
 
     def run(name, fn, derive):
+        seen_names.add(name)
+        if only_names and name not in only_names:
+            return
         t0 = time.perf_counter()
         try:
             out = fn(quick=quick)
@@ -54,13 +68,25 @@ def main() -> None:
         lambda rows: "alir@50%%sim=%.3f" % next(
             r['similarity'] for r in rows
             if r['method'] == 'alir_pca' and r['removed_frac'] == 0.5))
+    run("neg_sampler",
+        lambda quick: bench_sampling.negative_sampler_microbench(quick=quick),
+        lambda rows: "alias_speedup@V=%d=%.1fx" % (
+            rows[-1]["V"], rows[-1]["speedup"]))
     run("kernel_sgns", bench_kernel.main,
         lambda r: "pairs_per_s=%.2e" % r["pairs_per_s_sparse"])
     run("roofline", roofline_table.main, lambda r: "see tables above")
 
+    lines = [f"{name},{us:.1f},{derived}" for name, us, derived in csv]
     print("\n=== summary (name,us_per_call,derived) ===")
-    for name, us, derived in csv:
-        print(f"{name},{us:.1f},{derived}")
+    print("\n".join(lines))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("name,us_per_call,derived\n" + "\n".join(lines) + "\n")
+    unknown = only_names - seen_names
+    if unknown:
+        print(f"REPRO_BENCH_ONLY names not found: {sorted(unknown)}; "
+              f"known: {sorted(seen_names)}", file=sys.stderr)
+        sys.exit(2)
     if any(us < 0 for _, us, _ in csv):
         sys.exit(1)
 

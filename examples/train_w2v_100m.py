@@ -8,6 +8,12 @@ merged with ALiR, evaluated, checkpointed.
 This is the paper's kind of workload (embedding *training*), so the
 end-to-end example trains rather than serves. ~10-15 min on CPU
 at the defaults; pass smaller --steps/--vocab for a quick pass.
+
+Ingestion is the streaming pipeline: pairs are extracted block-of-
+sentences at a time into fixed-shape chunks and prefetched to the device
+while it trains — no epoch of pairs is ever materialized in host memory.
+Negatives come from the O(1) alias sampler (``--sampler cdf`` for the
+binary-search oracle).
 """
 
 import argparse
@@ -31,6 +37,12 @@ def main():
     ap.add_argument("--dim", type=int, default=500)
     ap.add_argument("--workers", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--sampler", choices=("alias", "cdf"), default="alias",
+                    help="negative sampler: O(1) alias table or O(log V) CDF")
+    ap.add_argument("--steps-per-chunk", type=int, default=128,
+                    help="steps per fixed-shape streamed chunk")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="chunk prefetch depth (host/device overlap)")
     ap.add_argument("--save", default="/tmp/w2v_100m.npz")
     args = ap.parse_args()
 
@@ -41,7 +53,7 @@ def main():
     corpus = gen.generate(num_sentences=120_000, seed=1)
     print(f"corpus: {corpus.num_sentences} sentences, "
           f"{corpus.num_tokens/1e6:.1f}M tokens")
-    suite = BenchmarkSuite.from_model(gen, top_words=20_000)
+    suite = BenchmarkSuite.from_model(gen, top_words=min(20_000, args.vocab))
 
     cfg = SGNSConfig(vocab_size=0, dim=args.dim, window=5, negatives=5)
     t0 = time.perf_counter()
@@ -49,7 +61,8 @@ def main():
         corpus, args.vocab, strategy="shuffle", num_workers=args.workers,
         cfg=cfg, epochs=args.epochs, batch_size=1024, window=5,
         max_vocab=args.vocab, base_min_count=10,
-        max_steps_per_epoch=args.steps)
+        max_steps_per_epoch=args.steps, sampler=args.sampler,
+        steps_per_chunk=args.steps_per_chunk, prefetch=args.prefetch)
     print(f"async training: {res.timings['train_s']:.1f}s total "
           f"({res.timings['train_s']/args.workers:.1f}s/worker projected "
           f"parallel), losses {['%.3f' % l for l in res.losses]}")

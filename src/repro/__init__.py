@@ -1,0 +1,5 @@
+"""Reproduction of "Asynchronous Training of Word Embeddings for Large
+Text Corpora" (WSDM 2019): divide → asynchronously train sub-models with
+zero collectives → merge (ALiR) → evaluate, as a JAX/Pallas system."""
+
+__version__ = "0.1.0"

@@ -18,8 +18,9 @@ production mesh for the dry-run (``shard_map`` backend).
 
 from __future__ import annotations
 
+import inspect
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
@@ -28,28 +29,48 @@ from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
 
 from repro.core import sgns
 from repro.core.sgns import SGNSConfig
+from repro.data.pairs import negative_sampler_fn
 
 COLLECTIVE_RE = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
 )
+
+# --- shard_map compat: jax >= 0.6 exposes jax.shard_map(check_vma=...);
+# jax 0.4.x has jax.experimental.shard_map.shard_map(check_rep=...).
+try:
+    _shard_map_impl = jax.shard_map
+except AttributeError:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, on any supported jax."""
+    kw = {}
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kw["check_vma"] = False
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = False
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
 
 
 # ---------------------------------------------------------------------------
 # Single-worker epoch: scan over a fixed number of steps.
 # ---------------------------------------------------------------------------
 def make_worker_epoch(cfg: SGNSConfig, total_steps: int,
-                      sparse: bool = True, row_grad_fn=None):
-    """Returns epoch_fn(params, centers (S,B), contexts (S,B), neg_cdf, key, step0).
+                      sparse: bool = True, row_grad_fn=None,
+                      sampler: str = "cdf"):
+    """Returns epoch_fn(params, centers (S,B), contexts (S,B), neg_table, key, step0).
 
-    ``neg_cdf`` is the worker's *own* unigram^0.75 CDF — each sub-model
-    draws negatives from its own sample's noise distribution, exactly as
-    a standalone word2vec run on that sub-corpus would (paper §3.2).
+    ``neg_table`` is the worker's *own* unigram^0.75 noise table — each
+    sub-model draws negatives from its own sample's noise distribution,
+    exactly as a standalone word2vec run on that sub-corpus would (paper
+    §3.2). Its shape depends on ``sampler``: a ``(V,)`` CDF for
+    ``'cdf'``, a ``{'prob', 'alias'}`` Vose table for ``'alias'``.
     """
-
-    def sample_negatives(neg_cdf, key, shape):
-        u = jax.random.uniform(key, shape, dtype=jnp.float32)
-        idx = jnp.searchsorted(neg_cdf, u)
-        return jnp.clip(idx, 0, neg_cdf.shape[0] - 1).astype(jnp.int32)
+    sample_negatives = negative_sampler_fn(sampler)
 
     def step(params, centers_b, contexts_b, neg_cdf, key, step_idx):
         negs = sample_negatives(neg_cdf, key, (centers_b.shape[0], cfg.negatives))
@@ -97,6 +118,8 @@ class AsyncShardTrainer:
     mesh: Mesh | None = None
     sparse: bool = True
     row_grad_fn: object = None
+    sampler: str = "cdf"
+    _jitted: object = field(default=None, init=False, repr=False, compare=False)
 
     def init(self, key: jax.Array) -> dict:
         keys = jax.random.split(key, self.num_workers)
@@ -104,31 +127,41 @@ class AsyncShardTrainer:
 
     def _epoch_fn(self):
         return make_worker_epoch(self.cfg, self.total_steps,
-                                 sparse=self.sparse, row_grad_fn=self.row_grad_fn)
+                                 sparse=self.sparse, row_grad_fn=self.row_grad_fn,
+                                 sampler=self.sampler)
 
     def _sharded(self, epoch_fn):
         spec = P("worker")
-        return jax.shard_map(
+        return shard_map_compat(
             jax.vmap(epoch_fn),  # local worker block (n/devices per device)
             mesh=self.mesh,
+            # spec is a pytree prefix, so the alias table's {prob, alias}
+            # leaves pick up the worker sharding too.
             in_specs=(spec,) * 6,
             out_specs=(spec, spec),
-            check_vma=False,
         )
 
-    def epoch(self, params, centers, contexts, neg_cdf, key, step0=0):
-        """params: (n,V,d) pytree; centers/contexts: (n,S,B); neg_cdf: (n,V)."""
-        epoch_fn = self._epoch_fn()
+    def _jit_epoch(self):
+        """Build + jit the epoch once; chunked streaming calls it many
+        times per epoch, so the jit cache must live on the trainer."""
+        if self._jitted is None:
+            epoch_fn = self._epoch_fn()
+            if self.backend == "vmap":
+                fn = jax.vmap(epoch_fn)
+            elif self.backend == "shard_map":
+                assert self.mesh is not None
+                fn = self._sharded(epoch_fn)
+            else:
+                raise ValueError(self.backend)
+            object.__setattr__(self, "_jitted", jax.jit(fn))
+        return self._jitted
+
+    def epoch(self, params, centers, contexts, neg_table, key, step0=0):
+        """params: (n,V,d) pytree; centers/contexts: (n,S,B);
+        neg_table: (n,V) CDF or {'prob','alias'} of (n,V) alias tables."""
         keys = jax.random.split(key, self.num_workers)
         step0 = jnp.full((self.num_workers,), step0, dtype=jnp.int32)
-        if self.backend == "vmap":
-            fn = jax.vmap(epoch_fn)
-        elif self.backend == "shard_map":
-            assert self.mesh is not None
-            fn = self._sharded(epoch_fn)
-        else:
-            raise ValueError(self.backend)
-        return jax.jit(fn)(params, centers, contexts, neg_cdf, keys, step0)
+        return self._jit_epoch()(params, centers, contexts, neg_table, keys, step0)
 
     def lower_epoch(self, steps: int, batch: int):
         """Lower the sharded epoch for the dry-run, ShapeDtypeStruct only."""
@@ -137,12 +170,16 @@ class AsyncShardTrainer:
         spec = P("worker")
         sh = lambda s, t: jax.ShapeDtypeStruct(
             s, t, sharding=NamedSharding(self.mesh, spec))
+        if self.sampler == "alias":
+            neg = {"prob": sh((n, V), jnp.float32), "alias": sh((n, V), jnp.int32)}
+        else:
+            neg = sh((n, V), jnp.float32)       # per-worker negative CDFs
         params = {"W": sh((n, V, d), jnp.float32), "C": sh((n, V, d), jnp.float32)}
         args = (
             params,
             sh((n, steps, batch), jnp.int32),   # centers
             sh((n, steps, batch), jnp.int32),   # contexts
-            sh((n, V), jnp.float32),            # per-worker negative CDFs
+            neg,                                # per-worker noise tables
             sh((n, 2), jnp.uint32),             # PRNG keys
             sh((n,), jnp.int32),                # step0
         )
@@ -153,18 +190,18 @@ class AsyncShardTrainer:
 # ---------------------------------------------------------------------------
 # Synchronized baseline (Hogwild/MLLib stand-in): data-parallel + all-reduce
 # ---------------------------------------------------------------------------
-def make_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array, total_steps: int,
-                    mesh: Mesh | None = None, data_axis: str = "worker"):
+def make_sync_epoch(cfg: SGNSConfig, neg_table, total_steps: int,
+                    mesh: Mesh | None = None, data_axis: str = "worker",
+                    sampler: str = "cdf"):
     """One shared table; per-step gradient synchronization.
 
     Under a mesh, the batch is sharded over ``data_axis`` and the dense
     gradient is psum'd — the per-step collective the paper eliminates.
     """
+    draw = negative_sampler_fn(sampler)
 
     def sample_negatives(key, shape):
-        u = jax.random.uniform(key, shape, dtype=jnp.float32)
-        return jnp.clip(jnp.searchsorted(neg_cdf, u), 0, neg_cdf.shape[0] - 1
-                        ).astype(jnp.int32)
+        return draw(neg_table, key, shape)
 
     def step(params, c_b, x_b, key, i):
         negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
@@ -191,10 +228,10 @@ def make_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array, total_steps: int,
     if mesh is None:
         return jax.jit(epoch_fn)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map_compat(
         epoch_fn, mesh=mesh,
         in_specs=(P(), P(None, data_axis), P(None, data_axis), P(), P()),
-        out_specs=(P(), P()), check_vma=False))
+        out_specs=(P(), P())))
 
 
 # ---------------------------------------------------------------------------
@@ -203,16 +240,16 @@ def make_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array, total_steps: int,
 # training (k→∞, with the final ALiR merge as the one-time "sync").
 # Collective bytes scale as 1/k (EXPERIMENTS §Perf SGNS iterations).
 # ---------------------------------------------------------------------------
-def make_periodic_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array,
+def make_periodic_sync_epoch(cfg: SGNSConfig, neg_table,
                              total_steps: int, sync_every: int,
-                             mesh: Mesh, data_axis: str = "worker"):
+                             mesh: Mesh, data_axis: str = "worker",
+                             sampler: str = "cdf"):
     """One shared table; parameters are *averaged* across workers every
     ``sync_every`` steps (local SGD) instead of gradients every step."""
+    draw = negative_sampler_fn(sampler)
 
     def sample_negatives(key, shape):
-        u = jax.random.uniform(key, shape, dtype=jnp.float32)
-        return jnp.clip(jnp.searchsorted(neg_cdf, u), 0,
-                        neg_cdf.shape[0] - 1).astype(jnp.int32)
+        return draw(neg_table, key, shape)
 
     def local_step(params, c_b, x_b, key, i):
         negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
@@ -246,10 +283,10 @@ def make_periodic_sync_epoch(cfg: SGNSConfig, neg_cdf: jax.Array,
         return params, jax.lax.pmean(losses, axis_name=data_axis)
 
     spec_b = P(None, None, data_axis)
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map_compat(
         epoch_fn, mesh=mesh,
         in_specs=(P(), spec_b, spec_b, P(), P()),
-        out_specs=(P(), P()), check_vma=False))
+        out_specs=(P(), P())))
 
 
 # ---------------------------------------------------------------------------

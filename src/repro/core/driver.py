@@ -28,10 +28,13 @@ import jax.numpy as jnp
 
 from repro.core.sgns import SGNSConfig
 from repro.core.async_trainer import AsyncShardTrainer, make_sync_epoch
+from repro.core.distributions import build_alias_table
 from repro.core.merge import StackedModels, merge as merge_models
 from repro.data.corpus import Corpus
+from repro.data.pairs import unigram_noise_probs
 from repro.data.vocab import Vocab, build_vocab, union_vocab, UNK
-from repro.data.pipeline import make_worker_streams
+from repro.data.pipeline import (
+    PairChunkStream, make_worker_streams, prefetch_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -84,13 +87,28 @@ def build_worker_vocabs(
 def _neg_cdfs(worker_vocabs: list[Vocab], power: float = 0.75) -> np.ndarray:
     cdfs = []
     for v in worker_vocabs:
-        p = v.counts.astype(np.float64) ** power
-        s = p.sum()
-        p = p / s if s > 0 else np.full_like(p, 1.0 / len(p))
+        p = unigram_noise_probs(v.counts, power)
         c = np.cumsum(p)
         c[-1] = 1.0
         cdfs.append(c)
     return np.stack(cdfs).astype(np.float32)
+
+
+def _neg_tables(worker_vocabs: list[Vocab], sampler: str = "cdf",
+                power: float = 0.75):
+    """Stacked per-worker noise tables in the layout ``sampler`` draws
+    from: (n, V) CDFs, or {'prob': (n, V), 'alias': (n, V)} Vose tables."""
+    if sampler == "cdf":
+        return jnp.asarray(_neg_cdfs(worker_vocabs, power))
+    if sampler == "alias":
+        probs, aliases = [], []
+        for v in worker_vocabs:
+            prob, alias = build_alias_table(unigram_noise_probs(v.counts, power))
+            probs.append(prob)
+            aliases.append(alias)
+        return {"prob": jnp.asarray(np.stack(probs), dtype=jnp.float32),
+                "alias": jnp.asarray(np.stack(aliases), dtype=jnp.int32)}
+    raise ValueError(f"unknown negative sampler {sampler!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +142,10 @@ def train_submodels(
     max_steps_per_epoch: int | None = None,
     sparse: bool = True,
     row_grad_fn=None,
+    sampler: str = "cdf",
+    steps_per_chunk: int = 128,
+    prefetch: int = 2,
+    sentences_per_block: int = 1024,
 ) -> PipelineResult:
     rate = rate if rate is not None else 1.0 / num_workers
     window = window if window is not None else cfg.window
@@ -133,7 +155,7 @@ def train_submodels(
         corpus, raw_vocab_size, strategy, num_workers, rate,
         max_vocab=max_vocab, base_min_count=base_min_count, seed=seed)
     cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": union.size})
-    neg_cdf = jnp.asarray(_neg_cdfs(worker_vocabs))
+    neg_table = _neg_tables(worker_vocabs, sampler=sampler)
     t_vocab = time.perf_counter() - t0
 
     # Pair streams per worker (worker vocab projected into union ids).
@@ -144,46 +166,54 @@ def train_submodels(
             rate=rate, window=window, subsample_t=subsample_t, seed=seed)[w]
         streams.append(s)
 
-    # Estimate steps/epoch from epoch-0 sample sizes (kept equal across
-    # workers — shorter streams tile, as word2vec re-iterates its shard).
-    probe = [s.pairs(0) for s in streams]
-    min_pairs = min(len(c) for c, _ in probe)
+    # Size steps/epoch from a streamed epoch-0 count (O(block) memory —
+    # no epoch of pairs is ever materialized; kept equal across workers,
+    # shorter streams wrap, as word2vec re-iterates its shard). The count
+    # stops as soon as the step cap is known to be reached.
+    count_cap = (None if max_steps_per_epoch is None
+                 else max_steps_per_epoch * batch_size)
+    min_pairs = min(s.count_pairs(0, sentences_per_block, max_pairs=count_cap)
+                    for s in streams)
+    if min_pairs == 0:
+        raise ValueError("a worker drew an empty sample")
     steps = max(1, min_pairs // batch_size)
     if max_steps_per_epoch is not None:
         steps = min(steps, max_steps_per_epoch)
+    # Fit the epoch into whole fixed-shape chunks (one compile total)
+    # without exceeding `steps`: shrink the chunk, never round the epoch
+    # up past the cap.
+    num_chunks = -(-steps // min(steps_per_chunk, steps))
+    chunk_steps = steps // num_chunks
+    steps = num_chunks * chunk_steps
     total_steps = steps * epochs
 
     trainer = AsyncShardTrainer(
         cfg=cfg, num_workers=num_workers, total_steps=total_steps,
-        backend=backend, mesh=mesh, sparse=sparse, row_grad_fn=row_grad_fn)
+        backend=backend, mesh=mesh, sparse=sparse, row_grad_fn=row_grad_fn,
+        sampler=sampler)
     params = trainer.init(jax.random.PRNGKey(cfg.seed))
+
+    chunk_stream = PairChunkStream(
+        streams, batch_size=batch_size, steps_per_chunk=chunk_steps,
+        sentences_per_block=sentences_per_block)
 
     losses = []
     t_train0 = time.perf_counter()
-    need = steps * batch_size
     for epoch in range(epochs):
-        centers = np.zeros((num_workers, need), dtype=np.int32)
-        contexts = np.zeros((num_workers, need), dtype=np.int32)
-        for w, s in enumerate(streams):
-            if epoch == 0:
-                c, x = probe[w]
-            else:
-                c, x = s.pairs(epoch)
-            if len(c) == 0:
-                raise ValueError(f"worker {w} epoch {epoch}: empty sample")
-            reps = int(np.ceil(need / len(c)))
-            centers[w] = np.tile(c, reps)[:need]
-            contexts[w] = np.tile(x, reps)[:need]
-        shp = (num_workers, steps, batch_size)
-        params, ep_losses = trainer.epoch(
-            params,
-            jnp.asarray(centers.reshape(shp)),
-            jnp.asarray(contexts.reshape(shp)),
-            neg_cdf,
-            jax.random.PRNGKey(seed * 1000 + epoch),
-            step0=epoch * steps,
-        )
-        losses.append(float(jnp.mean(ep_losses)))
+        ep_key = jax.random.PRNGKey(seed * 1000 + epoch)
+        ep_losses = []
+        # Host extraction + H2D copy of chunk k+1 overlap the device's
+        # work on chunk k (async dispatch; queue depth = `prefetch`).
+        chunk_it = prefetch_chunks(
+            chunk_stream.chunks(epoch, num_chunks), depth=prefetch)
+        for k, (centers, contexts) in enumerate(chunk_it):
+            params, chunk_losses = trainer.epoch(
+                params, centers, contexts, neg_table,
+                jax.random.fold_in(ep_key, k),
+                step0=epoch * steps + k * chunk_steps,
+            )
+            ep_losses.append(chunk_losses)
+        losses.append(float(jnp.mean(jnp.concatenate(ep_losses, axis=-1))))
     jax.block_until_ready(params)
     t_train = time.perf_counter() - t_train0
 
@@ -231,17 +261,16 @@ def train_sync_baseline(
     seed: int = 0,
     max_steps_per_epoch: int | None = None,
     mesh=None,
+    sampler: str = "cdf",
 ):
     from repro.data.pairs import extract_pairs
 
     vocab = build_vocab(corpus, raw_vocab_size, min_count=1, max_size=max_vocab)
     cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": vocab.size})
     window = window if window is not None else cfg.window
-    p = vocab.counts.astype(np.float64) ** 0.75
-    p /= p.sum()
-    cdf = np.cumsum(p)
-    cdf[-1] = 1.0
-    neg_cdf = jnp.asarray(cdf, dtype=jnp.float32)
+    neg_table = _neg_tables([vocab], sampler=sampler)
+    # single-model: drop the stacked leading worker axis
+    neg_table = jax.tree.map(lambda a: a[0], neg_table)
 
     centers, contexts = extract_pairs(corpus, vocab, window=window,
                                       subsample_t=subsample_t, seed=seed)
@@ -249,7 +278,8 @@ def train_sync_baseline(
     if max_steps_per_epoch is not None:
         steps = min(steps, max_steps_per_epoch)
     total_steps = steps * epochs
-    epoch_fn = make_sync_epoch(cfg, neg_cdf, total_steps, mesh=mesh)
+    epoch_fn = make_sync_epoch(cfg, neg_table, total_steps, mesh=mesh,
+                               sampler=sampler)
 
     from repro.core import sgns as sgns_mod
     params = sgns_mod.init_params(jax.random.PRNGKey(cfg.seed), cfg)

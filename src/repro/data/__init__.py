@@ -13,10 +13,18 @@ from repro.data.corpus import SemanticCorpusModel, Corpus
 from repro.data.vocab import Vocab, build_vocab
 from repro.data.pairs import (
     extract_pairs,
+    AliasSampler,
     NegativeSampler,
+    negative_sampler_fn,
     subsample_mask,
 )
-from repro.data.pipeline import WorkerStream, make_worker_streams
+from repro.data.pipeline import (
+    PairChunkStream,
+    WorkerStream,
+    make_worker_streams,
+    prefetch_chunks,
+    stacked_pair_batches,
+)
 
 __all__ = [
     "SemanticCorpusModel",
@@ -24,8 +32,13 @@ __all__ = [
     "Vocab",
     "build_vocab",
     "extract_pairs",
+    "AliasSampler",
     "NegativeSampler",
+    "negative_sampler_fn",
     "subsample_mask",
+    "PairChunkStream",
     "WorkerStream",
     "make_worker_streams",
+    "prefetch_chunks",
+    "stacked_pair_batches",
 ]

@@ -89,18 +89,87 @@ def extract_pairs(
     return centers, contexts
 
 
+# ---------------------------------------------------------------------------
+# Negative sampling: two interchangeable on-device draw primitives.
+#
+# ``cdf``   — inverse-CDF lookup, O(log V) searchsorted per draw. The
+#             original path; kept as the distribution oracle.
+# ``alias`` — Vose alias table, O(1) per draw: one randint + one uniform
+#             + two gathers. The production path for large vocabularies.
+#
+# Both take the table as a traced argument so the same jitted epoch
+# function serves every worker's own noise distribution.
+# ---------------------------------------------------------------------------
+def sample_negatives_cdf(
+    cdf: jax.Array, key: jax.Array, shape: tuple[int, ...]
+) -> jax.Array:
+    u = jax.random.uniform(key, shape, dtype=jnp.float32)
+    idx = jnp.searchsorted(cdf, u)
+    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)
+
+
+def sample_negatives_alias(
+    table: dict, key: jax.Array, shape: tuple[int, ...]
+) -> jax.Array:
+    prob, alias = table["prob"], table["alias"]
+    k_idx, k_u = jax.random.split(key)
+    idx = jax.random.randint(k_idx, shape, 0, prob.shape[0], dtype=jnp.int32)
+    u = jax.random.uniform(k_u, shape, dtype=jnp.float32)
+    return jnp.where(u < prob[idx], idx, alias[idx]).astype(jnp.int32)
+
+
+NEGATIVE_SAMPLERS = {
+    "cdf": sample_negatives_cdf,
+    "alias": sample_negatives_alias,
+}
+
+
+def negative_sampler_fn(kind: str):
+    """``fn(table, key, shape) -> (shape,) int32`` for ``kind``."""
+    try:
+        return NEGATIVE_SAMPLERS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown negative sampler {kind!r}; expected one of "
+            f"{sorted(NEGATIVE_SAMPLERS)}") from None
+
+
+def unigram_noise_probs(vocab_counts: np.ndarray, power: float = 0.75) -> np.ndarray:
+    """word2vec noise distribution: unigram counts raised to 3/4."""
+    p = np.asarray(vocab_counts, dtype=np.float64) ** power
+    s = p.sum()
+    return p / s if s > 0 else np.full_like(p, 1.0 / len(p))
+
+
 class NegativeSampler:
     """Unigram^0.75 sampler: inverse-CDF lookup, jittable and vectorized."""
 
     def __init__(self, vocab_counts: np.ndarray, power: float = 0.75):
-        p = vocab_counts.astype(np.float64) ** power
-        p /= p.sum()
+        p = unigram_noise_probs(vocab_counts, power)
         cdf = np.cumsum(p)
         cdf[-1] = 1.0
         self.cdf = jnp.asarray(cdf, dtype=jnp.float32)
         self.probs = jnp.asarray(p, dtype=jnp.float32)
 
     def sample(self, key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
-        u = jax.random.uniform(key, shape, dtype=jnp.float32)
-        idx = jnp.searchsorted(self.cdf, u)
-        return jnp.clip(idx, 0, self.cdf.shape[0] - 1).astype(jnp.int32)
+        return sample_negatives_cdf(self.cdf, key, shape)
+
+
+class AliasSampler:
+    """Unigram^0.75 sampler via Vose's alias method: O(V) build, O(1) draw."""
+
+    def __init__(self, vocab_counts: np.ndarray, power: float = 0.75):
+        from repro.core.distributions import build_alias_table
+
+        p = unigram_noise_probs(vocab_counts, power)
+        prob, alias = build_alias_table(p)
+        self.prob = jnp.asarray(prob, dtype=jnp.float32)
+        self.alias = jnp.asarray(alias, dtype=jnp.int32)
+        self.probs = jnp.asarray(p, dtype=jnp.float32)
+
+    @property
+    def table(self) -> dict:
+        return {"prob": self.prob, "alias": self.alias}
+
+    def sample(self, key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+        return sample_negatives_alias(self.table, key, shape)

@@ -11,6 +11,8 @@ RANDOM SAMPLING. No shuffle network phase exists at all.
 
 from __future__ import annotations
 
+import queue
+import threading
 from dataclasses import dataclass
 from typing import Iterator
 
@@ -59,6 +61,46 @@ class WorkerStream:
             max_pairs=max_pairs,
         )
 
+    def pair_blocks(
+        self, epoch: int, sentences_per_block: int = 1024
+    ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Stream (centers, contexts) per sentence-block instead of
+        materializing the whole epoch.
+
+        Windows never cross sentence boundaries, so block-wise extraction
+        yields the same pair *set* as :meth:`pairs` — only the RNG stream
+        (subsampling, dynamic windows) and the shuffle scope (within a
+        block rather than global) differ. Peak host memory is one block's
+        pairs, independent of corpus size. Deterministic in
+        (seed, worker, epoch, block).
+        """
+        idx = self.sentence_indices(epoch)
+        base = self.seed * 7919 + self.worker * 104729 + epoch
+        for b, start in enumerate(range(0, len(idx), sentences_per_block)):
+            sub = self.corpus.select(idx[start : start + sentences_per_block])
+            c, x = extract_pairs(
+                sub,
+                self.vocab,
+                window=self.window,
+                subsample_t=self.subsample_t,
+                seed=base * 1_000_003 + b,
+            )
+            if len(c):
+                yield c, x
+
+    def count_pairs(self, epoch: int, sentences_per_block: int = 1024,
+                    max_pairs: int | None = None) -> int:
+        """Number of pairs the block stream yields for ``epoch``, counted
+        block-by-block in O(block) memory (no epoch materialization).
+        Stops early once ``max_pairs`` is reached — callers sizing a
+        capped epoch don't pay for counting the tail."""
+        total = 0
+        for c, _ in self.pair_blocks(epoch, sentences_per_block):
+            total += len(c)
+            if max_pairs is not None and total >= max_pairs:
+                break
+        return total
+
     def batches(
         self, epoch: int, batch_size: int, max_pairs: int | None = None
     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
@@ -91,6 +133,137 @@ def make_worker_streams(
     ]
 
 
+@dataclass
+class PairChunkStream:
+    """Streaming, fixed-shape chunk producer for the async shard trainer.
+
+    Replaces the materialize-everything path: instead of extracting one
+    giant per-epoch pair array and ``np.tile``-ing it, each worker's
+    epoch is consumed block-of-sentences at a time
+    (:meth:`WorkerStream.pair_blocks`) and packed into
+    ``(n_workers, steps_per_chunk, batch)`` buffers whose shape never
+    changes — so the trainer compiles once and host memory stays
+    O(n_workers · chunk + block), independent of corpus size.
+
+    Workers whose epoch runs dry wrap around (the block stream is
+    deterministic, so a wrap replays the same pairs — exactly the old
+    ``np.tile`` semantics); sub-models stay perfectly load-balanced.
+    """
+
+    streams: list[WorkerStream]
+    batch_size: int
+    steps_per_chunk: int
+    sentences_per_block: int = 1024
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.streams)
+
+    @property
+    def chunk_pairs(self) -> int:
+        return self.batch_size * self.steps_per_chunk
+
+    def chunks(
+        self, epoch: int, num_chunks: int | None = None
+    ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Yield ``num_chunks`` (centers, contexts) arrays of shape
+        (n_workers, steps_per_chunk, batch); infinite when ``None``."""
+        n, need = self.num_workers, self.chunk_pairs
+        gens = [s.pair_blocks(epoch, self.sentences_per_block)
+                for s in self.streams]
+        bufs: list[list[np.ndarray]] = [[] for _ in range(n)]
+        xufs: list[list[np.ndarray]] = [[] for _ in range(n)]
+        have = [0] * n
+        pass_pairs = [0] * n   # pairs seen since this worker's last wrap
+
+        done = 0
+        while num_chunks is None or done < num_chunks:
+            centers = np.empty((n, need), dtype=np.int32)
+            contexts = np.empty((n, need), dtype=np.int32)
+            for w in range(n):
+                while have[w] < need:
+                    try:
+                        c, x = next(gens[w])
+                    except StopIteration:
+                        if pass_pairs[w] == 0:
+                            raise ValueError(
+                                f"worker {w} epoch {epoch}: empty sample")
+                        pass_pairs[w] = 0
+                        gens[w] = self.streams[w].pair_blocks(
+                            epoch, self.sentences_per_block)
+                        continue
+                    bufs[w].append(c)
+                    xufs[w].append(x)
+                    have[w] += len(c)
+                    pass_pairs[w] += len(c)
+                flat_c = np.concatenate(bufs[w])
+                flat_x = np.concatenate(xufs[w])
+                centers[w] = flat_c[:need]
+                contexts[w] = flat_x[:need]
+                bufs[w] = [flat_c[need:]]
+                xufs[w] = [flat_x[need:]]
+                have[w] -= need
+            shape = (n, self.steps_per_chunk, self.batch_size)
+            yield centers.reshape(shape), contexts.reshape(shape)
+            done += 1
+
+
+_SENTINEL = object()
+
+
+def prefetch_chunks(iterator, depth: int = 2, to_device: bool = True):
+    """Double-buffered prefetch: a background thread extracts the next
+    chunk(s) and (optionally) dispatches the host→device transfer while
+    the caller's device computation runs — jax dispatch is asynchronous,
+    so ``jnp.asarray`` here starts the copy without blocking on it.
+
+    ``depth`` bounds the queue, so at most ``depth`` chunks are ever
+    resident beyond the one being consumed.
+    """
+    if depth < 1:
+        raise ValueError("prefetch depth must be >= 1")
+    import jax.numpy as jnp
+
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def put(item) -> bool:
+        # Bounded put that gives up when the consumer abandons the
+        # generator — otherwise the thread would block forever holding
+        # up to `depth` device-resident chunks.
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def produce():
+        try:
+            for item in iterator:
+                if to_device:
+                    item = tuple(jnp.asarray(a) for a in item)
+                if not put(item):
+                    return
+            put(_SENTINEL)
+        except BaseException as e:  # surface extraction errors to the consumer
+            put(e)
+
+    threading.Thread(target=produce, daemon=True,
+                     name="prefetch_chunks").start()
+    try:
+        while True:
+            item = q.get()
+            if item is _SENTINEL:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+
+
 def stacked_pair_batches(
     streams: list[WorkerStream],
     epoch: int,
@@ -99,19 +272,10 @@ def stacked_pair_batches(
 ) -> tuple[np.ndarray, np.ndarray]:
     """(n_workers, num_batches, batch) arrays for the async shard trainer.
 
-    Streams shorter than requested wrap around — word2vec also iterates
-    its stream multiple times; sub-models stay perfectly load-balanced.
+    Materialized view of :class:`PairChunkStream` — one chunk covering
+    the whole request, so streamed and materialized consumers see
+    byte-identical batches for the same seed.
     """
-    n = len(streams)
-    need = batch_size * num_batches
-    centers = np.zeros((n, need), dtype=np.int32)
-    contexts = np.zeros((n, need), dtype=np.int32)
-    for w, s in enumerate(streams):
-        c, x = s.pairs(epoch)
-        if len(c) == 0:
-            raise ValueError(f"worker {w} drew an empty sample")
-        reps = int(np.ceil(need / len(c)))
-        centers[w] = np.tile(c, reps)[:need]
-        contexts[w] = np.tile(x, reps)[:need]
-    shape = (n, num_batches, batch_size)
-    return centers.reshape(shape), contexts.reshape(shape)
+    stream = PairChunkStream(streams, batch_size=batch_size,
+                             steps_per_chunk=num_batches)
+    return next(stream.chunks(epoch, num_chunks=1))

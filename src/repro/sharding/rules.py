@@ -61,6 +61,19 @@ _RULES_3D_EXPERT = {  # (E, in, out)
 _VEC_SHARD_MIN = 4096  # 1-D params smaller than this are replicated
 
 
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Device-free mesh for spec computation, on any supported jax.
+
+    jax ≥ 0.5 takes ``AbstractMesh(axis_sizes, axis_names)``; jax 0.4.x
+    takes a single ``((name, size), ...)`` shape tuple.
+    """
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # jax 0.4.x signature
+        return AM(tuple(zip(axis_names, axis_sizes)))
+
+
 def _axis_sizes(mesh) -> dict[str, int]:
     # works for both Mesh and AbstractMesh
     return {name: int(size) for name, size in mesh.shape.items()}

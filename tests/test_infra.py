@@ -8,7 +8,7 @@ import pytest
 
 from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step_path
 from repro.optim import get_optimizer
-from repro.sharding.rules import param_spec, data_spec, cache_spec
+from repro.sharding.rules import abstract_mesh, param_spec, data_spec, cache_spec
 from repro.launch.hlo_cost import (
     parse_module, analyze_hlo, shape_elems_bytes, HloCostModel)
 from jax.sharding import PartitionSpec as P
@@ -69,7 +69,7 @@ def test_adafactor_state_is_factored():
 def mesh16():
     # single real device is fine: specs are pure functions of axis sizes,
     # but Mesh wants real devices — use an abstract mesh instead.
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_param_spec_rules(mesh16):
@@ -101,7 +101,7 @@ def test_data_and_cache_specs(mesh16):
 
 
 def test_multipod_batch_axes():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert data_spec((256, 4096), mesh) == P(("pod", "data"), None)
 
 

@@ -1,0 +1,219 @@
+"""Streaming pair pipeline: chunk determinism, equivalence with the
+materialized path, wrap-around, and prefetch behaviour."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.corpus import SemanticCorpusModel
+from repro.data.pipeline import (
+    PairChunkStream, make_worker_streams, prefetch_chunks,
+    stacked_pair_batches)
+from repro.data.vocab import build_vocab
+
+
+@pytest.fixture(scope="module")
+def streams():
+    gen = SemanticCorpusModel.create(vocab_size=400, seed=0)
+    corpus = gen.generate(num_sentences=1500, seed=1)
+    vocab = build_vocab(corpus, 400, min_count=1, max_size=None)
+    return make_worker_streams(corpus, vocab, num_workers=3, strategy="shuffle",
+                               window=4, seed=9)
+
+
+def test_chunks_have_fixed_shape(streams):
+    st = PairChunkStream(streams, batch_size=32, steps_per_chunk=4,
+                         sentences_per_block=128)
+    for c, x in st.chunks(epoch=0, num_chunks=3):
+        assert c.shape == x.shape == (3, 4, 32)
+        assert c.dtype == x.dtype == np.int32
+
+
+def test_stream_is_deterministic(streams):
+    st = PairChunkStream(streams, batch_size=32, steps_per_chunk=4,
+                         sentences_per_block=128)
+    a = list(st.chunks(epoch=1, num_chunks=4))
+    b = list(st.chunks(epoch=1, num_chunks=4))
+    for (c1, x1), (c2, x2) in zip(a, b):
+        np.testing.assert_array_equal(c1, c2)
+        np.testing.assert_array_equal(x1, x2)
+    # a different epoch draws a different (shuffle) sample
+    c3, _ = next(st.chunks(epoch=2, num_chunks=1))
+    assert not np.array_equal(a[0][0], c3)
+
+
+def test_stream_matches_materialized_path(streams):
+    """Same seed ⇒ the streamed chunks concatenate to exactly the batches
+    the materialized path produces (it is a one-chunk view of the same
+    stream), including the wrap-around region."""
+    B, S, K = 64, 8, 6
+    st = PairChunkStream(streams, batch_size=B, steps_per_chunk=S,
+                         sentences_per_block=256)
+    cs, xs = zip(*st.chunks(epoch=0, num_chunks=K))
+    streamed_c = np.concatenate(cs, axis=1)
+    streamed_x = np.concatenate(xs, axis=1)
+    # one chunk covering the whole request == K chunks, concatenated
+    mat = PairChunkStream(streams, batch_size=B, steps_per_chunk=S * K,
+                          sentences_per_block=256)
+    mat_c, mat_x = next(mat.chunks(epoch=0, num_chunks=1))
+    np.testing.assert_array_equal(streamed_c, mat_c)
+    np.testing.assert_array_equal(streamed_x, mat_x)
+    # and stacked_pair_batches is exactly that one-chunk view (at its
+    # default block size)
+    spb_c, spb_x = stacked_pair_batches(streams, epoch=0, batch_size=B,
+                                        num_batches=S * K)
+    dflt = PairChunkStream(streams, batch_size=B, steps_per_chunk=S * K)
+    dflt_c, dflt_x = next(dflt.chunks(epoch=0, num_chunks=1))
+    np.testing.assert_array_equal(spb_c, dflt_c)
+    np.testing.assert_array_equal(spb_x, dflt_x)
+
+
+def test_wraparound_replays_epoch(streams):
+    """Requesting more pairs than an epoch holds wraps deterministically —
+    the old np.tile semantics, without materializing anything."""
+    n_pairs = min(s.count_pairs(0, sentences_per_block=256) for s in streams)
+    B = 64
+    S = (n_pairs // B) + 4     # guaranteed past the wrap point
+    st = PairChunkStream(streams, batch_size=B, steps_per_chunk=S,
+                         sentences_per_block=256)
+    c, _ = next(st.chunks(epoch=0, num_chunks=1))
+    flat = c.reshape(3, -1)
+    per_epoch = [s.count_pairs(0, sentences_per_block=256) for s in streams]
+    for w in range(3):
+        wrap = per_epoch[w]
+        if wrap < flat.shape[1]:
+            tail = min(flat.shape[1] - wrap, wrap)
+            np.testing.assert_array_equal(flat[w, wrap:wrap + tail],
+                                          flat[w, :tail])
+
+
+def test_empty_sample_raises():
+    gen = SemanticCorpusModel.create(vocab_size=50, seed=0)
+    corpus = gen.generate(num_sentences=40, seed=1)
+    vocab = build_vocab(corpus, 50, min_count=1, max_size=None)
+    streams = make_worker_streams(corpus, vocab, num_workers=2,
+                                  strategy="random", window=2, seed=0,
+                                  subsample_t=1e-12)  # drop ~everything
+    st = PairChunkStream(streams, batch_size=64, steps_per_chunk=4)
+    with pytest.raises(ValueError, match="empty sample"):
+        next(st.chunks(epoch=0, num_chunks=1))
+
+
+def test_count_pairs_matches_block_stream(streams):
+    s = streams[0]
+    total = sum(len(c) for c, _ in s.pair_blocks(0, sentences_per_block=200))
+    assert s.count_pairs(0, sentences_per_block=200) == total
+    assert total > 0
+
+
+# ----------------------------------------------------------------- prefetch
+def test_prefetch_preserves_order_and_values(streams):
+    st = PairChunkStream(streams, batch_size=32, steps_per_chunk=4,
+                         sentences_per_block=128)
+    direct = list(st.chunks(epoch=0, num_chunks=5))
+    fetched = list(prefetch_chunks(st.chunks(epoch=0, num_chunks=5), depth=2))
+    assert len(fetched) == 5
+    for (dc, dx), (fc, fx) in zip(direct, fetched):
+        np.testing.assert_array_equal(dc, np.asarray(fc))
+        np.testing.assert_array_equal(dx, np.asarray(fx))
+
+
+def test_prefetch_propagates_errors():
+    def boom():
+        yield (np.zeros((1, 1, 1), np.int32),) * 2
+        raise ValueError("exploded mid-stream")
+
+    it = prefetch_chunks(boom(), depth=2, to_device=False)
+    next(it)
+    with pytest.raises(ValueError, match="exploded mid-stream"):
+        next(it)
+
+
+def test_prefetch_producer_exits_when_consumer_abandons():
+    """Closing the generator mid-stream must release the producer thread
+    (it would otherwise block forever on the bounded queue)."""
+    import threading
+
+    def source():
+        for i in range(1000):
+            yield (np.zeros((1, 1, 1), np.int32),) * 2
+
+    it = prefetch_chunks(source(), depth=2, to_device=False)
+    next(it)
+    it.close()
+    deadline = time.time() + 5.0
+    while (any(t.name == "prefetch_chunks" and t.is_alive()
+               for t in threading.enumerate())
+           and time.time() < deadline):
+        time.sleep(0.02)
+    assert not any(t.name == "prefetch_chunks" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+def test_prefetch_rejects_bad_depth():
+    with pytest.raises(ValueError):
+        next(prefetch_chunks(iter([]), depth=0))
+
+
+def test_prefetch_overlaps_producer_with_consumer():
+    """Smoke test for the double buffering: while the consumer sits on the
+    first chunk, the producer runs ahead and fills the queue."""
+    produced = []
+
+    def source():
+        for i in range(4):
+            produced.append(i)
+            yield (np.full((1, 1, 1), i, np.int32),) * 2
+
+    it = prefetch_chunks(source(), depth=2, to_device=False)
+    first = next(it)
+    deadline = time.time() + 5.0
+    # depth-2 queue + the producer's in-flight item ⇒ ≥ 3 produced while
+    # the consumer holds chunk 0
+    while len(produced) < 3 and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(produced) >= 3, produced
+    rest = list(it)
+    assert int(np.asarray(first[0]).ravel()[0]) == 0
+    assert [int(np.asarray(c).ravel()[0]) for c, _ in rest] == [1, 2, 3]
+
+
+# ------------------------------------------------------------ driver smoke
+def test_driver_streams_without_epoch_materialization(monkeypatch):
+    """train_submodels goes through PairChunkStream (WorkerStream.pairs —
+    the materializing path — is never called) and trains to finite loss."""
+    import repro.data.pipeline as pl
+    from repro.core.driver import train_submodels
+    from repro.core.sgns import SGNSConfig
+
+    def forbidden(self, epoch, max_pairs=None):
+        raise AssertionError("materializing WorkerStream.pairs was called")
+
+    monkeypatch.setattr(pl.WorkerStream, "pairs", forbidden)
+    gen = SemanticCorpusModel.create(vocab_size=300, seed=0)
+    corpus = gen.generate(num_sentences=1200, seed=1)
+    res = train_submodels(
+        corpus, 300, strategy="shuffle", num_workers=2,
+        cfg=SGNSConfig(vocab_size=0, dim=16, window=3, negatives=2),
+        epochs=2, batch_size=128, window=3, max_vocab=None,
+        max_steps_per_epoch=12, steps_per_chunk=4, sampler="alias")
+    assert len(res.losses) == 2
+    assert np.isfinite(res.losses).all()
+    assert res.timings["steps_per_epoch"] % 4 == 0
+
+
+def test_driver_never_exceeds_max_steps_per_epoch():
+    """Chunk rounding shrinks the chunk rather than overshooting the cap."""
+    from repro.core.driver import train_submodels
+    from repro.core.sgns import SGNSConfig
+
+    gen = SemanticCorpusModel.create(vocab_size=300, seed=0)
+    corpus = gen.generate(num_sentences=1200, seed=1)
+    res = train_submodels(
+        corpus, 300, strategy="shuffle", num_workers=2,
+        cfg=SGNSConfig(vocab_size=0, dim=8, window=3, negatives=2),
+        epochs=1, batch_size=128, window=3, max_vocab=None,
+        max_steps_per_epoch=10, steps_per_chunk=4)
+    # cap 10, chunk 4 → 3 chunks of 3 steps = 9 ≤ 10, never 12
+    assert res.timings["steps_per_epoch"] <= 10
