@@ -1,5 +1,8 @@
 """SGNS step micro-benchmark: jnp reference path throughput (CPU-real),
-plus Pallas-kernel equivalence check (interpret mode; Mosaic on TPU)."""
+Pallas-kernel equivalence check (interpret mode; Mosaic on TPU), and an
+update-engine smoke sweep — one timed step per registered engine, so the
+benchmark artifact shows every step path (dense / sparse / pallas /
+pallas_fused) side by side."""
 
 from __future__ import annotations
 
@@ -11,6 +14,8 @@ import numpy as np
 
 from benchmarks.common import timer
 from repro.core import sgns
+from repro.core.engine import ENGINE_NAMES, get_engine
+from repro.data.pairs import build_noise_table
 from repro.kernels import ops, ref
 
 
@@ -24,7 +29,24 @@ def _bench(fn, args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # µs
 
 
-def run(B=1024, K=5, D=512, V=50_000):
+def engine_sweep(cfg, params, c, x, counts, iters=10, specs=ENGINE_NAMES):
+    """Time one engine step per spec (same data, own table layout).
+    Returns {engine_spec: µs_per_step} — specs may carry a sampler
+    suffix ("sparse:alias"), which is honored, not stripped."""
+    out = {}
+    for name in specs:
+        eng = get_engine(name)
+        table = build_noise_table(counts, kind=eng.table_kind)
+        step = jax.jit(eng.make_step(cfg, total_steps=1000))
+        key = jax.random.PRNGKey(3)
+        p0 = jax.tree.map(jnp.copy, params)
+        us = _bench(lambda: step(p0, c, x, table, key, jnp.int32(1)), (),
+                    iters=iters)
+        out[str(name)] = us
+    return out
+
+
+def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
     cfg = sgns.SGNSConfig(vocab_size=V, dim=D, negatives=K)
     params = sgns.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
@@ -45,17 +67,41 @@ def run(B=1024, K=5, D=512, V=50_000):
     lk, dwk, _, _ = ops.sgns_row_grads(w, cp, cn, interpret=True)
     lr_, dwr, _, _ = ref.sgns_row_grads_ref(w, cp, cn)
     err = float(jnp.max(jnp.abs(dwk - dwr)))
+
+    # fused engine vs sparse reference, identical negatives (replayed
+    # from the kernel's counter PRNG) — end-to-end step equivalence
+    counts = rng.zipf(1.3, V).astype(np.float64)
+    eng_f = get_engine("pallas_fused")
+    table = build_noise_table(counts, kind="alias")
+    key = jax.random.PRNGKey(9)
+    pf, _ = eng_f.make_step(cfg, 1000)(
+        jax.tree.map(jnp.copy, params), c, x, table, key, jnp.int32(0))
+    ids = eng_f.sample(table, key, (B, K))
+    ps, _ = sgns.train_step_sparse(jax.tree.map(jnp.copy, params), c, x, ids,
+                                   jnp.float32(cfg.lr))
+    fused_err = float(jnp.max(jnp.abs(pf["W"] - ps["W"])))
+
+    engine_us = engine_sweep(cfg, params, c, x, counts,
+                             iters=3 if quick else 10, specs=engines)
     return {
         "us_sparse_step": us_sparse,
         "us_dense_step": us_dense,
         "pairs_per_s_sparse": B / (us_sparse / 1e6),
         "kernel_max_err": err,
+        "fused_vs_sparse_err": fused_err,
+        "engine_us": engine_us,
+        "B": B,
     }
 
 
-def main(quick=False):
+def main(quick=False, engine=None):
+    """``engine`` (name or spec string) restricts the sweep to one
+    engine — ``python -m benchmarks.bench_kernel --engine pallas_fused``."""
+    if engine is not None:
+        get_engine(engine)                  # validate the spec up front
+    specs = ENGINE_NAMES if engine is None else (engine,)
     with timer() as t:
-        r = run()
+        r = run(quick=quick, engines=specs)
     print(f"\n[kernel] SGNS step micro-bench ({t.s:.1f}s)")
     print(f"sparse step: {r['us_sparse_step']:9.1f} µs/call "
           f"({r['pairs_per_s_sparse']:.2e} pairs/s on 1 CPU)")
@@ -63,8 +109,21 @@ def main(quick=False):
           f"(materializes (V,d) grad — the path the sparse step replaces)")
     print(f"pallas kernel vs oracle max|Δ| = {r['kernel_max_err']:.2e} "
           f"(interpret mode)")
+    print(f"pallas_fused step vs sparse ref max|Δ| = "
+          f"{r['fused_vs_sparse_err']:.2e} (same in-kernel negatives)")
+    for name, us in r["engine_us"].items():
+        print(f"engine {name:12s}: {us:9.1f} µs/step "
+              f"({r['B'] / (us / 1e6):.2e} pairs/s)")
     return r
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default=None,
+                    help="time only this engine's step "
+                         "(dense | sparse | pallas | pallas_fused)")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    main(quick=a.quick, engine=a.engine)

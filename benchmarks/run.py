@@ -5,7 +5,8 @@
   bench_merge     — Table 3 (Concat/PCA/ALiR/average/single)
   bench_wallclock — Table 4 + Fig 2 (training/merge wall-clock, scaling)
   bench_oov       — Fig 3   (missing-vocabulary reconstruction)
-  bench_kernel    — SGNS step micro-bench + Pallas/oracle check
+  bench_kernel    — SGNS step micro-bench + Pallas/oracle check +
+                    update-engine sweep (dense/sparse/pallas/pallas_fused)
   roofline_table  — §Roofline terms from the dry-run sweeps
 
 Prints a final ``name,us_per_call,derived`` CSV summary.
@@ -73,7 +74,10 @@ def main(argv=None) -> None:
         lambda rows: "alias_speedup@V=%d=%.1fx" % (
             rows[-1]["V"], rows[-1]["speedup"]))
     run("kernel_sgns", bench_kernel.main,
-        lambda r: "pairs_per_s=%.2e" % r["pairs_per_s_sparse"])
+        lambda r: "pairs_per_s=%.2e;fused_err=%.1e;engines=%s" % (
+            r["pairs_per_s_sparse"], r["fused_vs_sparse_err"],
+            "|".join("%s:%.0fus" % (n, us)
+                     for n, us in r["engine_us"].items())))
     run("roofline", roofline_table.main, lambda r: "see tables above")
 
     lines = [f"{name},{us:.1f},{derived}" for name, us, derived in csv]

@@ -12,8 +12,10 @@ at the defaults; pass smaller --steps/--vocab for a quick pass.
 Ingestion is the streaming pipeline: pairs are extracted block-of-
 sentences at a time into fixed-shape chunks and prefetched to the device
 while it trains — no epoch of pairs is ever materialized in host memory.
-Negatives come from the O(1) alias sampler (``--sampler cdf`` for the
-binary-search oracle).
+The per-step compute is an update engine (``--engine``): the default
+``sparse:alias`` draws negatives from the O(1) alias sampler;
+``pallas_fused`` moves the draw inside the step kernel;
+``sparse:cdf`` is the binary-search oracle.
 """
 
 import argparse
@@ -37,8 +39,9 @@ def main():
     ap.add_argument("--dim", type=int, default=500)
     ap.add_argument("--workers", type=int, default=10)
     ap.add_argument("--epochs", type=int, default=3)
-    ap.add_argument("--sampler", choices=("alias", "cdf"), default="alias",
-                    help="negative sampler: O(1) alias table or O(log V) CDF")
+    ap.add_argument("--engine", default="sparse:alias",
+                    help="update engine (dense | sparse | pallas | "
+                         "pallas_fused, optional ':cdf'/':alias' suffix)")
     ap.add_argument("--steps-per-chunk", type=int, default=128,
                     help="steps per fixed-shape streamed chunk")
     ap.add_argument("--prefetch", type=int, default=2,
@@ -61,7 +64,7 @@ def main():
         corpus, args.vocab, strategy="shuffle", num_workers=args.workers,
         cfg=cfg, epochs=args.epochs, batch_size=1024, window=5,
         max_vocab=args.vocab, base_min_count=10,
-        max_steps_per_epoch=args.steps, sampler=args.sampler,
+        max_steps_per_epoch=args.steps, engine=args.engine,
         steps_per_chunk=args.steps_per_chunk, prefetch=args.prefetch)
     print(f"async training: {res.timings['train_s']:.1f}s total "
           f"({res.timings['train_s']/args.workers:.1f}s/worker projected "

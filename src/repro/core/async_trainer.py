@@ -8,6 +8,12 @@ collective anywhere in the step* — asserted by
 :func:`assert_no_collectives`, and visible as a zero collective-bytes
 roofline term (EXPERIMENTS §Roofline).
 
+The per-step compute itself (negative draw → row grads → apply) is an
+:class:`repro.core.engine.UpdateEngine`; every epoch builder here takes
+``engine=`` and stays agnostic to which step path (dense autodiff,
+sparse scatter-add, Pallas tile kernel, or the fully-fused in-kernel
+sampler) runs inside the scan.
+
 The synchronized strawman (`sync_train_epoch`) is conventional
 data-parallel SGNS: one table, batch sharded, gradient all-reduced every
 step — the TPU-native equivalent of the paper's Hogwild/MLLib baselines.
@@ -28,8 +34,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
 
 from repro.core import sgns
+from repro.core.engine import get_engine
 from repro.core.sgns import SGNSConfig
-from repro.data.pairs import negative_sampler_fn
 
 COLLECTIVE_RE = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
@@ -59,37 +65,24 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
 # ---------------------------------------------------------------------------
 # Single-worker epoch: scan over a fixed number of steps.
 # ---------------------------------------------------------------------------
-def make_worker_epoch(cfg: SGNSConfig, total_steps: int,
-                      sparse: bool = True, row_grad_fn=None,
-                      sampler: str = "cdf"):
+def make_worker_epoch(cfg: SGNSConfig, total_steps: int, engine="sparse"):
     """Returns epoch_fn(params, centers (S,B), contexts (S,B), neg_table, key, step0).
 
-    ``neg_table`` is the worker's *own* unigram^0.75 noise table — each
-    sub-model draws negatives from its own sample's noise distribution,
-    exactly as a standalone word2vec run on that sub-corpus would (paper
-    §3.2). Its shape depends on ``sampler``: a ``(V,)`` CDF for
-    ``'cdf'``, a ``{'prob', 'alias'}`` Vose table for ``'alias'``.
+    ``engine`` (an :class:`repro.core.engine.UpdateEngine` or spec
+    string) owns the whole per-step compute: negative draw, row grads,
+    parameter apply. ``neg_table`` is the worker's *own* unigram^0.75
+    noise table in the layout ``engine.table_kind`` names — a ``(V,)``
+    CDF or a ``{'prob', 'alias'}`` Vose table (each sub-model draws from
+    its own sample's noise distribution, paper §3.2).
     """
-    sample_negatives = negative_sampler_fn(sampler)
+    step = get_engine(engine).make_step(cfg, total_steps)
 
-    def step(params, centers_b, contexts_b, neg_cdf, key, step_idx):
-        negs = sample_negatives(neg_cdf, key, (centers_b.shape[0], cfg.negatives))
-        lr = sgns.linear_lr(step_idx, total_steps, cfg)
-        if sparse:
-            fn = row_grad_fn or sgns.sparse_row_grads
-            return sgns.train_step_sparse(params, centers_b, contexts_b, negs, lr,
-                                          row_grad_fn=fn)
-        sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(
-            params, centers_b, contexts_b, negs)
-        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-        return params, sum_loss / centers_b.shape[0]
-
-    def epoch_fn(params, centers, contexts, neg_cdf, key, step0):
+    def epoch_fn(params, centers, contexts, neg_table, key, step0):
         def body(carry, xs):
             params, key, i = carry
             c_b, x_b = xs
             key, sub = jax.random.split(key)
-            params, loss = step(params, c_b, x_b, neg_cdf, sub, step0 + i)
+            params, loss = step(params, c_b, x_b, neg_table, sub, step0 + i)
             return (params, key, i + 1), loss
 
         (params, _, _), losses = jax.lax.scan(
@@ -109,6 +102,10 @@ class AsyncShardTrainer:
     ``backend='vmap'``     — one device, workers vectorized (tests/CPU).
     ``backend='shard_map'`` — workers sharded over the ``worker`` mesh
     axis; the compiled step contains no collectives.
+    ``engine`` — an :class:`repro.core.engine.UpdateEngine` or spec
+    string (``"dense"`` / ``"sparse"`` / ``"pallas"`` /
+    ``"pallas_fused"``, optionally ``":cdf"`` / ``":alias"``) that owns
+    the per-step compute; resolved once at construction.
     """
 
     cfg: SGNSConfig
@@ -116,10 +113,11 @@ class AsyncShardTrainer:
     total_steps: int
     backend: str = "vmap"
     mesh: Mesh | None = None
-    sparse: bool = True
-    row_grad_fn: object = None
-    sampler: str = "cdf"
+    engine: object = "sparse"
     _jitted: object = field(default=None, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        self.engine = get_engine(self.engine)
 
     def init(self, key: jax.Array) -> dict:
         keys = jax.random.split(key, self.num_workers)
@@ -127,8 +125,7 @@ class AsyncShardTrainer:
 
     def _epoch_fn(self):
         return make_worker_epoch(self.cfg, self.total_steps,
-                                 sparse=self.sparse, row_grad_fn=self.row_grad_fn,
-                                 sampler=self.sampler)
+                                 engine=self.engine)
 
     def _sharded(self, epoch_fn):
         spec = P("worker")
@@ -170,7 +167,7 @@ class AsyncShardTrainer:
         spec = P("worker")
         sh = lambda s, t: jax.ShapeDtypeStruct(
             s, t, sharding=NamedSharding(self.mesh, spec))
-        if self.sampler == "alias":
+        if self.engine.table_kind == "alias":
             neg = {"prob": sh((n, V), jnp.float32), "alias": sh((n, V), jnp.int32)}
         else:
             neg = sh((n, V), jnp.float32)       # per-worker negative CDFs
@@ -192,16 +189,19 @@ class AsyncShardTrainer:
 # ---------------------------------------------------------------------------
 def make_sync_epoch(cfg: SGNSConfig, neg_table, total_steps: int,
                     mesh: Mesh | None = None, data_axis: str = "worker",
-                    sampler: str = "cdf"):
+                    engine="dense"):
     """One shared table; per-step gradient synchronization.
 
     Under a mesh, the batch is sharded over ``data_axis`` and the dense
     gradient is psum'd — the per-step collective the paper eliminates.
+    The gradient must materialize densely for that all-reduce, so only
+    the ``engine``'s negative draw and table layout are used here (its
+    apply path is irrelevant to the baseline's cost model).
     """
-    draw = negative_sampler_fn(sampler)
+    engine = get_engine(engine)
 
     def sample_negatives(key, shape):
-        return draw(neg_table, key, shape)
+        return engine.sample(neg_table, key, shape)
 
     def step(params, c_b, x_b, key, i):
         negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
@@ -243,21 +243,15 @@ def make_sync_epoch(cfg: SGNSConfig, neg_table, total_steps: int,
 def make_periodic_sync_epoch(cfg: SGNSConfig, neg_table,
                              total_steps: int, sync_every: int,
                              mesh: Mesh, data_axis: str = "worker",
-                             sampler: str = "cdf"):
+                             engine="dense"):
     """One shared table; parameters are *averaged* across workers every
-    ``sync_every`` steps (local SGD) instead of gradients every step."""
-    draw = negative_sampler_fn(sampler)
-
-    def sample_negatives(key, shape):
-        return draw(neg_table, key, shape)
+    ``sync_every`` steps (local SGD) instead of gradients every step.
+    Between syncs each worker runs the ``engine``'s step unmodified —
+    local SGD composes with any update engine."""
+    engine_step = get_engine(engine).make_step(cfg, total_steps)
 
     def local_step(params, c_b, x_b, key, i):
-        negs = sample_negatives(key, (c_b.shape[0], cfg.negatives))
-        lr = sgns.linear_lr(i, total_steps, cfg)
-        sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(
-            params, c_b, x_b, negs)
-        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-        return params, sum_loss / c_b.shape[0]
+        return engine_step(params, c_b, x_b, neg_table, key, i)
 
     def epoch_fn(params, centers, contexts, key, step0):
         # centers/contexts: (outer, sync_every, B_local)

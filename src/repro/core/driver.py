@@ -28,10 +28,11 @@ import jax.numpy as jnp
 
 from repro.core.sgns import SGNSConfig
 from repro.core.async_trainer import AsyncShardTrainer, make_sync_epoch
-from repro.core.distributions import build_alias_table
+from repro.core.engine import get_engine
 from repro.core.merge import StackedModels, merge as merge_models
+from repro.core.schedule import plan_epoch
 from repro.data.corpus import Corpus
-from repro.data.pairs import unigram_noise_probs
+from repro.data.pairs import stack_noise_tables
 from repro.data.vocab import Vocab, build_vocab, union_vocab, UNK
 from repro.data.pipeline import (
     PairChunkStream, make_worker_streams, prefetch_chunks)
@@ -84,31 +85,12 @@ def build_worker_vocabs(
     return projected, union, mask
 
 
-def _neg_cdfs(worker_vocabs: list[Vocab], power: float = 0.75) -> np.ndarray:
-    cdfs = []
-    for v in worker_vocabs:
-        p = unigram_noise_probs(v.counts, power)
-        c = np.cumsum(p)
-        c[-1] = 1.0
-        cdfs.append(c)
-    return np.stack(cdfs).astype(np.float32)
-
-
-def _neg_tables(worker_vocabs: list[Vocab], sampler: str = "cdf",
+def _neg_tables(worker_vocabs: list[Vocab], kind: str = "cdf",
                 power: float = 0.75):
-    """Stacked per-worker noise tables in the layout ``sampler`` draws
-    from: (n, V) CDFs, or {'prob': (n, V), 'alias': (n, V)} Vose tables."""
-    if sampler == "cdf":
-        return jnp.asarray(_neg_cdfs(worker_vocabs, power))
-    if sampler == "alias":
-        probs, aliases = [], []
-        for v in worker_vocabs:
-            prob, alias = build_alias_table(unigram_noise_probs(v.counts, power))
-            probs.append(prob)
-            aliases.append(alias)
-        return {"prob": jnp.asarray(np.stack(probs), dtype=jnp.float32),
-                "alias": jnp.asarray(np.stack(aliases), dtype=jnp.int32)}
-    raise ValueError(f"unknown negative sampler {sampler!r}")
+    """Stacked per-worker noise tables in the layout ``kind`` draws
+    from (see :func:`repro.data.pairs.stack_noise_tables`)."""
+    return stack_noise_tables([v.counts for v in worker_vocabs],
+                              kind=kind, power=power)
 
 
 # ---------------------------------------------------------------------------
@@ -140,22 +122,21 @@ def train_submodels(
     mesh=None,
     seed: int = 0,
     max_steps_per_epoch: int | None = None,
-    sparse: bool = True,
-    row_grad_fn=None,
-    sampler: str = "cdf",
+    engine="sparse",
     steps_per_chunk: int = 128,
     prefetch: int = 2,
     sentences_per_block: int = 1024,
 ) -> PipelineResult:
     rate = rate if rate is not None else 1.0 / num_workers
     window = window if window is not None else cfg.window
+    engine = get_engine(engine)
 
     t0 = time.perf_counter()
     worker_vocabs, union, mask = build_worker_vocabs(
         corpus, raw_vocab_size, strategy, num_workers, rate,
         max_vocab=max_vocab, base_min_count=base_min_count, seed=seed)
     cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": union.size})
-    neg_table = _neg_tables(worker_vocabs, sampler=sampler)
+    neg_table = _neg_tables(worker_vocabs, kind=engine.table_kind)
     t_vocab = time.perf_counter() - t0
 
     # Pair streams per worker (worker vocab projected into union ids).
@@ -176,25 +157,18 @@ def train_submodels(
                     for s in streams)
     if min_pairs == 0:
         raise ValueError("a worker drew an empty sample")
-    steps = max(1, min_pairs // batch_size)
-    if max_steps_per_epoch is not None:
-        steps = min(steps, max_steps_per_epoch)
-    # Fit the epoch into whole fixed-shape chunks (one compile total)
-    # without exceeding `steps`: shrink the chunk, never round the epoch
-    # up past the cap.
-    num_chunks = -(-steps // min(steps_per_chunk, steps))
-    chunk_steps = steps // num_chunks
-    steps = num_chunks * chunk_steps
-    total_steps = steps * epochs
+    # One consistent steps/chunks/total_steps derivation (core.schedule):
+    # the LR horizon and the chunk loop can't drift apart.
+    sched = plan_epoch(min_pairs, batch_size, epochs, steps_per_chunk,
+                       max_steps_per_epoch=max_steps_per_epoch)
 
     trainer = AsyncShardTrainer(
-        cfg=cfg, num_workers=num_workers, total_steps=total_steps,
-        backend=backend, mesh=mesh, sparse=sparse, row_grad_fn=row_grad_fn,
-        sampler=sampler)
+        cfg=cfg, num_workers=num_workers, total_steps=sched.total_steps,
+        backend=backend, mesh=mesh, engine=engine)
     params = trainer.init(jax.random.PRNGKey(cfg.seed))
 
     chunk_stream = PairChunkStream(
-        streams, batch_size=batch_size, steps_per_chunk=chunk_steps,
+        streams, batch_size=batch_size, steps_per_chunk=sched.chunk_steps,
         sentences_per_block=sentences_per_block)
 
     losses = []
@@ -205,12 +179,12 @@ def train_submodels(
         # Host extraction + H2D copy of chunk k+1 overlap the device's
         # work on chunk k (async dispatch; queue depth = `prefetch`).
         chunk_it = prefetch_chunks(
-            chunk_stream.chunks(epoch, num_chunks), depth=prefetch)
+            chunk_stream.chunks(epoch, sched.num_chunks), depth=prefetch)
         for k, (centers, contexts) in enumerate(chunk_it):
             params, chunk_losses = trainer.epoch(
                 params, centers, contexts, neg_table,
                 jax.random.fold_in(ep_key, k),
-                step0=epoch * steps + k * chunk_steps,
+                step0=sched.step0(epoch, k),
             )
             ep_losses.append(chunk_losses)
         losses.append(float(jnp.mean(jnp.concatenate(ep_losses, axis=-1))))
@@ -221,7 +195,7 @@ def train_submodels(
     return PipelineResult(
         strategy=strategy, num_workers=num_workers, union_vocab=union,
         stacked=stacked, timings={"vocab_s": t_vocab, "train_s": t_train,
-                                  "steps_per_epoch": steps},
+                                  "steps_per_epoch": sched.steps_per_epoch},
         losses=losses)
 
 
@@ -261,14 +235,15 @@ def train_sync_baseline(
     seed: int = 0,
     max_steps_per_epoch: int | None = None,
     mesh=None,
-    sampler: str = "cdf",
+    engine="dense",
 ):
     from repro.data.pairs import extract_pairs
 
+    engine = get_engine(engine)
     vocab = build_vocab(corpus, raw_vocab_size, min_count=1, max_size=max_vocab)
     cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": vocab.size})
     window = window if window is not None else cfg.window
-    neg_table = _neg_tables([vocab], sampler=sampler)
+    neg_table = _neg_tables([vocab], kind=engine.table_kind)
     # single-model: drop the stacked leading worker axis
     neg_table = jax.tree.map(lambda a: a[0], neg_table)
 
@@ -279,7 +254,7 @@ def train_sync_baseline(
         steps = min(steps, max_steps_per_epoch)
     total_steps = steps * epochs
     epoch_fn = make_sync_epoch(cfg, neg_table, total_steps, mesh=mesh,
-                               sampler=sampler)
+                               engine=engine)
 
     from repro.core import sgns as sgns_mod
     params = sgns_mod.init_params(jax.random.PRNGKey(cfg.seed), cfg)

@@ -1,0 +1,203 @@
+"""Update engines — the per-step SGNS compute as one swappable object.
+
+An :class:`UpdateEngine` owns everything a training step does between
+receiving a ``(centers, contexts)`` micro-batch and returning updated
+parameters: the negative draw (and therefore the noise-table *layout*
+it consumes), the row gradients, and the parameter apply. Every layer
+above — ``make_worker_epoch`` / :class:`AsyncShardTrainer` /
+``make_sync_epoch`` / ``make_periodic_sync_epoch`` / the driver / the
+launch CLIs — selects one by name instead of threading the old
+``sparse`` / ``row_grad_fn`` / ``sampler`` flag trio.
+
+Registry (``get_engine``):
+
+``dense``
+    Autodiff through the gathers; materializes a dense ``(V, d)``
+    gradient. The oracle — simple and slow.
+``sparse``
+    Manual per-row gradients + accumulating scatter-add (pure jnp).
+    O(B·K·d) memory traffic; the CPU production path.
+``pallas``
+    ``sparse`` with the row gradients computed by the VMEM-tile Pallas
+    kernel (``kernels/sgns_update.py``); gather/scatter stay in XLA.
+``pallas_fused``
+    The whole step in one Pallas kernel
+    (``kernels/sgns_fused.py``): negatives drawn *in-kernel* from the
+    alias tables via a counter-based PRNG, ``log σ`` forward + all three
+    row grads + scatter-add apply in a single VMEM pass. Negative ids
+    and the ``(B, K)`` logit/grad intermediates never touch HBM.
+
+Engine specs are engine instances or strings, optionally carrying a
+sampler: ``"sparse"``, ``"sparse:alias"``, ``"pallas:cdf"``. The fused
+engine always samples in-kernel from alias tables (``"alias"`` is its
+only valid sampler, and its default).
+
+Engines are frozen dataclasses, so they hash/compare by value and are
+safe as jit static arguments or cache keys.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+
+from repro.core import sgns
+from repro.core.sgns import SGNSConfig
+from repro.data.pairs import negative_sampler_fn
+
+
+def _auto_interpret() -> bool:
+    """Pallas interpret mode everywhere but on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+@dataclass(frozen=True)
+class UpdateEngine:
+    """Base engine: negative draw + step construction.
+
+    ``sampler`` names the negative-draw primitive ("cdf" | "alias") and
+    fixes :attr:`table_kind`, the noise-table layout the engine's steps
+    consume — a ``(V,)`` CDF or a ``{"prob", "alias"}`` Vose table (see
+    ``repro.data.pairs.build_noise_table``).
+    """
+
+    sampler: str = "cdf"
+    name = "base"
+
+    @property
+    def table_kind(self) -> str:
+        return self.sampler
+
+    def sample(self, table, key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+        """Draw negative ids outside a kernel (also the sync baselines'
+        draw path)."""
+        return negative_sampler_fn(self.sampler)(table, key, shape)
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """Returns ``step(params, centers, contexts, neg_table, key,
+        step_idx) -> (params, mean_loss)``."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return f"{self.name}:{self.sampler}"
+
+
+@dataclass(frozen=True)
+class DenseEngine(UpdateEngine):
+    """Autodiff + dense (V, d) gradient — the numerical oracle."""
+
+    name = "dense"
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            negs = self.sample(neg_table, key, (centers.shape[0], cfg.negatives))
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            sum_loss, grads = jax.value_and_grad(sgns.sum_loss_fn)(
+                params, centers, contexts, negs)
+            params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return params, sum_loss / centers.shape[0]
+
+        return step
+
+
+@dataclass(frozen=True)
+class SparseEngine(UpdateEngine):
+    """Manual row grads + scatter-add; ``row_grad_fn`` is the seam the
+    Pallas engine plugs into."""
+
+    name = "sparse"
+
+    def row_grad_fn(self, cfg: SGNSConfig):
+        return sgns.sparse_row_grads
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        row_grads = self.row_grad_fn(cfg)
+
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            negs = self.sample(neg_table, key, (centers.shape[0], cfg.negatives))
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            return sgns.train_step_sparse(params, centers, contexts, negs, lr,
+                                          row_grad_fn=row_grads)
+
+        return step
+
+
+@dataclass(frozen=True)
+class PallasEngine(SparseEngine):
+    """Sparse step with the fused-VMEM-tile row-grad kernel in the
+    middle; the draw and the gather/scatter seams stay in XLA."""
+
+    interpret: bool | None = None
+    block_b: int | None = None
+    name = "pallas"
+
+    def row_grad_fn(self, cfg: SGNSConfig):
+        from repro.kernels import ops
+
+        interpret = self.interpret if self.interpret is not None \
+            else _auto_interpret()
+        return ops.make_row_grad_fn(interpret=interpret, block_b=self.block_b)
+
+
+@dataclass(frozen=True)
+class FusedPallasEngine(UpdateEngine):
+    """One kernel per step: in-kernel alias negative sampling + forward
+    + row grads + apply. Alias tables only."""
+
+    sampler: str = "alias"
+    interpret: bool | None = None
+    name = "pallas_fused"
+
+    def __post_init__(self):
+        if self.sampler != "alias":
+            raise ValueError(
+                "pallas_fused samples in-kernel from alias tables; "
+                f"sampler {self.sampler!r} is not supported")
+
+    def sample(self, table, key, shape):
+        """Replay the kernel's counter-PRNG draw outside the kernel
+        (exactly the ids an in-kernel step with this key draws)."""
+        from repro.kernels.sgns_fused import fused_negative_ids, _as_seed
+
+        return fused_negative_ids(_as_seed(key), table["prob"],
+                                  table["alias"], shape)
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        from repro.kernels.sgns_fused import sgns_fused_step
+
+        interpret = self.interpret if self.interpret is not None \
+            else _auto_interpret()
+
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            return sgns_fused_step(params, centers, contexts, neg_table, key,
+                                   lr, negatives=cfg.negatives,
+                                   interpret=interpret)
+
+        return step
+
+
+ENGINES: dict[str, type[UpdateEngine]] = {
+    "dense": DenseEngine,
+    "sparse": SparseEngine,
+    "pallas": PallasEngine,
+    "pallas_fused": FusedPallasEngine,
+}
+ENGINE_NAMES = tuple(ENGINES)
+
+
+def get_engine(spec: str | UpdateEngine = "sparse", **overrides) -> UpdateEngine:
+    """Resolve an engine spec: an instance (returned as-is, or with
+    field overrides applied) or a ``"name"`` / ``"name:sampler"``
+    string, e.g. ``get_engine("sparse:alias")``."""
+    if isinstance(spec, UpdateEngine):
+        return replace(spec, **overrides) if overrides else spec
+    name, _, sampler = str(spec).partition(":")
+    if name not in ENGINES:
+        raise ValueError(
+            f"unknown update engine {name!r}; expected one of "
+            f"{sorted(ENGINES)} (optionally 'name:sampler')")
+    if sampler:
+        overrides.setdefault("sampler", sampler)
+    return ENGINES[name](**overrides)

@@ -13,6 +13,11 @@ Two step functions with identical math:
   production path (O(B·K·d) instead of O(V·d) memory traffic). The
   Pallas kernel in ``repro.kernels`` fuses the middle of this path.
 
+These are the primitives behind the update engines in
+:mod:`repro.core.engine` (``dense`` / ``sparse`` / ``pallas`` /
+``pallas_fused``) — trainers select an engine rather than calling these
+directly.
+
 Initialization matches word2vec: W ~ U(−0.5/d, 0.5/d), C = 0.
 """
 

@@ -16,6 +16,8 @@ from repro.data.pairs import (
     AliasSampler,
     NegativeSampler,
     negative_sampler_fn,
+    build_noise_table,
+    stack_noise_tables,
     subsample_mask,
 )
 from repro.data.pipeline import (
@@ -35,6 +37,8 @@ __all__ = [
     "AliasSampler",
     "NegativeSampler",
     "negative_sampler_fn",
+    "build_noise_table",
+    "stack_noise_tables",
     "subsample_mask",
     "PairChunkStream",
     "WorkerStream",

@@ -141,6 +141,46 @@ def unigram_noise_probs(vocab_counts: np.ndarray, power: float = 0.75) -> np.nda
     return p / s if s > 0 else np.full_like(p, 1.0 / len(p))
 
 
+# ---------------------------------------------------------------------------
+# Noise-table layouts. An UpdateEngine declares which layout its draw
+# consumes (`engine.table_kind`); these helpers build it — one table per
+# sub-model, host-side, then stacked along a leading worker axis so the
+# tables shard over the `worker` mesh axis like the parameter tables.
+# ---------------------------------------------------------------------------
+def build_noise_table(vocab_counts: np.ndarray, kind: str = "cdf",
+                      power: float = 0.75):
+    """One vocab's unigram^0.75 noise table in the layout ``kind``
+    draws from: a ``(V,)`` float32 CDF, or a ``{'prob', 'alias'}`` Vose
+    alias table (float32/int32 — VMEM-resident operands of the fused
+    kernel)."""
+    p = unigram_noise_probs(vocab_counts, power)
+    if kind == "cdf":
+        c = np.cumsum(p)
+        c[-1] = 1.0
+        return jnp.asarray(c, dtype=jnp.float32)
+    if kind == "alias":
+        from repro.core.distributions import build_alias_table
+
+        prob, alias = build_alias_table(p)
+        return {"prob": jnp.asarray(prob, dtype=jnp.float32),
+                "alias": jnp.asarray(alias, dtype=jnp.int32)}
+    raise ValueError(f"unknown noise-table kind {kind!r}; "
+                     f"expected 'cdf' or 'alias'")
+
+
+def stack_noise_tables(counts_per_worker: list[np.ndarray], kind: str = "cdf",
+                       power: float = 0.75):
+    """Stacked per-worker noise tables: ``(n, V)`` CDFs, or
+    ``{'prob': (n, V), 'alias': (n, V)}`` alias tables. Each sub-model
+    draws from its *own* sample's noise distribution, exactly as a
+    standalone word2vec run on that sub-corpus would (paper §3.2)."""
+    tables = [build_noise_table(c, kind=kind, power=power)
+              for c in counts_per_worker]
+    if kind == "cdf":
+        return jnp.stack(tables)
+    return {k: jnp.stack([t[k] for t in tables]) for k in ("prob", "alias")}
+
+
 class NegativeSampler:
     """Unigram^0.75 sampler: inverse-CDF lookup, jittable and vectorized."""
 

@@ -3,6 +3,11 @@
 * ``sgns_update`` — fused SGNS forward+backward on gathered rows
   (pl.pallas_call + BlockSpec VMEM tiling); ``ops`` holds the jit'd
   wrappers (padding, gather/scatter); ``ref`` the pure-jnp oracles.
+  Powers the ``pallas`` update engine.
+* ``sgns_fused`` — the whole SGNS step in one kernel: in-kernel alias
+  negative sampling (counter-based PRNG), forward, row grads and
+  scatter-add apply in a single VMEM pass. Powers the ``pallas_fused``
+  update engine.
 * ``swa_decode`` — flash-style single-token sliding-window decode
   attention (online softmax, VMEM scratch accumulators) — the hot op of
   the long_500k shape for dense archs.
@@ -16,6 +21,12 @@ from repro.kernels.ops import (
     sgns_apply_step,
     make_row_grad_fn,
 )
+from repro.kernels.sgns_fused import (
+    sgns_fused_step,
+    sample_negatives_fused,
+    fused_negative_ids,
+    counter_uniforms,
+)
 from repro.kernels.ref import sgns_row_grads_ref, swa_decode_ref
 from repro.kernels.swa_decode import swa_decode_kernel
 
@@ -23,6 +34,10 @@ __all__ = [
     "sgns_row_grads",
     "sgns_apply_step",
     "make_row_grad_fn",
+    "sgns_fused_step",
+    "sample_negatives_fused",
+    "fused_negative_ids",
+    "counter_uniforms",
     "sgns_row_grads_ref",
     "swa_decode_ref",
     "swa_decode_kernel",

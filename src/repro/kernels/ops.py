@@ -1,10 +1,10 @@
 """jit'd wrappers around the Pallas kernels — padding, gather/scatter.
 
-``sgns_row_grads(..., use_kernel=True)`` is a drop-in for
-:func:`repro.core.sgns.sparse_row_grads`, so the whole training stack
-(AsyncShardTrainer, driver) can run on the fused kernel by passing it as
-``row_grad_fn``. On CPU we run the kernel in interpret mode; on TPU the
-same code compiles to Mosaic.
+``sgns_row_grads`` is a drop-in for
+:func:`repro.core.sgns.sparse_row_grads`; the ``pallas`` update engine
+(``repro.core.engine``) routes the sparse step's row gradients through
+it. On CPU we run the kernel in interpret mode; on TPU the same code
+compiles to Mosaic.
 """
 
 from __future__ import annotations
@@ -39,7 +39,10 @@ def sgns_row_grads(
     B, D = w.shape
     K = c_neg.shape[1]
     Dp = _round_up(D, 128)
-    bt = block_b or _pick_block_b(max(B, 8), K, Dp)
+    # The wrapper pads B up to a block multiple, so ask the picker for a
+    # block sized to the next pow2 ≥ B (divisibility comes from padding,
+    # not from shrinking the block).
+    bt = block_b or _pick_block_b(1 << (max(B, 8) - 1).bit_length(), K, Dp)
     Bp = _round_up(max(B, bt), bt)
 
     pad2 = lambda a: jnp.pad(a, ((0, Bp - B), (0, Dp - D)))

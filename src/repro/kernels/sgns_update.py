@@ -29,15 +29,24 @@ from jax.experimental import pallas as pl
 
 
 def _pick_block_b(B: int, K: int, D: int, vmem_budget: int = 8 * 2**20) -> int:
-    """Largest power-of-two pair-block whose VMEM working set fits.
+    """Largest power-of-two pair-block that fits the VMEM working set
+    *and divides B* (so the grid covers the batch exactly).
 
     Working set per pair (f32 in + out): 2·(2+2K+2)·D·4 bytes-ish; be
-    conservative: (4 + 2K) rows of D floats, in+out → ×2.
+    conservative: (4 + 2K) rows of D floats, in+out → ×2. For a
+    non-pow2 B the block halves until it divides B (down to 1) — the
+    ops.py wrapper instead pads B up to a block multiple, which keeps
+    the preferred ≥8 block size.
     """
     bytes_per_pair = (4 + 2 * K) * D * 4 * 2
     bt = vmem_budget // max(bytes_per_pair, 1)
     bt = 1 << max(int(bt).bit_length() - 1, 3)  # floor pow2, min 8
-    return int(min(bt, 256, B))
+    bt = min(bt, 256)
+    if bt > B:
+        bt = 1 << max(B.bit_length() - 1, 0)    # floor pow2 ≤ B
+    while B % bt:                               # clamp to a divisor of B
+        bt >>= 1
+    return int(bt)
 
 
 def _sgns_kernel(w_ref, cp_ref, cn_ref, loss_ref, dw_ref, dcp_ref, dcn_ref):

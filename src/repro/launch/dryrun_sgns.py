@@ -6,18 +6,27 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 training at production scale (vocab 300k, dim 500) on a 256-chip pod.
 
 Cases:
-  async        — the paper: 256 sub-models, one per chip, shard_map over
-                 the 'worker' axis. The compiled epoch is asserted to
-                 contain ZERO collectives.
-  sync         — the synchronized strawman (Hogwild/MLLib stand-in):
-                 data-parallel minibatch SGNS, dense-gradient psum every
-                 step (the 600 MB/step the paper eliminates).
-  local_sgd_k  — beyond-paper: parameter averaging every k steps
-                 (collective term ∝ 1/k; the paper is k→∞ + ALiR merge).
-  merge        — the one-time ALiR merge phase, sharded over workers
-                 (per-model Procrustes local, one all-reduce for Y).
+  async          — the paper: 256 sub-models, one per chip, shard_map
+                   over the 'worker' axis, `sparse` engine with the
+                   inverse-CDF draw. The compiled epoch is asserted to
+                   contain ZERO collectives.
+  async_alias    — `sparse:alias` engine: the O(1) alias draw replacing
+                   the O(log V) CDF binary search. Compare this row's
+                   HLO cost against `async` (ROADMAP item 4) — same
+                   zero-collective property, less per-step HLO.
+  async_fused    — `pallas_fused` engine: the alias draw moves *inside*
+                   the step kernel; negative ids and (B,K) logit/grad
+                   intermediates never appear as HBM arrays.
+  sync           — the synchronized strawman (Hogwild/MLLib stand-in):
+                   data-parallel minibatch SGNS, dense-gradient psum
+                   every step (the 600 MB/step the paper eliminates).
+  local_sgd_k    — beyond-paper: parameter averaging every k steps
+                   (collective term ∝ 1/k; the paper is k→∞ + ALiR).
+  merge          — the one-time ALiR merge phase, sharded over workers
+                   (per-model Procrustes local, one all-reduce for Y).
 
 Usage: python -m repro.launch.dryrun_sgns [--json out.json]
+       [--cases async,async_alias,...] [--workers N --steps S --batch B]
 """
 
 import argparse
@@ -30,7 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.sgns_wiki import CONFIG as SGNS_CFG
 from repro.core.async_trainer import (
     AsyncShardTrainer, make_sync_epoch, make_periodic_sync_epoch,
-    assert_no_collectives, count_collective_ops)
+    assert_no_collectives)
 from repro.core import merge as mg
 from repro.launch.mesh import make_worker_mesh
 from repro.launch import roofline as rl
@@ -39,47 +48,54 @@ WORKERS = 256
 STEPS = 128          # steps per lowered epoch (collectives scale linearly)
 BATCH = 1024         # pairs per worker per step
 
+ASYNC_ENGINES = {
+    "async": "sparse",            # inverse-CDF draw (the PR-1 baseline)
+    "async_alias": "sparse:alias",
+    "async_pallas": "pallas",
+    "async_fused": "pallas_fused",
+}
+
 
 def sds(mesh, shape, dtype, spec):
     return jax.ShapeDtypeStruct(shape, dtype,
                                 sharding=NamedSharding(mesh, spec))
 
 
-def lower_async(mesh):
+def lower_async(mesh, workers, steps, batch, engine="sparse"):
     trainer = AsyncShardTrainer(
-        cfg=SGNS_CFG, num_workers=WORKERS, total_steps=STEPS,
-        backend="shard_map", mesh=mesh)
-    return trainer.lower_epoch(STEPS, BATCH)
+        cfg=SGNS_CFG, num_workers=workers, total_steps=steps,
+        backend="shard_map", mesh=mesh, engine=engine)
+    return trainer.lower_epoch(steps, batch)
 
 
-def lower_sync(mesh):
+def lower_sync(mesh, workers, steps, batch):
     neg_cdf = jnp.linspace(0, 1, SGNS_CFG.vocab_size, dtype=jnp.float32)
-    epoch = make_sync_epoch(SGNS_CFG, neg_cdf, STEPS, mesh=mesh,
+    epoch = make_sync_epoch(SGNS_CFG, neg_cdf, steps, mesh=mesh,
                             data_axis="worker")
     V, d = SGNS_CFG.vocab_size, SGNS_CFG.dim
     params = {"W": sds(mesh, (V, d), jnp.float32, P()),
               "C": sds(mesh, (V, d), jnp.float32, P())}
-    c = sds(mesh, (STEPS, WORKERS * BATCH), jnp.int32, P(None, "worker"))
+    c = sds(mesh, (steps, workers * batch), jnp.int32, P(None, "worker"))
     key = sds(mesh, (2,), jnp.uint32, P())
     step0 = jax.ShapeDtypeStruct((), jnp.int32)
     return epoch.lower(params, c, c, key, step0)
 
 
-def lower_local_sgd(mesh, k: int):
+def lower_local_sgd(mesh, workers, steps, batch, k: int):
     neg_cdf = jnp.linspace(0, 1, SGNS_CFG.vocab_size, dtype=jnp.float32)
-    epoch = make_periodic_sync_epoch(SGNS_CFG, neg_cdf, STEPS, k, mesh,
+    epoch = make_periodic_sync_epoch(SGNS_CFG, neg_cdf, steps, k, mesh,
                                      data_axis="worker")
     V, d = SGNS_CFG.vocab_size, SGNS_CFG.dim
     params = {"W": sds(mesh, (V, d), jnp.float32, P()),
               "C": sds(mesh, (V, d), jnp.float32, P())}
-    c = sds(mesh, (STEPS // k, k, WORKERS * BATCH), jnp.int32,
+    c = sds(mesh, (steps // k, k, workers * batch), jnp.int32,
             P(None, None, "worker"))
     key = sds(mesh, (2,), jnp.uint32, P())
     step0 = jax.ShapeDtypeStruct((), jnp.int32)
     return epoch.lower(params, c, c, key, step0)
 
 
-def lower_merge(mesh):
+def lower_merge(mesh, workers, steps, batch):
     """One ALiR iteration over worker-sharded sub-models."""
     V, d = SGNS_CFG.vocab_size, SGNS_CFG.dim
 
@@ -87,27 +103,35 @@ def lower_merge(mesh):
         Y_new, disp, _ = mg._alir_iteration(Y, models, mask)
         return Y_new, disp
 
-    models = sds(mesh, (WORKERS, V, d), jnp.float32, P("worker"))
-    mask = sds(mesh, (WORKERS, V), jnp.bool_, P("worker"))
+    models = sds(mesh, (workers, V, d), jnp.float32, P("worker"))
+    mask = sds(mesh, (workers, V), jnp.bool_, P("worker"))
     Y = sds(mesh, (V, d), jnp.float32, P())
     return jax.jit(one_iter).lower(models, mask, Y)
 
 
-def run(case: str, mesh) -> dict:
-    lowered = {
-        "async": lower_async,
-        "sync": lower_sync,
-        "local_sgd_8": lambda m: lower_local_sgd(m, 8),
-        "local_sgd_64": lambda m: lower_local_sgd(m, 64),
-        "merge_alir_iter": lower_merge,
-    }[case](mesh)
-    if case == "async":
-        assert_no_collectives(lowered)   # the paper's headline property
+def run(case: str, mesh, workers=WORKERS, steps=STEPS, batch=BATCH) -> dict:
+    if case.startswith("local_sgd_"):
+        # the lowered program runs whole sync periods only — round the
+        # step count so the roofline pairs/model_flops match it
+        k = int(case.rsplit("_", 1)[1])
+        steps = max(steps // k, 1) * k
+    if case in ASYNC_ENGINES:
+        lowered = lower_async(mesh, workers, steps, batch,
+                              engine=ASYNC_ENGINES[case])
+        # every async engine keeps the paper's headline property
+        assert_no_collectives(lowered)
+    else:
+        lowered = {
+            "sync": lower_sync,
+            "local_sgd_8": lambda m, w, s, b: lower_local_sgd(m, w, s, b, 8),
+            "local_sgd_64": lambda m, w, s, b: lower_local_sgd(m, w, s, b, 64),
+            "merge_alir_iter": lower_merge,
+        }[case](mesh, workers, steps, batch)
     compiled = lowered.compile()
     # model flops: per epoch, 2 tables × (K+1) dots fwd+bwd ≈ 6·B·(K+1)·d
-    pairs = WORKERS * BATCH * STEPS
+    pairs = workers * batch * steps
     model_flops = 6.0 * pairs * (SGNS_CFG.negatives + 1) * SGNS_CFG.dim
-    r = rl.analyze(f"sgns-{case}", "epoch128", compiled, WORKERS,
+    r = rl.analyze(f"sgns-{case}", f"epoch{steps}", compiled, workers,
                    model_flops=model_flops)
     row = r.row()
     row["collective_ops"] = dict(r.collectives.count_by_op)
@@ -117,13 +141,39 @@ def run(case: str, mesh) -> dict:
     return row
 
 
+def compare_sampler_paths(rows: list[dict]) -> None:
+    """ROADMAP item 4: alias vs CDF negative-draw HLO cost, side by side.
+    Both async rows are collective-free by assertion, so the comparison
+    is purely the per-chip compute/memory roofline terms."""
+    by_case = {r["arch"]: r for r in rows}
+    base = by_case.get("sgns-async")
+    for other in ("sgns-async_alias", "sgns-async_fused"):
+        r = by_case.get(other)
+        if not (base and r):
+            continue
+        dc = r["compute_s"] / max(base["compute_s"], 1e-30)
+        dm = r["memory_s"] / max(base["memory_s"], 1e-30)
+        print(f"-- {other[5:]} vs async (cdf draw): "
+              f"compute ×{dc:.3f}, memory ×{dm:.3f} "
+              f"(both zero-collective)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None)
-    ap.add_argument("--cases", default="async,sync,local_sgd_8,local_sgd_64,merge_alir_iter")
+    ap.add_argument("--cases",
+                    default="async,async_alias,sync,local_sgd_8,"
+                            "local_sgd_64,merge_alir_iter",
+                    help="comma list; also available: async_pallas, "
+                         "async_fused")
+    ap.add_argument("--workers", type=int, default=WORKERS)
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--batch", type=int, default=BATCH)
     args = ap.parse_args(argv)
-    mesh = make_worker_mesh(WORKERS)
-    rows = [run(c, mesh) for c in args.cases.split(",")]
+    mesh = make_worker_mesh(args.workers)
+    rows = [run(c, mesh, args.workers, args.steps, args.batch)
+            for c in args.cases.split(",")]
+    compare_sampler_paths(rows)
     if args.json:
         existing = json.load(open(args.json)) if os.path.exists(args.json) else []
         json.dump(existing + rows, open(args.json, "w"), indent=1)

@@ -5,8 +5,10 @@
       --sentences 30000 --merge alir_pca concat pca
 
 Runs the full pipeline on the synthetic corpus (see DESIGN.md §4) and
-prints paper-style scores + timings. ``--use-kernel`` routes the row
-gradients through the Pallas kernel (interpret mode on CPU).
+prints paper-style scores + timings. ``--engine`` selects the per-step
+update engine (``sparse``, ``dense``, ``pallas``, ``pallas_fused``,
+optionally with a sampler suffix like ``sparse:alias``); Pallas engines
+run in interpret mode on CPU, Mosaic on TPU.
 """
 
 from __future__ import annotations
@@ -16,6 +18,7 @@ import argparse
 import numpy as np
 
 from repro.core.driver import run_pipeline, train_sync_baseline
+from repro.core.engine import get_engine
 from repro.core.sgns import SGNSConfig
 from repro.data.corpus import SemanticCorpusModel
 from repro.eval.benchmarks import BenchmarkSuite, evaluate_all
@@ -39,7 +42,10 @@ def main(argv=None):
                     default=("concat", "pca", "alir_pca"))
     ap.add_argument("--baseline", action="store_true",
                     help="also train the synchronized baseline")
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--engine", default="sparse", type=get_engine,
+                    help="update engine: dense | sparse | pallas | "
+                         "pallas_fused, optionally ':cdf'/':alias' "
+                         "(e.g. sparse:alias)")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     args = ap.parse_args(argv)
 
@@ -49,17 +55,13 @@ def main(argv=None):
     cfg = SGNSConfig(vocab_size=0, dim=args.dim, window=args.window,
                      negatives=args.negatives)
 
-    row_grad_fn = None
-    if args.use_kernel:
-        from repro.kernels import make_row_grad_fn
-        row_grad_fn = make_row_grad_fn(interpret=True)
-
     res = run_pipeline(
         corpus, args.vocab, strategy=args.strategy, num_workers=args.workers,
         cfg=cfg, epochs=args.epochs, batch_size=args.batch, rate=args.rate,
         window=args.window, max_vocab=None, base_min_count=20,
-        merge_methods=tuple(args.merge), row_grad_fn=row_grad_fn)
+        merge_methods=tuple(args.merge), engine=args.engine)
     print(f"strategy={args.strategy} workers={args.workers} "
+          f"engine={args.engine.describe()} "
           f"train={res.timings['train_s']:.1f}s "
           f"steps/epoch={res.timings['steps_per_epoch']} "
           f"losses={['%.3f' % l for l in res.losses]}")

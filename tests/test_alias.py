@@ -114,9 +114,9 @@ def test_async_trainer_trains_with_alias_sampler():
     results = {}
     for sampler in ("cdf", "alias"):
         tr = AsyncShardTrainer(cfg=cfg, num_workers=n, total_steps=S,
-                               sampler=sampler)
+                               engine=f"sparse:{sampler}")
         params = tr.init(jax.random.PRNGKey(0))
-        table = _neg_tables([vocab, vocab], sampler=sampler)
+        table = _neg_tables([vocab, vocab], kind=sampler)
         params, losses = tr.epoch(params, c, x, table, jax.random.PRNGKey(1))
         assert losses.shape == (n, S)
         assert np.isfinite(np.asarray(losses)).all()
@@ -135,6 +135,7 @@ def test_async_alias_epoch_has_zero_collectives():
     mesh = jax.make_mesh((1,), ("worker",))
     cfg = SGNSConfig(vocab_size=256, dim=32, negatives=2)
     tr = AsyncShardTrainer(cfg=cfg, num_workers=1, total_steps=4,
-                           backend="shard_map", mesh=mesh, sampler="alias")
+                           backend="shard_map", mesh=mesh,
+                           engine="sparse:alias")
     txt = assert_no_collectives(tr.lower_epoch(steps=4, batch=64))
     assert count_collective_ops(txt) == {}

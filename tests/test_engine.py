@@ -1,0 +1,255 @@
+"""Update-engine abstraction: registry, cross-engine equivalence, the
+fused kernel's in-kernel negative draw (replay + chi-square), and the
+zero-collective property of every async engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sgns
+from repro.core.engine import (
+    ENGINE_NAMES, FusedPallasEngine, UpdateEngine, get_engine)
+from repro.core.sgns import SGNSConfig
+from repro.data.pairs import build_noise_table, unigram_noise_probs
+from repro.kernels.sgns_fused import (
+    fused_negative_ids, sample_negatives_fused, sgns_fused_step)
+
+
+def _zipf_counts(V, seed=0):
+    return np.random.default_rng(seed).zipf(1.3, V).astype(np.float64)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SGNSConfig(vocab_size=150, dim=32, negatives=4)
+
+
+@pytest.fixture(scope="module")
+def batch(cfg):
+    rng = np.random.default_rng(2)
+    B = 48
+    c = jnp.asarray(rng.integers(0, cfg.vocab_size, B, dtype=np.int32))
+    x = jnp.asarray(rng.integers(0, cfg.vocab_size, B, dtype=np.int32))
+    return c, x
+
+
+@pytest.fixture(scope="module")
+def tables(cfg):
+    counts = _zipf_counts(cfg.vocab_size)
+    return {kind: build_noise_table(counts, kind=kind)
+            for kind in ("cdf", "alias")}, counts
+
+
+def _params(cfg, seed=1):
+    p = sgns.init_params(jax.random.PRNGKey(seed), cfg)
+    return {"W": p["W"], "C": 0.02 * jax.random.normal(
+        jax.random.PRNGKey(seed + 1), p["C"].shape)}
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_resolves_all_names():
+    for name in ENGINE_NAMES:
+        eng = get_engine(name)
+        assert isinstance(eng, UpdateEngine)
+        assert eng.name == name
+        assert eng.table_kind in ("cdf", "alias")
+
+
+def test_registry_sampler_suffix_and_overrides():
+    assert get_engine("sparse:alias").sampler == "alias"
+    assert get_engine("pallas:cdf").table_kind == "cdf"
+    assert get_engine("dense", sampler="alias").table_kind == "alias"
+    eng = get_engine("sparse")
+    assert get_engine(eng) is eng                      # instance passthrough
+    assert get_engine(eng, sampler="alias").sampler == "alias"
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown update engine"):
+        get_engine("hogwild")
+
+
+def test_fused_engine_is_alias_only():
+    assert FusedPallasEngine().table_kind == "alias"
+    with pytest.raises(ValueError, match="alias"):
+        get_engine("pallas_fused:cdf")
+
+
+def test_engines_hashable_and_value_equal():
+    assert get_engine("sparse:alias") == get_engine("sparse:alias")
+    assert hash(get_engine("pallas")) == hash(get_engine("pallas"))
+    assert get_engine("sparse") != get_engine("sparse:alias")
+
+
+# -------------------------------------------------------------- equivalence
+def test_dense_sparse_pallas_steps_identical(cfg, batch, tables):
+    """Same key ⇒ same negatives ⇒ dense ≡ sparse ≡ pallas losses and
+    params (autodiff vs manual row grads vs the Pallas tile kernel)."""
+    tabs, _ = tables
+    c, x = batch
+    key = jax.random.PRNGKey(7)
+    outs = {}
+    for name in ("dense", "sparse", "pallas"):
+        step = get_engine(name).make_step(cfg, total_steps=100)
+        p, loss = step(_params(cfg), c, x, tabs["cdf"], key, jnp.int32(3))
+        outs[name] = (p, float(loss))
+    for name in ("sparse", "pallas"):
+        np.testing.assert_allclose(outs[name][1], outs["dense"][1], rtol=1e-5)
+        np.testing.assert_allclose(outs[name][0]["W"], outs["dense"][0]["W"],
+                                   atol=1e-5)
+        np.testing.assert_allclose(outs[name][0]["C"], outs["dense"][0]["C"],
+                                   atol=1e-5)
+
+
+def test_fused_step_matches_sparse_with_replayed_negatives(cfg, batch, tables):
+    """pallas_fused ≡ sparse when the sparse step is fed the exact ids
+    the kernel's counter PRNG drew (replayed via fused_negative_ids)."""
+    tabs, _ = tables
+    c, x = batch
+    key = jax.random.PRNGKey(11)
+    lr = jnp.float32(0.04)
+    p0 = _params(cfg)
+    pf, loss_f = sgns_fused_step(jax.tree.map(jnp.copy, p0), c, x,
+                                 tabs["alias"], key, lr,
+                                 negatives=cfg.negatives, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), tabs["alias"]["prob"],
+                             tabs["alias"]["alias"],
+                             (c.shape[0], cfg.negatives))
+    ps, loss_s = sgns.train_step_sparse(jax.tree.map(jnp.copy, p0), c, x,
+                                        ids, lr)
+    np.testing.assert_allclose(float(loss_f), float(loss_s), rtol=1e-5)
+    np.testing.assert_allclose(pf["W"], ps["W"], atol=1e-6)
+    np.testing.assert_allclose(pf["C"], ps["C"], atol=1e-6)
+
+
+def test_all_engines_converge_through_trainer(cfg, tables):
+    """Whole-epoch equivalence up to sampling seed: every engine trains
+    the same data to a loss below the (k+1)·log2 init plateau, and the
+    deterministic trio agrees exactly."""
+    from repro.core.async_trainer import AsyncShardTrainer
+
+    tabs, counts = tables
+    n, S, B = 2, 12, 64
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.integers(0, 30, (n, S, B)), jnp.int32)
+    x = jnp.asarray((np.asarray(c) + 1) % 30, jnp.int32)   # structured
+    losses = {}
+    for name in ENGINE_NAMES:
+        tr = AsyncShardTrainer(cfg=cfg, num_workers=n, total_steps=S,
+                               engine=name)
+        table = jax.tree.map(lambda a: jnp.stack([a, a]),
+                             tabs[tr.engine.table_kind])
+        p = tr.init(jax.random.PRNGKey(0))
+        p, ls = tr.epoch(p, c, x, table, jax.random.PRNGKey(4))
+        assert np.isfinite(np.asarray(ls)).all(), name
+        losses[name] = np.asarray(ls)
+        # learning happened: final loss under the all-zero-C plateau
+        assert float(ls[:, -1].mean()) < (cfg.negatives + 1) * np.log(2), name
+    np.testing.assert_allclose(losses["sparse"], losses["dense"], rtol=1e-4)
+    np.testing.assert_allclose(losses["pallas"], losses["dense"], rtol=1e-4)
+    # fused draws its own negatives: same ballpark, not bitwise
+    assert abs(losses["pallas_fused"].mean() - losses["dense"].mean()) < 0.5
+
+
+# ------------------------------------------------- in-kernel negative draw
+def test_fused_draw_chi_square_matches_unigram_075(tables):
+    """Chi-square goodness-of-fit of the *in-kernel* draws (interpret
+    mode, via the standalone sampler kernel) against unigram^0.75."""
+    tabs, counts = tables
+    p = unigram_noise_probs(counts)
+    N = 400_000
+    draws = np.asarray(sample_negatives_fused(
+        tabs["alias"], jax.random.PRNGKey(123), (N,), interpret=True))
+    assert draws.min() >= 0 and draws.max() < len(p)
+    obs = np.bincount(draws, minlength=len(p)).astype(np.float64)
+    exp = p * N
+    keep = exp >= 5.0                       # classic chi-square validity rule
+    chi2 = float(np.sum((obs[keep] - exp[keep]) ** 2 / exp[keep])
+                 + (obs[~keep].sum() - exp[~keep].sum()) ** 2
+                 / max(exp[~keep].sum(), 1.0))
+    df = int(keep.sum())                    # (+1 pooled bin, -1 constraint)
+    # ~p=0.001 normal-approx critical value; generous but catches a
+    # broken mixer or a biased index draw immediately
+    crit = df + 4.0 * np.sqrt(2.0 * df)
+    assert chi2 < crit, (chi2, df, crit)
+
+
+def test_fused_draw_deterministic_and_seed_sensitive(tables):
+    tabs, _ = tables
+    k1, k2 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+    a = sample_negatives_fused(tabs["alias"], k1, (64, 5))
+    b = sample_negatives_fused(tabs["alias"], k1, (64, 5))
+    c = sample_negatives_fused(tabs["alias"], k2, (64, 5))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert a.dtype == jnp.int32
+
+
+def test_fused_draw_replay_matches_kernel(tables):
+    """The pure-jnp replay (fused_negative_ids) is bit-identical to the
+    in-kernel draw — the property the equivalence tests stand on."""
+    tabs, _ = tables
+    key = jax.random.PRNGKey(21)
+    in_kernel = sample_negatives_fused(tabs["alias"], key, (32, 7))
+    replay = fused_negative_ids(key.astype(jnp.uint32), tabs["alias"]["prob"],
+                                tabs["alias"]["alias"], (32, 7))
+    np.testing.assert_array_equal(np.asarray(in_kernel), np.asarray(replay))
+
+
+def test_fused_steps_draw_fresh_negatives_each_scan_step(cfg, tables):
+    """Across an epoch scan the per-step key split must decorrelate the
+    in-kernel draws (a stuck counter/seed would reuse one negative set)."""
+    tabs, _ = tables
+    ids = [np.asarray(fused_negative_ids(
+        jax.random.split(jax.random.PRNGKey(5), 3)[i].astype(jnp.uint32),
+        tabs["alias"]["prob"], tabs["alias"]["alias"], (16, 4)))
+        for i in range(3)]
+    assert not np.array_equal(ids[0], ids[1])
+    assert not np.array_equal(ids[1], ids[2])
+
+
+# --------------------------------------------------------- no collectives
+def test_every_async_engine_is_collective_free(cfg):
+    """The paper's headline property holds for each engine's lowered
+    shard_map epoch — including the fused kernel (acceptance criterion)."""
+    from repro.core.async_trainer import (
+        AsyncShardTrainer, assert_no_collectives, count_collective_ops)
+
+    mesh = jax.make_mesh((1,), ("worker",))
+    for name in ENGINE_NAMES:
+        tr = AsyncShardTrainer(cfg=cfg, num_workers=1, total_steps=4,
+                               backend="shard_map", mesh=mesh, engine=name)
+        txt = assert_no_collectives(tr.lower_epoch(steps=4, batch=64))
+        assert count_collective_ops(txt) == {}, name
+
+
+# ----------------------------------------------------- sync epochs speak it
+def test_sync_epoch_takes_engine(cfg, tables):
+    from repro.core.async_trainer import make_sync_epoch
+
+    tabs, _ = tables
+    epoch = make_sync_epoch(cfg, tabs["alias"], total_steps=8,
+                            engine="sparse:alias")
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+    p, losses = epoch(sgns.init_params(jax.random.PRNGKey(0), cfg), c, c,
+                      jax.random.PRNGKey(1), jnp.int32(0))
+    assert losses.shape == (4,)
+    assert np.isfinite(np.asarray(losses)).all()
+
+
+def test_periodic_sync_epoch_runs_engine_steps(cfg, tables):
+    from repro.core.async_trainer import make_periodic_sync_epoch
+
+    tabs, _ = tables
+    mesh = jax.make_mesh((1,), ("worker",))
+    epoch = make_periodic_sync_epoch(cfg, tabs["cdf"], total_steps=8,
+                                     sync_every=2, mesh=mesh,
+                                     engine="sparse")
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 2, 32)), jnp.int32)
+    p, losses = epoch(sgns.init_params(jax.random.PRNGKey(0), cfg), c, c,
+                      jax.random.PRNGKey(1), jnp.int32(0))
+    assert losses.shape == (2, 2)
+    assert np.isfinite(np.asarray(losses)).all()

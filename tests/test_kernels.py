@@ -69,12 +69,13 @@ def test_kernel_matches_autodiff():
 
 
 def test_kernel_plugs_into_trainer():
-    """AsyncShardTrainer with row_grad_fn = Pallas kernel trains identically."""
+    """AsyncShardTrainer with the `pallas` engine trains identically to
+    the `sparse` reference engine."""
     from repro.core.async_trainer import AsyncShardTrainer
     cfg = sgns.SGNSConfig(vocab_size=64, dim=128, negatives=2)
     tr_ref = AsyncShardTrainer(cfg=cfg, num_workers=2, total_steps=4)
     tr_k = AsyncShardTrainer(cfg=cfg, num_workers=2, total_steps=4,
-                             row_grad_fn=ops.make_row_grad_fn(interpret=True))
+                             engine="pallas")
     params = tr_ref.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(1)
     c = jnp.asarray(rng.integers(0, 64, (2, 4, 16), dtype=np.int32))
@@ -93,6 +94,31 @@ def test_block_picker_fits_budget():
             bt = _pick_block_b(4096, K, D)
             assert bt >= 8
             assert (4 + 2 * K) * D * 4 * 2 * bt <= 16 * 2**20
+
+
+@pytest.mark.parametrize("B", [1, 6, 12, 100, 384, 1000, 4096])
+def test_block_picker_divides_batch(B):
+    """A non-pow2 B must yield a block that divides B (and stays pow2 for
+    pow2-divisible batches), so the kernel's divisibility check can't
+    fail on the picker's own choice."""
+    for K in (1, 5):
+        for D in (128, 512):
+            bt = _pick_block_b(B, K, D)
+            assert bt >= 1
+            assert B % bt == 0, (B, bt)
+            assert bt & (bt - 1) == 0 or bt == B  # pow2 unless B itself
+            assert (4 + 2 * K) * D * 4 * 2 * bt <= 16 * 2**20
+
+
+def test_kernel_direct_call_with_picked_block_non_pow2():
+    """sgns_row_grads_kernel with the default (picked) block accepts a
+    non-pow2 B — the regression the divisor clamp fixes."""
+    from repro.kernels.sgns_update import sgns_row_grads_kernel
+    B, K, D = 100, 2, 128
+    w, cp, cn = _rand(jax.random.PRNGKey(0), B, K, D, jnp.float32)
+    loss, dw, dcp, dcn = sgns_row_grads_kernel(w, cp, cn, interpret=True)
+    _, dw_r, _, _ = ref.sgns_row_grads_ref(w, cp, cn)
+    np.testing.assert_allclose(dw, dw_r, atol=1e-5)
 
 
 @settings(max_examples=20, deadline=None)

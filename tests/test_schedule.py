@@ -1,0 +1,80 @@
+"""Epoch/chunk/step schedule derivation (core.schedule) — the single
+source the driver, LR decay and chunk loop all read."""
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import EpochSchedule, plan_epoch
+
+
+def _legacy(min_pairs, batch_size, epochs, steps_per_chunk, cap):
+    """The inline derivation plan_epoch replaced (regression oracle)."""
+    steps = max(1, min_pairs // batch_size)
+    if cap is not None:
+        steps = min(steps, cap)
+    num_chunks = -(-steps // min(steps_per_chunk, steps))
+    chunk_steps = steps // num_chunks
+    steps = num_chunks * chunk_steps
+    return steps, num_chunks, chunk_steps, steps * epochs
+
+
+@pytest.mark.parametrize("min_pairs,batch,epochs,spc,cap", [
+    (10_000, 512, 3, 128, None),
+    (10_000, 512, 3, 128, 10),
+    (1_537, 128, 1, 4, 10),        # the driver test's shapes
+    (100, 512, 2, 128, None),      # fewer pairs than one batch → 1 step
+    (65_536, 64, 5, 7, 999),       # awkward chunk size
+    (12_345, 97, 4, 13, 17),
+])
+def test_matches_legacy_inline_derivation(min_pairs, batch, epochs, spc, cap):
+    s = plan_epoch(min_pairs, batch, epochs, spc, max_steps_per_epoch=cap)
+    steps, num_chunks, chunk_steps, total = _legacy(
+        min_pairs, batch, epochs, spc, cap)
+    assert (s.steps_per_epoch, s.num_chunks, s.chunk_steps, s.total_steps) \
+        == (steps, num_chunks, chunk_steps, total)
+
+
+def test_invariants_hold_over_a_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        min_pairs = int(rng.integers(1, 1_000_000))
+        batch = int(rng.integers(1, 4096))
+        epochs = int(rng.integers(1, 8))
+        spc = int(rng.integers(1, 512))
+        cap = None if rng.random() < 0.3 else int(rng.integers(1, 2000))
+        s = plan_epoch(min_pairs, batch, epochs, spc, max_steps_per_epoch=cap)
+        assert s.steps_per_epoch == s.num_chunks * s.chunk_steps
+        assert s.chunk_steps <= spc
+        assert s.steps_per_epoch >= 1
+        assert s.total_steps == s.steps_per_epoch * epochs
+        if cap is not None:
+            assert s.steps_per_epoch <= cap      # cap is a hard budget
+
+
+def test_step0_indexing_is_gapless():
+    """step0(e, k) walks 0, chunk_steps, 2·chunk_steps, … with no gaps —
+    the LR schedule sees every step index exactly once."""
+    s = plan_epoch(10_000, 64, 3, 16)
+    seen = [s.step0(e, k) + i
+            for e in range(s.epochs)
+            for k in range(s.num_chunks)
+            for i in range(s.chunk_steps)]
+    assert seen == list(range(s.total_steps))
+
+
+def test_total_steps_is_lr_horizon():
+    s = EpochSchedule(steps_per_epoch=40, chunk_steps=10, num_chunks=4,
+                      epochs=3)
+    assert s.total_steps == 120
+    assert s.step0(2, 3) == 110
+
+
+def test_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        plan_epoch(0, 64, 1, 16)
+    with pytest.raises(ValueError):
+        plan_epoch(100, 0, 1, 16)
+    with pytest.raises(ValueError):
+        plan_epoch(100, 64, 0, 16)
+    with pytest.raises(ValueError):
+        plan_epoch(100, 64, 1, 0)

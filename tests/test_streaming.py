@@ -197,7 +197,7 @@ def test_driver_streams_without_epoch_materialization(monkeypatch):
         corpus, 300, strategy="shuffle", num_workers=2,
         cfg=SGNSConfig(vocab_size=0, dim=16, window=3, negatives=2),
         epochs=2, batch_size=128, window=3, max_vocab=None,
-        max_steps_per_epoch=12, steps_per_chunk=4, sampler="alias")
+        max_steps_per_epoch=12, steps_per_chunk=4, engine="sparse:alias")
     assert len(res.losses) == 2
     assert np.isfinite(res.losses).all()
     assert res.timings["steps_per_epoch"] % 4 == 0
