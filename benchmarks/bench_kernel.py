@@ -2,7 +2,9 @@
 Pallas-kernel equivalence check (interpret mode; Mosaic on TPU), and an
 update-engine smoke sweep — one timed step per registered engine, so the
 benchmark artifact shows every step path (dense / sparse / pallas /
-pallas_fused) side by side."""
+pallas_fused / pallas_fused_hbm) side by side, including the blocked
+HBM-streaming engine's bit-equivalence against the per-block sparse
+reference."""
 
 from __future__ import annotations
 
@@ -81,6 +83,21 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
                                    jnp.float32(cfg.lr))
     fused_err = float(jnp.max(jnp.abs(pf["W"] - ps["W"])))
 
+    # HBM-blocked fused engine vs the per-block sparse reference on the
+    # same replayed negatives — the blocked step must be *bit-identical*
+    eng_h = get_engine("pallas_fused_hbm")
+    blk = eng_h.block_pairs
+    ph, _ = eng_h.make_step(cfg, 1000)(
+        jax.tree.map(jnp.copy, params), c, x, table, key, jnp.int32(0))
+    sparse_jit = jax.jit(sgns.train_step_sparse)
+    pr = jax.tree.map(jnp.copy, params)
+    lr0 = sgns.linear_lr(jnp.int32(0), 1000, cfg)
+    for b0 in range(0, B, blk):
+        pr, _ = sparse_jit(pr, c[b0:b0 + blk], x[b0:b0 + blk],
+                           ids[b0:b0 + blk], lr0)
+    hbm_err = float(max(jnp.max(jnp.abs(ph["W"] - pr["W"])),
+                        jnp.max(jnp.abs(ph["C"] - pr["C"]))))
+
     engine_us = engine_sweep(cfg, params, c, x, counts,
                              iters=3 if quick else 10, specs=engines)
     return {
@@ -89,6 +106,7 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
         "pairs_per_s_sparse": B / (us_sparse / 1e6),
         "kernel_max_err": err,
         "fused_vs_sparse_err": fused_err,
+        "fused_hbm_vs_sparse_err": hbm_err,
         "engine_us": engine_us,
         "B": B,
     }
@@ -111,6 +129,9 @@ def main(quick=False, engine=None):
           f"(interpret mode)")
     print(f"pallas_fused step vs sparse ref max|Δ| = "
           f"{r['fused_vs_sparse_err']:.2e} (same in-kernel negatives)")
+    print(f"pallas_fused_hbm step vs per-block sparse ref max|Δ| = "
+          f"{r['fused_hbm_vs_sparse_err']:.2e} "
+          f"(HBM tables, DMA-gathered rows; bit-identical by contract)")
     for name, us in r["engine_us"].items():
         print(f"engine {name:12s}: {us:9.1f} µs/step "
               f"({r['B'] / (us / 1e6):.2e} pairs/s)")
@@ -122,8 +143,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default=None,
-                    help="time only this engine's step "
-                         "(dense | sparse | pallas | pallas_fused)")
+                    help="time only this engine's step (dense | sparse | "
+                         "pallas | pallas_fused | pallas_fused_hbm)")
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
     main(quick=a.quick, engine=a.engine)

@@ -6,7 +6,8 @@
   bench_wallclock — Table 4 + Fig 2 (training/merge wall-clock, scaling)
   bench_oov       — Fig 3   (missing-vocabulary reconstruction)
   bench_kernel    — SGNS step micro-bench + Pallas/oracle check +
-                    update-engine sweep (dense/sparse/pallas/pallas_fused)
+                    update-engine sweep (dense/sparse/pallas/pallas_fused/
+                    pallas_fused_hbm, incl. the HBM-blocked bit-equivalence)
   roofline_table  — §Roofline terms from the dry-run sweeps
 
 Prints a final ``name,us_per_call,derived`` CSV summary.
@@ -74,8 +75,10 @@ def main(argv=None) -> None:
         lambda rows: "alias_speedup@V=%d=%.1fx" % (
             rows[-1]["V"], rows[-1]["speedup"]))
     run("kernel_sgns", bench_kernel.main,
-        lambda r: "pairs_per_s=%.2e;fused_err=%.1e;engines=%s" % (
+        lambda r: "pairs_per_s=%.2e;fused_err=%.1e;fused_hbm_err=%.1e;"
+                  "engines=%s" % (
             r["pairs_per_s_sparse"], r["fused_vs_sparse_err"],
+            r["fused_hbm_vs_sparse_err"],
             "|".join("%s:%.0fus" % (n, us)
                      for n, us in r["engine_us"].items())))
     run("roofline", roofline_table.main, lambda r: "see tables above")

@@ -11,8 +11,8 @@ roofline term (EXPERIMENTS §Roofline).
 The per-step compute itself (negative draw → row grads → apply) is an
 :class:`repro.core.engine.UpdateEngine`; every epoch builder here takes
 ``engine=`` and stays agnostic to which step path (dense autodiff,
-sparse scatter-add, Pallas tile kernel, or the fully-fused in-kernel
-sampler) runs inside the scan.
+sparse scatter-add, Pallas tile kernel, the fully-fused in-kernel
+sampler, or its HBM-blocked paper-scale variant) runs inside the scan.
 
 The synchronized strawman (`sync_train_epoch`) is conventional
 data-parallel SGNS: one table, batch sharded, gradient all-reduced every
@@ -104,8 +104,9 @@ class AsyncShardTrainer:
     axis; the compiled step contains no collectives.
     ``engine`` — an :class:`repro.core.engine.UpdateEngine` or spec
     string (``"dense"`` / ``"sparse"`` / ``"pallas"`` /
-    ``"pallas_fused"``, optionally ``":cdf"`` / ``":alias"``) that owns
-    the per-step compute; resolved once at construction.
+    ``"pallas_fused"`` / ``"pallas_fused_hbm"``, optionally ``":cdf"`` /
+    ``":alias"``) that owns the per-step compute; resolved once at
+    construction.
     """
 
     cfg: SGNSConfig

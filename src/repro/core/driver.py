@@ -39,6 +39,56 @@ from repro.data.pipeline import (
 
 
 # ---------------------------------------------------------------------------
+# PRNG streams. Every per-epoch key is a fold_in chain from a single
+# root key: fold_in(fold_in(PRNGKey(seed), stream), epoch). The old
+# arithmetic seeds (PRNGKey(seed*1000 + epoch), seed*77 + epoch,
+# seed*31 + epoch) collide across distinct (seed, epoch) pairs — e.g.
+# seed=1/epoch=1000 and seed=2/epoch=0 shared a stream — so two runs
+# that should be independent sampled identical negatives/permutations.
+# ---------------------------------------------------------------------------
+_STREAM_ASYNC_DATA = 0      # per-chunk keys for the async workers' epochs
+_STREAM_SYNC_EPOCH = 1      # the sync baseline's in-epoch negative draws
+_STREAM_SYNC_PERM = 2       # the sync baseline's numpy pair permutation
+
+# Leading entropy word of every numpy SeedSequence built here. Each
+# module that seeds numpy generators owns a distinct domain constant in
+# position 0, so its tuples can never alias another module's no matter
+# what user seed/stream/epoch values follow (the pipeline's pair-
+# extraction tuples, for instance, would otherwise collide with these
+# whenever stream == a worker index).
+_SEED_DOMAIN = 0xD21  # driver epoch streams
+
+
+def _epoch_key(seed: int, stream: int, epoch: int) -> jax.Array:
+    """Collision-free per-(seed, stream, epoch) PRNG key."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), stream), epoch)
+
+
+def _epoch_rng(seed: int, stream: int, epoch: int) -> np.random.Generator:
+    """numpy counterpart of :func:`_epoch_key` (a domain-tagged
+    SeedSequence: distinct (seed, stream, epoch) → distinct streams,
+    disjoint from every other module's numpy streams)."""
+    return np.random.default_rng(
+        np.random.SeedSequence((_SEED_DOMAIN, seed, stream, epoch)))
+
+
+def _tiled_permutation(rng: np.random.Generator, n_pairs: int,
+                       need: int) -> np.ndarray:
+    """``need`` pair indices covering [0, n_pairs) as evenly as possible:
+    whole independent permutations back to back. The old path tiled ONE
+    permutation verbatim, so a corpus smaller than a batch replayed its
+    pairs in identical order every pass within the epoch."""
+    if n_pairs <= 0:
+        raise ValueError("no training pairs extracted from the corpus")
+    reps = -(-need // n_pairs)
+    if reps == 1:
+        return rng.permutation(n_pairs)[:need]
+    return np.concatenate(
+        [rng.permutation(n_pairs) for _ in range(reps)])[:need]
+
+
+# ---------------------------------------------------------------------------
 def _project_vocab(worker_vocab: Vocab, union: Vocab, raw_vocab_size: int) -> Vocab:
     """Worker vocabulary re-indexed into union-vocab id space."""
     lookup = np.full(raw_vocab_size, UNK, dtype=np.int32)
@@ -174,7 +224,7 @@ def train_submodels(
     losses = []
     t_train0 = time.perf_counter()
     for epoch in range(epochs):
-        ep_key = jax.random.PRNGKey(seed * 1000 + epoch)
+        ep_key = _epoch_key(seed, _STREAM_ASYNC_DATA, epoch)
         ep_losses = []
         # Host extraction + H2D copy of chunk k+1 overlap the device's
         # work on chunk k (async dispatch; queue depth = `prefetch`).
@@ -262,14 +312,13 @@ def train_sync_baseline(
     losses = []
     t0 = time.perf_counter()
     for epoch in range(epochs):
-        rng = np.random.default_rng(seed * 77 + epoch)
-        perm = rng.permutation(len(centers))[:need]
-        if len(perm) < need:
-            perm = np.tile(perm, int(np.ceil(need / len(perm))))[:need]
+        rng = _epoch_rng(seed, _STREAM_SYNC_PERM, epoch)
+        perm = _tiled_permutation(rng, len(centers), need)
         c = jnp.asarray(centers[perm].reshape(steps, batch_size))
         x = jnp.asarray(contexts[perm].reshape(steps, batch_size))
         params, ep_losses = epoch_fn(params, c, x,
-                                     jax.random.PRNGKey(seed * 31 + epoch),
+                                     _epoch_key(seed, _STREAM_SYNC_EPOCH,
+                                                epoch),
                                      jnp.int32(epoch * steps))
         losses.append(float(jnp.mean(ep_losses)))
     jax.block_until_ready(params)

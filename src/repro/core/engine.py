@@ -25,12 +25,25 @@ Registry (``get_engine``):
     (``kernels/sgns_fused.py``): negatives drawn *in-kernel* from the
     alias tables via a counter-based PRNG, ``log σ`` forward + all three
     row grads + scatter-add apply in a single VMEM pass. Negative ids
-    and the ``(B, K)`` logit/grad intermediates never touch HBM.
+    and the ``(B, K)`` logit/grad intermediates never touch HBM. Both
+    ``(V, d)`` tables ride through the kernel whole, so this caps at
+    VMEM-adjacent table sizes.
+``pallas_fused_hbm``
+    The fused step with **HBM-resident** tables
+    (``kernels/sgns_fused_hbm.py``): a chain of per-block kernel
+    invocations (tables aliased in place through every one) DMA-gathers
+    / RMW-scatters only each ``block_pairs``-sized block's touched
+    rows; negatives still drawn in-kernel from the (VMEM-resident)
+    alias tables with the same replayable counter PRNG. This is the
+    variant that reaches the paper's 300k×500 sub-model shape. Fields:
+    ``block_pairs`` (a shorter tail block covers any remainder) and
+    ``sequential`` (word2vec's true per-pair apply order instead of
+    per-block).
 
 Engine specs are engine instances or strings, optionally carrying a
 sampler: ``"sparse"``, ``"sparse:alias"``, ``"pallas:cdf"``. The fused
-engine always samples in-kernel from alias tables (``"alias"`` is its
-only valid sampler, and its default).
+engines always sample in-kernel from alias tables (``"alias"`` is their
+only valid sampler, and their default).
 
 Engines are frozen dataclasses, so they hash/compare by value and are
 safe as jit static arguments or cache keys.
@@ -152,7 +165,7 @@ class FusedPallasEngine(UpdateEngine):
     def __post_init__(self):
         if self.sampler != "alias":
             raise ValueError(
-                "pallas_fused samples in-kernel from alias tables; "
+                f"{self.name} samples in-kernel from alias tables; "
                 f"sampler {self.sampler!r} is not supported")
 
     def sample(self, table, key, shape):
@@ -178,11 +191,47 @@ class FusedPallasEngine(UpdateEngine):
         return step
 
 
+@dataclass(frozen=True)
+class FusedHBMPallasEngine(FusedPallasEngine):
+    """The fused step against HBM-resident ``(V, d)`` tables: a chain
+    of per-block kernel invocations, each DMA-gathering/scattering only
+    the touched rows, with the in-kernel alias draw (same counter PRNG
+    ⇒ same replay). Reaches the paper's 300k×500 sub-model shape the
+    VMEM-resident variant cannot.
+
+    ``block_pairs`` — pairs per block invocation (a shorter tail block
+    covers any batch remainder).
+    ``sequential``  — word2vec's true per-pair sequential apply (each
+    pair's grads see every earlier pair's updates) instead of the
+    default per-block semantics. Slower; the update-order oracle.
+    """
+
+    block_pairs: int = 256
+    sequential: bool = False
+    name = "pallas_fused_hbm"
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        from repro.kernels.sgns_fused_hbm import sgns_fused_hbm_step
+
+        interpret = self.interpret if self.interpret is not None \
+            else _auto_interpret()
+
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            return sgns_fused_hbm_step(
+                params, centers, contexts, neg_table, key, lr,
+                negatives=cfg.negatives, block_pairs=self.block_pairs,
+                sequential=self.sequential, interpret=interpret)
+
+        return step
+
+
 ENGINES: dict[str, type[UpdateEngine]] = {
     "dense": DenseEngine,
     "sparse": SparseEngine,
     "pallas": PallasEngine,
     "pallas_fused": FusedPallasEngine,
+    "pallas_fused_hbm": FusedHBMPallasEngine,
 }
 ENGINE_NAMES = tuple(ENGINES)
 

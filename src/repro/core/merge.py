@@ -133,11 +133,25 @@ def _alir_iteration(Y: jax.Array, models: jax.Array, mask: jax.Array):
 
 @partial(jax.jit, static_argnames=("max_iters",))
 def _alir_loop(Y0, models, mask, max_iters: int, tol: float):
+    """Fixed-length scan with an early-converged fast path: once the
+    displacement change drops below ``tol``, Y *and* the reported
+    displacement freeze (the remaining iterations skip the per-model
+    SVDs entirely via ``cond``). The per-iteration trace therefore ends
+    in a constant run of the converged error — previously the carried
+    displacement kept mutating after ``done``, so the trace misreported
+    the converged error and every residual iteration paid full SVDs."""
     def body(carry, _):
         Y, prev_disp, done = carry
-        Y_new, disp, _ = _alir_iteration(Y, models, mask)
+
+        def converged(_):
+            return Y, prev_disp
+
+        def iterate(_):
+            Y_new, disp, _ = _alir_iteration(Y, models, mask)
+            return Y_new, disp
+
+        Y_out, disp = jax.lax.cond(done, converged, iterate, None)
         new_done = done | (jnp.abs(prev_disp - disp) < tol)
-        Y_out = jnp.where(done, Y, Y_new)
         return (Y_out, disp, new_done), disp
 
     (Y, _, _), disps = jax.lax.scan(

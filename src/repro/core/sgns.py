@@ -93,6 +93,30 @@ def train_step_dense(
     return params, sum_loss / centers.shape[0]
 
 
+def sparse_row_grads_per_pair(
+    w: jax.Array, c_pos: jax.Array, c_neg: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-pair losses + per-row gradients of the *sum* SGNS loss — the
+    shared core of :func:`sparse_row_grads` and the fused Pallas kernels
+    (which need the loss un-reduced, one value per pair). Keeping one
+    copy of these expressions is what the kernels' bit-equivalence
+    contract stands on.
+
+    Returns (loss (B,), dW_rows (B,d), dC_pos_rows (B,d),
+    dC_neg_rows (B,K,d)).
+    """
+    s_pos = jnp.sum(w * c_pos, axis=-1)
+    s_neg = jnp.einsum("bd,bkd->bk", w, c_neg)
+    loss = -jax.nn.log_sigmoid(s_pos) - jnp.sum(
+        jax.nn.log_sigmoid(-s_neg), axis=-1)
+    g_pos = jax.nn.sigmoid(s_pos) - 1.0                # (B,)
+    g_neg = jax.nn.sigmoid(s_neg)                      # (B,K)
+    d_w = g_pos[:, None] * c_pos + jnp.einsum("bk,bkd->bd", g_neg, c_neg)
+    d_cp = g_pos[:, None] * w
+    d_cn = g_neg[..., None] * w[:, None, :]
+    return loss, d_w, d_cp, d_cn
+
+
 def sparse_row_grads(
     w: jax.Array, c_pos: jax.Array, c_neg: jax.Array
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -102,17 +126,8 @@ def sparse_row_grads(
     Returns (mean_loss, dW_rows (B,d), dC_pos_rows (B,d), dC_neg_rows (B,K,d)).
     This is the function the Pallas kernel implements.
     """
-    s_pos = jnp.sum(w * c_pos, axis=-1)
-    s_neg = jnp.einsum("bd,bkd->bk", w, c_neg)
-    loss = jnp.mean(
-        -jax.nn.log_sigmoid(s_pos) - jnp.sum(jax.nn.log_sigmoid(-s_neg), axis=-1)
-    )
-    g_pos = jax.nn.sigmoid(s_pos) - 1.0                # (B,)
-    g_neg = jax.nn.sigmoid(s_neg)                      # (B,K)
-    d_w = g_pos[:, None] * c_pos + jnp.einsum("bk,bkd->bd", g_neg, c_neg)
-    d_cp = g_pos[:, None] * w
-    d_cn = g_neg[..., None] * w[:, None, :]
-    return loss, d_w, d_cp, d_cn
+    loss, d_w, d_cp, d_cn = sparse_row_grads_per_pair(w, c_pos, c_neg)
+    return jnp.mean(loss), d_w, d_cp, d_cn
 
 
 def train_step_sparse(

@@ -40,7 +40,7 @@ def extract_pairs(
     vocab: Vocab,
     window: int = 10,
     subsample_t: float | None = 1e-4,
-    seed: int = 0,
+    seed: int | np.random.SeedSequence = 0,
     max_pairs: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Return (centers, contexts) vocab-id arrays for the whole corpus.
@@ -100,12 +100,27 @@ def extract_pairs(
 # Both take the table as a traced argument so the same jitted epoch
 # function serves every worker's own noise distribution.
 # ---------------------------------------------------------------------------
+def cdf_to_ids(cdf: jax.Array, u: jax.Array) -> jax.Array:
+    """Inverse-CDF lookup: the id ``i`` with ``cdf[i-1] <= u < cdf[i]``.
+
+    ``side='right'`` is load-bearing: it maps each ``u`` to the interval
+    *above* it, so an id with zero probability (``cdf[i] == cdf[i-1]``,
+    e.g. a union-vocab row this worker never saw) is unreachable.
+    ``side='left'`` — the old behavior — returned such an id whenever
+    ``u == 0.0`` with a leading zero-count row, or ``u`` landed exactly
+    on a duplicated CDF boundary; at B·K draws per step those hits occur
+    in practice and wrote to rows absent from the worker's vocabulary,
+    corrupting the merge presence mask.
+    """
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)
+
+
 def sample_negatives_cdf(
     cdf: jax.Array, key: jax.Array, shape: tuple[int, ...]
 ) -> jax.Array:
     u = jax.random.uniform(key, shape, dtype=jnp.float32)
-    idx = jnp.searchsorted(cdf, u)
-    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)
+    return cdf_to_ids(cdf, u)
 
 
 def sample_negatives_alias(

@@ -23,6 +23,26 @@ from repro.data.vocab import Vocab
 from repro.data.pairs import extract_pairs
 from repro.core.sampling import sample_sentence_indices
 
+# Pair-extraction RNG streams. Domain-tagged SeedSequence tuples: the
+# leading constant keeps this module's streams disjoint from every
+# other module's numpy seeding (e.g. the driver's epoch streams), and
+# the whole-epoch/per-block sub-tag keeps those two paths disjoint from
+# each other — SeedSequence absorbs trailing zero words, so the naive
+# (seed, worker, epoch) vs (seed, worker, epoch, 0) pair would collide.
+# The old arithmetic seeds (seed*7919 + worker*104729 + epoch) aliased
+# across distinct (seed, worker, epoch) outright.
+_SEED_DOMAIN = 0x91BE       # pipeline pair extraction
+_SUB_EPOCH, _SUB_BLOCK = 0, 1
+
+
+def _extract_seed(seed: int, worker: int, epoch: int,
+                  block: int | None = None) -> np.random.SeedSequence:
+    if block is None:
+        return np.random.SeedSequence(
+            (_SEED_DOMAIN, _SUB_EPOCH, seed, worker, epoch))
+    return np.random.SeedSequence(
+        (_SEED_DOMAIN, _SUB_BLOCK, seed, worker, epoch, block))
+
 
 @dataclass
 class WorkerStream:
@@ -57,7 +77,7 @@ class WorkerStream:
             self.vocab,
             window=self.window,
             subsample_t=self.subsample_t,
-            seed=self.seed * 7919 + self.worker * 104729 + epoch,
+            seed=_extract_seed(self.seed, self.worker, epoch),
             max_pairs=max_pairs,
         )
 
@@ -75,7 +95,6 @@ class WorkerStream:
         (seed, worker, epoch, block).
         """
         idx = self.sentence_indices(epoch)
-        base = self.seed * 7919 + self.worker * 104729 + epoch
         for b, start in enumerate(range(0, len(idx), sentences_per_block)):
             sub = self.corpus.select(idx[start : start + sentences_per_block])
             c, x = extract_pairs(
@@ -83,7 +102,7 @@ class WorkerStream:
                 self.vocab,
                 window=self.window,
                 subsample_t=self.subsample_t,
-                seed=base * 1_000_003 + b,
+                seed=_extract_seed(self.seed, self.worker, epoch, block=b),
             )
             if len(c):
                 yield c, x

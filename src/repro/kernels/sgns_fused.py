@@ -65,6 +65,22 @@ def counter_uniforms(seed: jax.Array, counters: jax.Array) -> jax.Array:
     return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1 / (1 << 24))
 
 
+def alias_draw_from_counters(
+    seed: jax.Array, prob: jax.Array, alias: jax.Array, base: jax.Array
+) -> jax.Array:
+    """One alias-table draw per counter in ``base`` (draws' global
+    row-major positions): two sub-counters per draw (index pick +
+    alias-acceptance), top-24-bit uniforms, min-clamped index. The ONE
+    copy of the draw expressions — both the VMEM-resident and the
+    HBM-blocked kernels, and the off-kernel replay, call this, which is
+    what keeps their draws bit-identical by construction."""
+    u_idx = counter_uniforms(seed, base * jnp.uint32(2))
+    u_acc = counter_uniforms(seed, base * jnp.uint32(2) + jnp.uint32(1))
+    V = prob.shape[0]
+    idx = jnp.minimum((u_idx * V).astype(jnp.int32), V - 1)
+    return jnp.where(u_acc < prob[idx], idx, alias[idx]).astype(jnp.int32)
+
+
 def fused_negative_ids(
     seed: jax.Array, prob: jax.Array, alias: jax.Array, shape: tuple[int, ...]
 ) -> jax.Array:
@@ -80,11 +96,7 @@ def fused_negative_ids(
     for s in shape:
         n *= s
     base = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
-    u_idx = counter_uniforms(seed, base * jnp.uint32(2))
-    u_acc = counter_uniforms(seed, base * jnp.uint32(2) + jnp.uint32(1))
-    V = prob.shape[0]
-    idx = jnp.minimum((u_idx * V).astype(jnp.int32), V - 1)
-    return jnp.where(u_acc < prob[idx], idx, alias[idx]).astype(jnp.int32)
+    return alias_draw_from_counters(seed, prob, alias, base)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,12 @@ Cases:
   async_fused    — `pallas_fused` engine: the alias draw moves *inside*
                    the step kernel; negative ids and (B,K) logit/grad
                    intermediates never appear as HBM arrays.
+  async_fused_hbm— `pallas_fused_hbm` engine: the fused step with the
+                   (V, d) tables *HBM-resident* — a grid of pair blocks
+                   DMA-gathers/scatters only the touched rows, which is
+                   what makes the 300k×500 sub-model shape of this very
+                   dry-run feasible per worker. Same zero-collective
+                   assertion as every async engine.
   sync           — the synchronized strawman (Hogwild/MLLib stand-in):
                    data-parallel minibatch SGNS, dense-gradient psum
                    every step (the 600 MB/step the paper eliminates).
@@ -53,6 +59,7 @@ ASYNC_ENGINES = {
     "async_alias": "sparse:alias",
     "async_pallas": "pallas",
     "async_fused": "pallas_fused",
+    "async_fused_hbm": "pallas_fused_hbm",
 }
 
 
@@ -147,7 +154,8 @@ def compare_sampler_paths(rows: list[dict]) -> None:
     is purely the per-chip compute/memory roofline terms."""
     by_case = {r["arch"]: r for r in rows}
     base = by_case.get("sgns-async")
-    for other in ("sgns-async_alias", "sgns-async_fused"):
+    for other in ("sgns-async_alias", "sgns-async_fused",
+                  "sgns-async_fused_hbm"):
         r = by_case.get(other)
         if not (base and r):
             continue
@@ -165,7 +173,7 @@ def main(argv=None):
                     default="async,async_alias,sync,local_sgd_8,"
                             "local_sgd_64,merge_alir_iter",
                     help="comma list; also available: async_pallas, "
-                         "async_fused")
+                         "async_fused, async_fused_hbm")
     ap.add_argument("--workers", type=int, default=WORKERS)
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--batch", type=int, default=BATCH)

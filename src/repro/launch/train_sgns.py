@@ -7,8 +7,11 @@
 Runs the full pipeline on the synthetic corpus (see DESIGN.md §4) and
 prints paper-style scores + timings. ``--engine`` selects the per-step
 update engine (``sparse``, ``dense``, ``pallas``, ``pallas_fused``,
-optionally with a sampler suffix like ``sparse:alias``); Pallas engines
-run in interpret mode on CPU, Mosaic on TPU.
+``pallas_fused_hbm``, optionally with a sampler suffix like
+``sparse:alias``); Pallas engines run in interpret mode on CPU, Mosaic
+on TPU. ``pallas_fused_hbm`` keeps the parameter tables HBM-resident
+and DMA-streams only the touched rows per pair block — the engine for
+paper-scale (300k×500) sub-models.
 """
 
 from __future__ import annotations
@@ -44,8 +47,8 @@ def main(argv=None):
                     help="also train the synchronized baseline")
     ap.add_argument("--engine", default="sparse", type=get_engine,
                     help="update engine: dense | sparse | pallas | "
-                         "pallas_fused, optionally ':cdf'/':alias' "
-                         "(e.g. sparse:alias)")
+                         "pallas_fused | pallas_fused_hbm, optionally "
+                         "':cdf'/':alias' (e.g. sparse:alias)")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     args = ap.parse_args(argv)
 

@@ -8,11 +8,48 @@ import pytest
 
 from repro.core.distributions import build_alias_table, alias_implied_probs
 from repro.data.pairs import (
-    AliasSampler, NegativeSampler, negative_sampler_fn, unigram_noise_probs)
+    AliasSampler, NegativeSampler, build_noise_table, cdf_to_ids,
+    negative_sampler_fn, sample_negatives_cdf, unigram_noise_probs)
 
 
 def _zipf_counts(V, seed=0):
     return np.random.default_rng(seed).zipf(1.3, V).astype(np.float64)
+
+
+# --------------------------------------------- CDF boundary regression
+def test_cdf_boundaries_never_map_to_zero_probability_ids():
+    """Regression: zero-count union rows duplicate CDF boundaries.
+    u == 0.0 (with a leading zero-count row) or u exactly on a
+    duplicated boundary used to return a zero-probability id — a row
+    absent from the worker's vocabulary, which corrupted the merge
+    presence mask. Adversarial u values must all land on positive-
+    probability ids."""
+    counts = np.array([0, 5, 0, 0, 3, 0, 0, 2, 1, 0], dtype=np.float64)
+    p = unigram_noise_probs(counts)
+    assert (p == 0).any()                      # the trap is actually set
+    cdf = build_noise_table(counts, kind="cdf")
+    u = jnp.concatenate([
+        jnp.zeros(1, jnp.float32),             # the u == 0.0 case
+        cdf[cdf < 1.0],                        # every exact boundary
+        jnp.asarray([np.nextafter(np.float32(1.0), np.float32(0.0))]),
+    ])                                         # (u ~ U[0,1) never hits 1.0)
+    ids = np.asarray(cdf_to_ids(cdf, u))
+    assert (p[ids] > 0).all(), ids
+
+
+def test_sample_negatives_cdf_skips_interspersed_zero_count_rows():
+    """Drawn ids always have positive probability, at draw counts where
+    the old boundary handling reliably produced zero-prob hits."""
+    rng = np.random.default_rng(4)
+    counts = rng.zipf(1.3, 900).astype(np.float64)
+    counts[::3] = 0.0                          # interspersed absent rows
+    p = unigram_noise_probs(counts)
+    cdf = build_noise_table(counts, kind="cdf")
+    draws = np.asarray(
+        sample_negatives_cdf(cdf, jax.random.PRNGKey(2), (300_000,)))
+    assert (p[draws] > 0).all()
+    # distribution still matches the target on the present rows
+    assert _empirical_kl(draws, p) < 1e-2
 
 
 # ------------------------------------------------------------- table build

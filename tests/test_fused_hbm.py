@@ -1,0 +1,227 @@
+"""HBM-blocked fused SGNS engine: bit-equivalence against the sparse
+reference at table sizes beyond the VMEM-resident kernel's envelope,
+block-draw replay, per-pair sequential semantics, and trainer wiring.
+
+The bit-identity comparisons use ``jax.jit(train_step_sparse)`` — the
+form every engine actually runs it in. (The eager op-by-op form can
+differ in the last ulp because XLA only fuses multiply-adds into FMAs
+inside a jitted graph.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sgns
+from repro.core.engine import FusedHBMPallasEngine, get_engine
+from repro.core.sgns import SGNSConfig
+from repro.data.pairs import build_noise_table
+from repro.kernels.sgns_fused import fused_negative_ids
+from repro.kernels.sgns_fused_hbm import (
+    _block_negative_ids, _pick_block_pairs, sgns_fused_hbm_step)
+
+# Deliberately past the VMEM-resident kernel's intended envelope:
+# 2 tables × V × d × 4 B = 2 × 34_000 × 64 × 4 ≈ 17.4 MB > ~16 MB VMEM.
+V_BIG, D_BIG = 34_000, 64
+B, K = 64, 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SGNSConfig(vocab_size=V_BIG, dim=D_BIG, negatives=K)
+
+
+@pytest.fixture(scope="module")
+def world(cfg):
+    rng = np.random.default_rng(0)
+    params = {
+        "W": jnp.asarray(0.01 * rng.normal(size=(V_BIG, D_BIG)), jnp.float32),
+        "C": jnp.asarray(0.01 * rng.normal(size=(V_BIG, D_BIG)), jnp.float32),
+    }
+    c = jnp.asarray(rng.integers(0, V_BIG, B, dtype=np.int32))
+    x = jnp.asarray(rng.integers(0, V_BIG, B, dtype=np.int32))
+    # force duplicate rows within one block: the RMW scatter must
+    # accumulate exactly like the sparse reference's scatter-add
+    c = c.at[1].set(c[0])
+    x = x.at[3].set(x[2])
+    counts = rng.zipf(1.3, V_BIG).astype(np.float64)
+    table = build_noise_table(counts, kind="alias")
+    return params, c, x, table
+
+
+def _sparse_blocked(params, c, x, ids, lr, blk):
+    """The reference: one jitted sparse step per pair block."""
+    step = jax.jit(sgns.train_step_sparse)
+    params = jax.tree.map(jnp.copy, params)
+    losses = []
+    for b0 in range(0, c.shape[0], blk):
+        params, loss = step(params, c[b0:b0 + blk], x[b0:b0 + blk],
+                            ids[b0:b0 + blk], lr)
+        losses.append(float(loss))
+    return params, losses
+
+
+# ------------------------------------------------------------ block picker
+def test_pick_block_pairs_clamps_to_batch():
+    assert _pick_block_pairs(96, 256) == 96
+    assert _pick_block_pairs(96, 32) == 32
+    assert _pick_block_pairs(96, 50) == 50         # remainder → tail block
+    assert _pick_block_pairs(97, 50) == 50         # prime batch: NOT 1
+    assert _pick_block_pairs(8, 0) == 1
+
+
+def test_non_dividing_block_uses_tail_invocation(cfg, world):
+    """B not a multiple of block_pairs: the shorter tail block must
+    still be bit-identical to the per-block sparse reference (and not
+    silently degrade to single-pair blocks)."""
+    params, c, x, table = world
+    key = jax.random.PRNGKey(31)
+    lr = jnp.float32(0.025)
+    blk = 40                                        # 64 = 40 + tail 24
+    ph, _ = sgns_fused_hbm_step(
+        jax.tree.map(jnp.copy, params), c, x, table, key, lr,
+        negatives=K, block_pairs=blk, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
+                             table["alias"], (B, K))
+    pr, _ = _sparse_blocked(params, c, x, ids, lr, blk)
+    np.testing.assert_array_equal(np.asarray(ph["W"]), np.asarray(pr["W"]))
+    np.testing.assert_array_equal(np.asarray(ph["C"]), np.asarray(pr["C"]))
+
+
+# ------------------------------------------------------------- draw replay
+def test_block_draws_equal_full_batch_replay(world):
+    """Per-block counters are global row-major positions, so the blocks'
+    draws concatenate to exactly fused_negative_ids((B, K))."""
+    _, _, _, table = world
+    seed = jax.random.PRNGKey(17).astype(jnp.uint32)
+    full = fused_negative_ids(seed, table["prob"], table["alias"], (B, K))
+    blk = 16
+    parts = [_block_negative_ids(seed, table["prob"], table["alias"],
+                                 jnp.int32(b0), blk, K)
+             for b0 in range(0, B, blk)]
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(parts)), np.asarray(full))
+
+
+# ------------------------------------------------------------- equivalence
+def test_single_block_bit_identical_to_sparse_step(cfg, world):
+    """One block covering the batch ⇒ bit-identical to a single sparse
+    step on the replayed negatives — at a (V, d) the VMEM-resident
+    fused kernel is not sized for."""
+    params, c, x, table = world
+    key = jax.random.PRNGKey(5)
+    lr = jnp.float32(0.03)
+    ph, loss_h = sgns_fused_hbm_step(
+        jax.tree.map(jnp.copy, params), c, x, table, key, lr,
+        negatives=K, block_pairs=B, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
+                             table["alias"], (B, K))
+    ps, loss_s = jax.jit(sgns.train_step_sparse)(
+        jax.tree.map(jnp.copy, params), c, x, ids, lr)
+    np.testing.assert_array_equal(np.asarray(ph["W"]), np.asarray(ps["W"]))
+    np.testing.assert_array_equal(np.asarray(ph["C"]), np.asarray(ps["C"]))
+    assert float(loss_h) == pytest.approx(float(loss_s), rel=1e-6)
+
+
+def test_blocked_step_bit_identical_to_per_block_sparse(cfg, world):
+    """Multi-block: block b+1's gathers must see block b's applied
+    updates ⇒ bit-identical to running the sparse step block by block."""
+    params, c, x, table = world
+    key = jax.random.PRNGKey(11)
+    lr = jnp.float32(0.025)
+    blk = 16
+    ph, loss_h = sgns_fused_hbm_step(
+        jax.tree.map(jnp.copy, params), c, x, table, key, lr,
+        negatives=K, block_pairs=blk, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
+                             table["alias"], (B, K))
+    pr, losses = _sparse_blocked(params, c, x, ids, lr, blk)
+    np.testing.assert_array_equal(np.asarray(ph["W"]), np.asarray(pr["W"]))
+    np.testing.assert_array_equal(np.asarray(ph["C"]), np.asarray(pr["C"]))
+    assert float(loss_h) == pytest.approx(np.mean(losses), rel=1e-5)
+
+
+def test_sequential_matches_per_pair_sparse_to_ulp(cfg, world):
+    """sequential=True is word2vec's true update order: a chain of
+    batch-size-1 sparse steps. Ulp-level tolerance, not bitwise — XLA
+    is free to contract a*b+c into FMA differently in the two
+    compilations (values here are O(1e-2), so 1e-8 ≈ a couple ulps)."""
+    params, c, x, table = world
+    B2 = 24
+    key = jax.random.PRNGKey(23)
+    lr = jnp.float32(0.025)
+    ph, _ = sgns_fused_hbm_step(
+        jax.tree.map(jnp.copy, params), c[:B2], x[:B2], table, key, lr,
+        negatives=K, block_pairs=8, sequential=True, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
+                             table["alias"], (B2, K))
+    pr, _ = _sparse_blocked(params, c[:B2], x[:B2], ids, lr, blk=1)
+    np.testing.assert_allclose(np.asarray(ph["W"]), np.asarray(pr["W"]),
+                               atol=1e-8, rtol=0)
+    np.testing.assert_allclose(np.asarray(ph["C"]), np.asarray(pr["C"]),
+                               atol=1e-8, rtol=0)
+
+
+def test_sequential_differs_from_blocked(cfg, world):
+    """The two semantics are genuinely different update orders (if they
+    were equal the ``sequential`` field would be dead weight)."""
+    params, c, x, table = world
+    B2 = 24
+    key = jax.random.PRNGKey(23)
+    lr = jnp.float32(0.025)
+    kw = dict(negatives=K, block_pairs=8, interpret=True)
+    pa, _ = sgns_fused_hbm_step(jax.tree.map(jnp.copy, params), c[:B2],
+                                x[:B2], table, key, lr, **kw)
+    pb, _ = sgns_fused_hbm_step(jax.tree.map(jnp.copy, params), c[:B2],
+                                x[:B2], table, key, lr, sequential=True, **kw)
+    assert not np.array_equal(np.asarray(pa["C"]), np.asarray(pb["C"]))
+
+
+# ------------------------------------------------------------ engine wiring
+def test_engine_fields_and_registry():
+    eng = get_engine("pallas_fused_hbm")
+    assert isinstance(eng, FusedHBMPallasEngine)
+    assert eng.table_kind == "alias"
+    assert eng.block_pairs == 256 and eng.sequential is False
+    assert get_engine("pallas_fused_hbm", block_pairs=64).block_pairs == 64
+    assert get_engine(eng, sequential=True).sequential is True
+    with pytest.raises(ValueError, match="alias"):
+        get_engine("pallas_fused_hbm:cdf")
+
+
+def test_engine_step_equals_kernel_entrypoint(cfg, world):
+    params, c, x, table = world
+    eng = get_engine("pallas_fused_hbm", block_pairs=32, interpret=True)
+    step = eng.make_step(cfg, total_steps=1000)
+    p1, l1 = step(jax.tree.map(jnp.copy, params), c, x, table,
+                  jax.random.PRNGKey(3), jnp.int32(0))
+    lr = sgns.linear_lr(jnp.int32(0), 1000, cfg)
+    p2, l2 = sgns_fused_hbm_step(jax.tree.map(jnp.copy, params), c, x, table,
+                                 jax.random.PRNGKey(3), lr, negatives=K,
+                                 block_pairs=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(p1["W"]), np.asarray(p2["W"]))
+    assert float(l1) == float(l2)
+
+
+def test_trainer_epoch_trains_with_hbm_engine():
+    """AsyncShardTrainer (vmap backend, scan over steps) runs the HBM
+    engine and the loss drops below the init plateau — the trainer-level
+    wiring the driver and CLIs sit on."""
+    from repro.core.async_trainer import AsyncShardTrainer
+
+    cfg = SGNSConfig(vocab_size=150, dim=32, negatives=4)
+    rng = np.random.default_rng(0)
+    n, S, Bt = 2, 12, 64
+    c = jnp.asarray(rng.integers(0, 30, (n, S, Bt)), jnp.int32)
+    x = jnp.asarray((np.asarray(c) + 1) % 30, jnp.int32)
+    counts = rng.zipf(1.3, cfg.vocab_size).astype(np.float64)
+    table = jax.tree.map(lambda a: jnp.stack([a, a]),
+                         build_noise_table(counts, kind="alias"))
+    tr = AsyncShardTrainer(cfg=cfg, num_workers=n, total_steps=S,
+                           engine=get_engine("pallas_fused_hbm",
+                                             block_pairs=16))
+    p = tr.init(jax.random.PRNGKey(0))
+    p, losses = tr.epoch(p, c, x, table, jax.random.PRNGKey(4))
+    assert np.isfinite(np.asarray(losses)).all()
+    assert float(losses[:, -1].mean()) < (cfg.negatives + 1) * np.log(2)

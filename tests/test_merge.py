@@ -70,6 +70,64 @@ def test_alir_reconstructs_missing_rows():
         assert err < 0.1, (i, err)
 
 
+def test_alir_trace_frozen_after_convergence():
+    """Regression: the scan kept recomputing (and mutating) the reported
+    displacement after ``done``, so the trace misreported the converged
+    error. Once the tol criterion fires, every later trace entry must be
+    exactly the converged displacement."""
+    # noise-free rotated models converge in a couple of iterations
+    _, stacked = make_rotated_models(V=80, d=8, n=3, noise=0.0, seed=7)
+    tol = 1e-4
+    _, _, disps = mg.merge_alir(stacked, init="random", max_iters=20, tol=tol)
+    d = np.asarray(disps)
+    deltas = np.abs(np.diff(d, prepend=np.inf))
+    conv = int(np.argmax(deltas < tol))         # first converged iteration
+    assert deltas[conv] < tol                   # it did converge in budget
+    np.testing.assert_array_equal(d[conv:], np.full(len(d) - conv, d[conv]))
+
+
+def test_alir_converged_result_unchanged_by_extra_iterations():
+    """Freezing must not change the merge result: Y after max_iters=6 and
+    max_iters=20 is identical once converged before iteration 6."""
+    _, stacked = make_rotated_models(V=80, d=8, n=3, noise=0.0, seed=7)
+    key = jax.random.PRNGKey(1)
+    y1, _, d1 = mg.merge_alir(stacked, init="random", max_iters=6, key=key)
+    y2, _, d2 = mg.merge_alir(stacked, init="random", max_iters=20, key=key)
+    assert np.abs(np.diff(np.asarray(d1))).min() < 1e-4  # converged in 6
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_reconstruct_missing_roundtrip_recovers_true_rows():
+    """Paper §4.5 robustness claim: embed a known rotation per sub-model,
+    mask rows out, and the per-model reconstruction from the consensus
+    must recover the held-out rows (which were never seen by the merge)."""
+    rng = np.random.default_rng(11)
+    V, d, n = 140, 10, 4
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks, truth = [], [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        M_true = (Y @ q).astype(np.float32)
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) >= 0.35
+        mask[: d + 2] = True
+        M = M_true.copy()
+        M[~mask] = 7.7          # garbage where absent: must not leak in
+        models.append(M)
+        masks.append(mask)
+        truth.append(M_true)
+    stacked = mg.stack_models(models, masks)
+    rec = np.asarray(mg.reconstruct_missing(stacked, jnp.asarray(Y)))
+    for i in range(n):
+        missing = ~masks[i]
+        if not missing.any():
+            continue
+        # held-out rows recovered in the sub-model's own rotated space
+        err = np.abs(rec[i][missing] - truth[i][missing]).max()
+        assert err < 1e-3, (i, err)
+        # present rows pass through untouched
+        np.testing.assert_array_equal(rec[i][~missing], models[i][~missing])
+
+
 def test_average_fails_without_alignment_alir_does_not():
     """Paper §3.3.1 counter-example: sub-models differing by a rotation.
 

@@ -63,6 +63,83 @@ def test_sync_baseline_trains(world):
     assert np.isfinite(np.asarray(params["W"])).all()
 
 
+def test_epoch_keys_distinct_across_seed_epoch_pairs():
+    """Regression: the old arithmetic seeds (seed*1000+epoch etc.)
+    collide — e.g. (seed=1, epoch=1000) and (seed=2, epoch=0) shared a
+    PRNG stream. fold_in chains must give pairwise-distinct keys over a
+    (seed, stream, epoch) grid, including the old collision pairs."""
+    from repro.core.driver import _epoch_key, _epoch_rng
+
+    # the documented collisions of the old scheme
+    a = _epoch_key(1, 0, 1000)
+    b = _epoch_key(2, 0, 0)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    seen = set()
+    for seed in (0, 1, 2, 31, 77):
+        for stream in (0, 1, 2):
+            for epoch in (0, 1, 2, 77, 1000):
+                seen.add(tuple(np.asarray(_epoch_key(seed, stream, epoch))))
+    assert len(seen) == 5 * 3 * 5
+    # numpy side: distinct first draws for the old-collision pairs
+    r1 = _epoch_rng(1, 2, 77).integers(0, 2**63, 8)
+    r2 = _epoch_rng(2, 2, 0).integers(0, 2**63, 8)
+    assert not np.array_equal(r1, r2)
+
+
+def test_numpy_seed_namespaces_are_disjoint():
+    """The driver's epoch streams, the pipeline's whole-epoch extraction
+    streams and its per-block streams must never alias — including the
+    two traps SeedSequence sets: a stream tag equal to a worker index,
+    and trailing-zero absorption making (…, e) == (…, e, 0)."""
+    from repro.core.driver import _epoch_rng
+    from repro.data.pipeline import _extract_seed
+
+    def first(ss):
+        return tuple(np.random.default_rng(ss).integers(0, 2**63, 4))
+
+    seen = {tuple(_epoch_rng(0, stream, 1).integers(0, 2**63, 4))
+            for stream in (0, 1, 2)}
+    # driver stream 2 vs pipeline worker 2, same (seed, epoch)
+    seen.add(first(_extract_seed(0, 2, 1)))
+    # whole-epoch vs block-0 of the same (seed, worker, epoch)
+    seen.add(first(_extract_seed(0, 1, 2)))
+    seen.add(first(_extract_seed(0, 1, 2, block=0)))
+    seen.add(first(_extract_seed(0, 1, 2, block=1)))
+    assert len(seen) == 7
+
+
+def test_tiled_permutation_reshuffles_each_tile():
+    """Regression: a corpus smaller than one batch used to tile the SAME
+    permutation verbatim — every pass replayed pairs in identical order."""
+    from repro.core.driver import _tiled_permutation
+
+    rng = np.random.default_rng(0)
+    n, need = 40, 200
+    perm = _tiled_permutation(rng, n, need)
+    assert perm.shape == (need,)
+    tiles = perm.reshape(need // n, n)
+    for t in tiles:                       # each tile is a full epoch pass
+        np.testing.assert_array_equal(np.sort(t), np.arange(n))
+    assert any(not np.array_equal(tiles[0], t) for t in tiles[1:])
+    # the no-tiling fast path still subsamples a single permutation
+    short = _tiled_permutation(np.random.default_rng(1), 100, 60)
+    assert short.shape == (60,) and len(set(short)) == 60
+
+
+def test_sync_baseline_tiny_corpus_trains():
+    """Corpus far smaller than one batch: the baseline must still train
+    (tiles reshuffled, losses finite and improving on average)."""
+    gen = SemanticCorpusModel.create(vocab_size=120, seed=4)
+    tiny = gen.generate(num_sentences=40, seed=5)
+    cfg = SGNSConfig(vocab_size=0, dim=16, window=3, negatives=3)
+    params, vocab, info = train_sync_baseline(
+        tiny, 120, cfg, epochs=3, batch_size=256, window=3, max_vocab=None)
+    assert np.isfinite(np.asarray(params["W"])).all()
+    assert np.isfinite(info["losses"]).all()
+    assert info["losses"][-1] < info["losses"][0]
+
+
 def test_pipeline_merge_union_covers_benchmarks(world):
     """Random sampling w/ per-worker vocab: union vocab recovers nearly
     all frequent words even when single sub-models miss them."""
