@@ -65,7 +65,8 @@ def main(argv=None) -> None:
     run("table3_merge", bench_merge.main,
         lambda rows: "best=%s" % max(rows, key=lambda r: r['similarity'])['method'])
     run("table4_wallclock", bench_wallclock.main,
-        lambda rows: "speedup=%.1fx" % rows["speedup_projected"])
+        lambda rows: "speedup=%.1fx;engine_rows=%d" % (
+            rows["speedup_projected"], len(rows["engines"])))
     run("fig3_oov", bench_oov.main,
         lambda rows: "alir@50%%sim=%.3f" % next(
             r['similarity'] for r in rows

@@ -50,8 +50,17 @@ def main():
                     help="steps per fixed-shape streamed chunk")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="chunk prefetch depth (host/device overlap)")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="ingestion host count (default: "
+                         "jax.process_count()); >1 shards the worker "
+                         "streams per host and trains under shard_map")
+    ap.add_argument("--process-index", type=int, default=None,
+                    help="this host's index (default: jax.process_index())")
     ap.add_argument("--save", default="/tmp/w2v_100m.npz")
     args = ap.parse_args()
+
+    from repro.launch.mesh import multihost_train_kwargs
+    processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
     print(f"model: 2 × {args.vocab} × {args.dim} = "
           f"{2*args.vocab*args.dim/1e6:.0f}M parameters")
@@ -69,7 +78,9 @@ def main():
         cfg=cfg, epochs=args.epochs, batch_size=1024, window=5,
         max_vocab=args.vocab, base_min_count=10,
         max_steps_per_epoch=args.steps, engine=args.engine,
-        steps_per_chunk=args.steps_per_chunk, prefetch=args.prefetch)
+        steps_per_chunk=args.steps_per_chunk, prefetch=args.prefetch,
+        process_index=args.process_index, process_count=processes,
+        **train_kw)
     print(f"async training: {res.timings['train_s']:.1f}s total "
           f"({res.timings['train_s']/args.workers:.1f}s/worker projected "
           f"parallel), losses {['%.3f' % l for l in res.losses]}")

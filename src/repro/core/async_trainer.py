@@ -107,6 +107,11 @@ class AsyncShardTrainer:
     ``"pallas_fused"`` / ``"pallas_fused_hbm"``, optionally ``":cdf"`` /
     ``":alias"``) that owns the per-step compute; resolved once at
     construction.
+    ``plan`` — optional :class:`repro.data.pipeline.HostShardPlan` for
+    multi-host ingestion: this host feeds :meth:`device_chunk` only its
+    own workers' extracted rows and the trainer assembles the global
+    ``(n, ...)`` device arrays (zero inter-host parameter traffic — the
+    only multi-host exchange is the input assembly itself).
     """
 
     cfg: SGNSConfig
@@ -115,14 +120,33 @@ class AsyncShardTrainer:
     backend: str = "vmap"
     mesh: Mesh | None = None
     engine: object = "sparse"
+    plan: object = None
     _jitted: object = field(default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         self.engine = get_engine(self.engine)
+        if self.plan is not None:
+            if self.plan.num_workers != self.num_workers:
+                raise ValueError(
+                    f"plan covers {self.plan.num_workers} workers, "
+                    f"trainer has {self.num_workers}")
+            if self.plan.process_count > 1 and (
+                    self.backend != "shard_map" or self.mesh is None):
+                raise ValueError(
+                    "multi-host ingestion needs backend='shard_map' "
+                    "and a mesh")
 
     def init(self, key: jax.Array) -> dict:
         keys = jax.random.split(key, self.num_workers)
-        return jax.vmap(lambda k: sgns.init_params(k, self.cfg))(keys)
+        fn = jax.vmap(lambda k: sgns.init_params(k, self.cfg))
+        if self.backend == "shard_map" and self.mesh is not None:
+            # Worker-sharded global tables from the start: on a
+            # multi-process runtime the epoch's shard_map inputs must
+            # already be global arrays (host-local default placement
+            # cannot be resharded across processes implicitly).
+            sh = NamedSharding(self.mesh, P("worker"))
+            fn = jax.jit(fn, out_shardings={"W": sh, "C": sh})
+        return fn(keys)
 
     def _epoch_fn(self):
         return make_worker_epoch(self.cfg, self.total_steps,
@@ -153,6 +177,29 @@ class AsyncShardTrainer:
                 raise ValueError(self.backend)
             object.__setattr__(self, "_jitted", jax.jit(fn))
         return self._jitted
+
+    def device_chunk(self, centers, contexts):
+        """Host-local ``(num_local, S, B)`` chunk blocks → global
+        ``(n, S, B)`` device arrays (worker-sharded under a plan+mesh;
+        a plain transfer otherwise)."""
+        if self.plan is None or self.mesh is None:
+            return jnp.asarray(centers), jnp.asarray(contexts)
+        from repro.launch.mesh import assemble_worker_array
+
+        return (assemble_worker_array(self.mesh, self.plan, centers),
+                assemble_worker_array(self.mesh, self.plan, contexts))
+
+    def device_table(self, neg_table):
+        """Global worker-sharded noise table from this host's local
+        rows (pytree of ``(num_local, V)`` leaves under a plan+mesh;
+        passthrough otherwise)."""
+        if self.plan is None or self.mesh is None:
+            return neg_table
+        from repro.launch.mesh import assemble_worker_array
+
+        return jax.tree.map(
+            lambda a: assemble_worker_array(self.mesh, self.plan, a),
+            neg_table)
 
     def epoch(self, params, centers, contexts, neg_table, key, step0=0):
         """params: (n,V,d) pytree; centers/contexts: (n,S,B);

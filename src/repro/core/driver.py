@@ -35,7 +35,7 @@ from repro.data.corpus import Corpus
 from repro.data.pairs import stack_noise_tables
 from repro.data.vocab import Vocab, build_vocab, union_vocab, UNK
 from repro.data.pipeline import (
-    PairChunkStream, make_worker_streams, prefetch_chunks)
+    HostShardPlan, make_worker_streams, prefetch_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +71,15 @@ def _epoch_rng(seed: int, stream: int, epoch: int) -> np.random.Generator:
     disjoint from every other module's numpy streams)."""
     return np.random.default_rng(
         np.random.SeedSequence((_SEED_DOMAIN, seed, stream, epoch)))
+
+
+@jax.jit
+def _mean_loss(chunk_losses):
+    """Scalar epoch loss from the list of per-chunk loss arrays. Jitted
+    so it stays an SPMD computation on worker-sharded global arrays
+    (multi-host); the result is replicated, hence float()-able on every
+    host. Eager reductions would need fully-addressable shards."""
+    return jnp.mean(jnp.concatenate(chunk_losses, axis=-1))
 
 
 def _tiled_permutation(rng: np.random.Generator, n_pairs: int,
@@ -176,10 +185,29 @@ def train_submodels(
     steps_per_chunk: int = 128,
     prefetch: int = 2,
     sentences_per_block: int = 1024,
+    process_index: int | None = None,
+    process_count: int | None = None,
 ) -> PipelineResult:
+    """``process_index`` / ``process_count`` (default: the jax runtime's)
+    select multi-host ingestion: this host extracts only its
+    :class:`HostShardPlan` block of workers' chunk streams and the
+    global device arrays are assembled from the per-process blocks.
+    Everything per-host is a pure function of the plan, so any host
+    count can be simulated in one process (``tests/test_multihost.py``);
+    with ``process_count == 1`` the path is bit-identical to the
+    single-host stream."""
     rate = rate if rate is not None else 1.0 / num_workers
     window = window if window is not None else cfg.window
     engine = get_engine(engine)
+    plan = HostShardPlan.for_runtime(num_workers, process_index=process_index,
+                                     process_count=process_count)
+    multihost = plan.process_count > 1
+    if multihost:
+        if backend != "shard_map" or mesh is None:
+            raise ValueError(
+                "multi-host ingestion (process_count > 1) requires "
+                "backend='shard_map' and a mesh")
+        plan.validate_for_mesh(mesh)
 
     t0 = time.perf_counter()
     worker_vocabs, union, mask = build_worker_vocabs(
@@ -200,7 +228,11 @@ def train_submodels(
     # Size steps/epoch from a streamed epoch-0 count (O(block) memory —
     # no epoch of pairs is ever materialized; kept equal across workers,
     # shorter streams wrap, as word2vec re-iterates its shard). The count
-    # stops as soon as the step cap is known to be reached.
+    # stops as soon as the step cap is known to be reached. Counted over
+    # ALL workers on every host: the one-time O(epoch) count is
+    # replicated so the schedule is a pure function of (corpus, seed) —
+    # no inter-host min-reduction, and every host derives the identical
+    # step plan independently.
     count_cap = (None if max_steps_per_epoch is None
                  else max_steps_per_epoch * batch_size)
     min_pairs = min(s.count_pairs(0, sentences_per_block, max_pairs=count_cap)
@@ -214,10 +246,18 @@ def train_submodels(
 
     trainer = AsyncShardTrainer(
         cfg=cfg, num_workers=num_workers, total_steps=sched.total_steps,
-        backend=backend, mesh=mesh, engine=engine)
+        backend=backend, mesh=mesh, engine=engine,
+        plan=plan if multihost else None)
     params = trainer.init(jax.random.PRNGKey(cfg.seed))
+    if multihost:
+        # Each host contributes only its own workers' noise-table rows.
+        neg_table = trainer.device_table(
+            jax.tree.map(lambda a: np.asarray(a)[plan.start:plan.stop],
+                         neg_table))
 
-    chunk_stream = PairChunkStream(
+    # This host's ingestion: only its plan block of worker streams is
+    # ever extracted (single-host: the block is all workers).
+    chunk_stream = plan.chunk_stream(
         streams, batch_size=batch_size, steps_per_chunk=sched.chunk_steps,
         sentences_per_block=sentences_per_block)
 
@@ -228,16 +268,21 @@ def train_submodels(
         ep_losses = []
         # Host extraction + H2D copy of chunk k+1 overlap the device's
         # work on chunk k (async dispatch; queue depth = `prefetch`).
+        # Multi-host, the transfer is the per-chunk global assembly
+        # (make_array_from_process_local_data), done on the main thread.
         chunk_it = prefetch_chunks(
-            chunk_stream.chunks(epoch, sched.num_chunks), depth=prefetch)
+            chunk_stream.chunks(epoch, sched.num_chunks), depth=prefetch,
+            to_device=not multihost)
         for k, (centers, contexts) in enumerate(chunk_it):
+            if multihost:
+                centers, contexts = trainer.device_chunk(centers, contexts)
             params, chunk_losses = trainer.epoch(
                 params, centers, contexts, neg_table,
                 jax.random.fold_in(ep_key, k),
                 step0=sched.step0(epoch, k),
             )
             ep_losses.append(chunk_losses)
-        losses.append(float(jnp.mean(jnp.concatenate(ep_losses, axis=-1))))
+        losses.append(float(_mean_loss(ep_losses)))
     jax.block_until_ready(params)
     t_train = time.perf_counter() - t_train0
 

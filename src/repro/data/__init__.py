@@ -21,6 +21,7 @@ from repro.data.pairs import (
     subsample_mask,
 )
 from repro.data.pipeline import (
+    HostShardPlan,
     PairChunkStream,
     WorkerStream,
     make_worker_streams,
@@ -40,6 +41,7 @@ __all__ = [
     "build_noise_table",
     "stack_noise_tables",
     "subsample_mask",
+    "HostShardPlan",
     "PairChunkStream",
     "WorkerStream",
     "make_worker_streams",

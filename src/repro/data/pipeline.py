@@ -14,7 +14,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -225,6 +225,138 @@ class PairChunkStream:
             shape = (n, self.steps_per_chunk, self.batch_size)
             yield centers.reshape(shape), contexts.reshape(shape)
             done += 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-host ingestion planning.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HostShardPlan:
+    """Which workers' chunk streams THIS host extracts.
+
+    The paper scales by partitioning the *input*, not the parameters:
+    each worker's sample stream is a pure function of
+    ``(seed, worker, epoch)``, so a host needs nothing but its worker
+    ids to reproduce exactly the chunks a single-host run would have
+    produced for those workers. The plan is therefore a pure value —
+    no jax state, no communication — which is what lets tests simulate
+    any ``process_count`` inside one process and assert bit-identity
+    against the single-host stream.
+
+    Workers are block-partitioned contiguously and as evenly as
+    possible: host ``p`` owns ``[p·W//P, (p+1)·W//P)``. Contiguity
+    matters — it matches jax's row-major device order for a 1-D
+    ``worker`` mesh axis, so each host's extracted block is exactly the
+    process-local shard :func:`jax.make_array_from_process_local_data`
+    expects (see ``repro.launch.mesh.assemble_worker_array``).
+    """
+
+    process_index: int
+    process_count: int
+    num_workers: int
+
+    def __post_init__(self):
+        if self.process_count < 1:
+            raise ValueError(f"process_count must be >= 1, got {self.process_count}")
+        if not (0 <= self.process_index < self.process_count):
+            raise ValueError(
+                f"process_index {self.process_index} outside "
+                f"[0, {self.process_count})")
+        if self.num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {self.num_workers}")
+
+    # -------------------------------------------------- worker ownership
+    @property
+    def start(self) -> int:
+        return (self.process_index * self.num_workers) // self.process_count
+
+    @property
+    def stop(self) -> int:
+        return ((self.process_index + 1) * self.num_workers) // self.process_count
+
+    @property
+    def workers(self) -> range:
+        """Global worker ids this host owns (possibly empty when there
+        are more hosts than workers)."""
+        return range(self.start, self.stop)
+
+    @property
+    def num_local(self) -> int:
+        return self.stop - self.start
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def for_runtime(cls, num_workers: int, process_index: int | None = None,
+                    process_count: int | None = None) -> "HostShardPlan":
+        """Plan for the current jax runtime; either field can be pinned
+        explicitly (that is the whole single-host simulation story)."""
+        import jax
+
+        if process_count is None:
+            process_count = jax.process_count()
+        if process_index is None:
+            process_index = jax.process_index()
+        return cls(process_index=process_index, process_count=process_count,
+                   num_workers=num_workers)
+
+    @classmethod
+    def all_hosts(cls, process_count: int,
+                  num_workers: int) -> list["HostShardPlan"]:
+        """One plan per simulated host — the test harness's entry point."""
+        return [cls(p, process_count, num_workers)
+                for p in range(process_count)]
+
+    # ------------------------------------------------------- local views
+    def local_streams(self, streams: Sequence[WorkerStream]
+                      ) -> list[WorkerStream]:
+        """This host's slice of the global per-worker stream list."""
+        if len(streams) != self.num_workers:
+            raise ValueError(
+                f"plan covers {self.num_workers} workers, got "
+                f"{len(streams)} streams")
+        for w, s in zip(self.workers, streams[self.start:self.stop]):
+            if s.worker != w:
+                raise ValueError(
+                    f"stream at global position {w} claims worker "
+                    f"{s.worker}; streams must be ordered by worker id")
+        return list(streams[self.start:self.stop])
+
+    def chunk_stream(self, streams: Sequence[WorkerStream], *,
+                     batch_size: int, steps_per_chunk: int,
+                     sentences_per_block: int = 1024) -> PairChunkStream:
+        """The host-local :class:`PairChunkStream`: chunks of shape
+        ``(num_local, steps_per_chunk, batch)`` whose worker-axis
+        concatenation over all hosts is bit-identical to the single-host
+        stream over the same ``streams``."""
+        return PairChunkStream(
+            self.local_streams(streams), batch_size=batch_size,
+            steps_per_chunk=steps_per_chunk,
+            sentences_per_block=sentences_per_block)
+
+    # -------------------------------------------------------- validation
+    def validate_for_mesh(self, mesh) -> None:
+        """Check the plan can assemble global arrays on ``mesh``: a
+        ``worker`` axis spanning exactly ``num_workers`` positions, and
+        even per-process blocks (``make_array_from_process_local_data``
+        requires equal-shaped process-local shards)."""
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if "worker" not in axis_sizes:
+            raise ValueError(
+                f"mesh has no 'worker' axis (axes: {mesh.axis_names})")
+        if self.num_workers % axis_sizes["worker"] != 0:
+            raise ValueError(
+                f"num_workers={self.num_workers} not divisible by the "
+                f"worker axis size {axis_sizes['worker']}")
+        if self.num_workers % self.process_count != 0:
+            raise ValueError(
+                f"num_workers={self.num_workers} must divide evenly over "
+                f"{self.process_count} processes for per-host block "
+                f"sharding (got uneven blocks)")
+
+    def describe(self) -> str:
+        return (f"host {self.process_index}/{self.process_count}: "
+                f"workers [{self.start}, {self.stop}) "
+                f"({self.num_local} of {self.num_workers})")
 
 
 _SENTINEL = object()

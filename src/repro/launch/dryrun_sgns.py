@@ -148,6 +148,26 @@ def run(case: str, mesh, workers=WORKERS, steps=STEPS, batch=BATCH) -> dict:
     return row
 
 
+def print_ingestion_plans(workers: int, processes: int, steps: int,
+                          batch: int) -> list:
+    """Per-host ingestion shard plans for the run's worker count: which
+    workers each host extracts and the per-chunk block it contributes to
+    `make_array_from_process_local_data`. Pure planning — works for any
+    simulated `--processes` on a single-process dry-run."""
+    from repro.data.pipeline import HostShardPlan
+
+    plans = HostShardPlan.all_hosts(processes, workers)
+    print(f"== ingestion plan: {workers} workers over {processes} host(s)")
+    for plan in plans:
+        block_mb = plan.num_local * steps * batch * 4 * 2 / 1e6  # c + x int32
+        print(f"   {plan.describe()} — chunk block "
+              f"({plan.num_local}, {steps}, {batch}) ×2 int32 "
+              f"= {block_mb:.1f} MB/chunk")
+    owned = sorted(w for p in plans for w in p.workers)
+    assert owned == list(range(workers)), "plans must cover each worker once"
+    return plans
+
+
 def compare_sampler_paths(rows: list[dict]) -> None:
     """ROADMAP item 4: alias vs CDF negative-draw HLO cost, side by side.
     Both async rows are collective-free by assertion, so the comparison
@@ -177,7 +197,13 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=WORKERS)
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--processes", type=int, default=None,
+                    help="ingestion hosts to plan for (default: "
+                         "jax.process_count(); any count can be simulated)")
     args = ap.parse_args(argv)
+    processes = (args.processes if args.processes is not None
+                 else jax.process_count())
+    print_ingestion_plans(args.workers, processes, args.steps, args.batch)
     mesh = make_worker_mesh(args.workers)
     rows = [run(c, mesh, args.workers, args.steps, args.batch)
             for c in args.cases.split(",")]

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.driver import run_pipeline, train_sync_baseline
 from repro.core.engine import get_engine
 from repro.core.sgns import SGNSConfig
+from repro.launch.mesh import multihost_train_kwargs
 from repro.data.corpus import SemanticCorpusModel
 from repro.eval.benchmarks import BenchmarkSuite, evaluate_all
 from repro.checkpoint import save_checkpoint
@@ -49,8 +50,15 @@ def main(argv=None):
                     help="update engine: dense | sparse | pallas | "
                          "pallas_fused | pallas_fused_hbm, optionally "
                          "':cdf'/':alias' (e.g. sparse:alias)")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="ingestion host count (default: "
+                         "jax.process_count()); each host extracts only "
+                         "its HostShardPlan block of worker streams")
+    ap.add_argument("--process-index", type=int, default=None,
+                    help="this host's index (default: jax.process_index())")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     args = ap.parse_args(argv)
+    processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
     gen = SemanticCorpusModel.create(vocab_size=args.vocab, seed=0)
     corpus = gen.generate(num_sentences=args.sentences, seed=1)
@@ -62,7 +70,9 @@ def main(argv=None):
         corpus, args.vocab, strategy=args.strategy, num_workers=args.workers,
         cfg=cfg, epochs=args.epochs, batch_size=args.batch, rate=args.rate,
         window=args.window, max_vocab=None, base_min_count=20,
-        merge_methods=tuple(args.merge), engine=args.engine)
+        merge_methods=tuple(args.merge), engine=args.engine,
+        process_index=args.process_index, process_count=processes,
+        **train_kw)
     print(f"strategy={args.strategy} workers={args.workers} "
           f"engine={args.engine.describe()} "
           f"train={res.timings['train_s']:.1f}s "

@@ -162,17 +162,5 @@ def test_async_trainer_trains_with_alias_sampler():
     assert abs(results["cdf"] - results["alias"]) < 0.5
 
 
-def test_async_alias_epoch_has_zero_collectives():
-    """The paper's headline property survives the alias sampler: the
-    lowered async epoch still contains no cross-device collective."""
-    from repro.core.async_trainer import (
-        AsyncShardTrainer, assert_no_collectives, count_collective_ops)
-    from repro.core.sgns import SGNSConfig
-
-    mesh = jax.make_mesh((1,), ("worker",))
-    cfg = SGNSConfig(vocab_size=256, dim=32, negatives=2)
-    tr = AsyncShardTrainer(cfg=cfg, num_workers=1, total_steps=4,
-                           backend="shard_map", mesh=mesh,
-                           engine="sparse:alias")
-    txt = assert_no_collectives(tr.lower_epoch(steps=4, batch=64))
-    assert count_collective_ops(txt) == {}
+# (The "sparse:alias" zero-collective check lives in tests/test_engine.py's
+# parametrized engine × sampler matrix.)

@@ -210,18 +210,35 @@ def test_fused_steps_draw_fresh_negatives_each_scan_step(cfg, tables):
 
 
 # --------------------------------------------------------- no collectives
-def test_every_async_engine_is_collective_free(cfg):
-    """The paper's headline property holds for each engine's lowered
-    shard_map epoch — including the fused kernel (acceptance criterion)."""
+# Every registered engine × every sampler layout it supports. The single
+# source of truth for the paper's headline property — the per-engine
+# ad-hoc checks that used to live in test_system / test_alias are gone.
+ASYNC_ENGINE_SPECS = (
+    "dense:cdf", "dense:alias",
+    "sparse:cdf", "sparse:alias",
+    "pallas:cdf", "pallas:alias",
+    "pallas_fused:alias",            # fused engines sample in-kernel:
+    "pallas_fused_hbm:alias",        # alias is their only layout
+)
+
+
+def test_collective_spec_matrix_covers_registry():
+    """A new engine registered without a row here must fail loudly."""
+    assert {s.split(":")[0] for s in ASYNC_ENGINE_SPECS} == set(ENGINE_NAMES)
+
+
+@pytest.mark.parametrize("spec", ASYNC_ENGINE_SPECS)
+def test_async_engine_epoch_is_collective_free(cfg, spec):
+    """The paper's headline property holds for each engine × sampler:
+    the lowered shard_map epoch contains zero cross-device collectives."""
     from repro.core.async_trainer import (
         AsyncShardTrainer, assert_no_collectives, count_collective_ops)
 
     mesh = jax.make_mesh((1,), ("worker",))
-    for name in ENGINE_NAMES:
-        tr = AsyncShardTrainer(cfg=cfg, num_workers=1, total_steps=4,
-                               backend="shard_map", mesh=mesh, engine=name)
-        txt = assert_no_collectives(tr.lower_epoch(steps=4, batch=64))
-        assert count_collective_ops(txt) == {}, name
+    tr = AsyncShardTrainer(cfg=cfg, num_workers=1, total_steps=4,
+                           backend="shard_map", mesh=mesh, engine=spec)
+    txt = assert_no_collectives(tr.lower_epoch(steps=4, batch=64))
+    assert count_collective_ops(txt) == {}, spec
 
 
 # ----------------------------------------------------- sync epochs speak it

@@ -6,6 +6,11 @@ The bit-identity comparisons use ``jax.jit(train_step_sparse)`` — the
 form every engine actually runs it in. (The eager op-by-op form can
 differ in the last ulp because XLA only fuses multiply-adds into FMAs
 inside a jitted graph.)
+
+The kernel-equivalence tests run the HBM-blocked kernel in interpret
+mode at a (V, d) past the VMEM envelope — seconds each, so they carry
+``@pytest.mark.slow`` and run in the dedicated slow CI job
+(``pytest -m slow``); the tier-1 gate deselects them via addopts.
 """
 
 import jax
@@ -71,6 +76,7 @@ def test_pick_block_pairs_clamps_to_batch():
     assert _pick_block_pairs(8, 0) == 1
 
 
+@pytest.mark.slow
 def test_non_dividing_block_uses_tail_invocation(cfg, world):
     """B not a multiple of block_pairs: the shorter tail block must
     still be bit-identical to the per-block sparse reference (and not
@@ -105,6 +111,7 @@ def test_block_draws_equal_full_batch_replay(world):
 
 
 # ------------------------------------------------------------- equivalence
+@pytest.mark.slow
 def test_single_block_bit_identical_to_sparse_step(cfg, world):
     """One block covering the batch ⇒ bit-identical to a single sparse
     step on the replayed negatives — at a (V, d) the VMEM-resident
@@ -124,6 +131,7 @@ def test_single_block_bit_identical_to_sparse_step(cfg, world):
     assert float(loss_h) == pytest.approx(float(loss_s), rel=1e-6)
 
 
+@pytest.mark.slow
 def test_blocked_step_bit_identical_to_per_block_sparse(cfg, world):
     """Multi-block: block b+1's gathers must see block b's applied
     updates ⇒ bit-identical to running the sparse step block by block."""
@@ -142,6 +150,7 @@ def test_blocked_step_bit_identical_to_per_block_sparse(cfg, world):
     assert float(loss_h) == pytest.approx(np.mean(losses), rel=1e-5)
 
 
+@pytest.mark.slow
 def test_sequential_matches_per_pair_sparse_to_ulp(cfg, world):
     """sequential=True is word2vec's true update order: a chain of
     batch-size-1 sparse steps. Ulp-level tolerance, not bitwise — XLA
@@ -163,6 +172,7 @@ def test_sequential_matches_per_pair_sparse_to_ulp(cfg, world):
                                atol=1e-8, rtol=0)
 
 
+@pytest.mark.slow
 def test_sequential_differs_from_blocked(cfg, world):
     """The two semantics are genuinely different update orders (if they
     were equal the ``sequential`` field would be dead weight)."""
@@ -190,6 +200,7 @@ def test_engine_fields_and_registry():
         get_engine("pallas_fused_hbm:cdf")
 
 
+@pytest.mark.slow
 def test_engine_step_equals_kernel_entrypoint(cfg, world):
     params, c, x, table = world
     eng = get_engine("pallas_fused_hbm", block_pairs=32, interpret=True)
@@ -204,6 +215,7 @@ def test_engine_step_equals_kernel_entrypoint(cfg, world):
     assert float(l1) == float(l2)
 
 
+@pytest.mark.slow
 def test_trainer_epoch_trains_with_hbm_engine():
     """AsyncShardTrainer (vmap backend, scan over steps) runs the HBM
     engine and the loss drops below the init plateau — the trainer-level

@@ -1,0 +1,223 @@
+"""Simulated multi-host ingestion: every per-host path is a pure
+function of (process_index, process_count), so 1–8 hosts are simulated
+inside one process and checked bit-for-bit against the single-host
+stream — the contract that makes pod-scale ingestion testable in CI.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.data.corpus import SemanticCorpusModel
+from repro.data.pipeline import (
+    HostShardPlan, PairChunkStream, _extract_seed, make_worker_streams)
+from repro.data.vocab import build_vocab
+
+W = 6                       # global worker count under test
+PROCESS_COUNTS = (1, 2, 3, 8)   # 8 > W: some hosts legitimately own none
+STRATEGIES = ("equal", "random", "shuffle")
+CHUNK_KW = dict(batch_size=32, steps_per_chunk=4, sentences_per_block=128)
+
+
+@pytest.fixture(scope="module")
+def world():
+    gen = SemanticCorpusModel.create(vocab_size=300, seed=0)
+    corpus = gen.generate(num_sentences=1200, seed=1)
+    vocab = build_vocab(corpus, 300, min_count=1, max_size=None)
+    return corpus, vocab
+
+
+@pytest.fixture(scope="module")
+def streams_by_strategy(world):
+    corpus, vocab = world
+    return {s: make_worker_streams(corpus, vocab, num_workers=W, strategy=s,
+                                   window=3, seed=7)
+            for s in STRATEGIES}
+
+
+# ------------------------------------------------------------------ planner
+@pytest.mark.parametrize("process_count", PROCESS_COUNTS)
+def test_hosts_cover_each_worker_exactly_once(process_count):
+    plans = HostShardPlan.all_hosts(process_count, W)
+    owned = [w for p in plans for w in p.workers]
+    assert sorted(owned) == list(range(W))          # cover, exactly once
+    assert len(owned) == len(set(owned)) == W
+    # contiguous blocks in host order (the device-order property the
+    # per-process shard of make_array_from_process_local_data rests on)
+    assert [p.start for p in plans] == sorted(p.start for p in plans)
+    for p in plans:
+        assert p.stop - p.start == p.num_local
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="process_count"):
+        HostShardPlan(0, 0, 4)
+    with pytest.raises(ValueError, match="process_index"):
+        HostShardPlan(3, 2, 4)
+    with pytest.raises(ValueError, match="num_workers"):
+        HostShardPlan(0, 1, 0)
+    plan = HostShardPlan(0, 2, 4)
+    with pytest.raises(ValueError, match="streams"):
+        plan.local_streams([None] * 3)
+
+
+def test_for_runtime_defaults_to_jax_process_env():
+    plan = HostShardPlan.for_runtime(5)
+    assert plan == HostShardPlan(jax.process_index(), jax.process_count(), 5)
+    assert HostShardPlan.for_runtime(5, process_index=1, process_count=3) == \
+        HostShardPlan(1, 3, 5)
+
+
+def test_validate_for_mesh_rejects_uneven_blocks():
+    mesh = jax.make_mesh((1,), ("worker",))
+    HostShardPlan(0, 1, 4).validate_for_mesh(mesh)          # even: fine
+    with pytest.raises(ValueError, match="divide evenly"):
+        HostShardPlan(0, 3, 8).validate_for_mesh(mesh)
+    bad_axis = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="worker"):
+        HostShardPlan(0, 1, 4).validate_for_mesh(bad_axis)
+
+
+# ------------------------------------------------------- stream bit-identity
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("process_count", PROCESS_COUNTS)
+def test_host_streams_concat_bit_identical_to_single_host(
+        streams_by_strategy, process_count, strategy):
+    """The acceptance criterion: concatenating all simulated hosts'
+    extracted chunks (in host order) is bit-identical to today's
+    single-host PairChunkStream, for every strategy and host count."""
+    streams = streams_by_strategy[strategy]
+    base = list(PairChunkStream(streams, **CHUNK_KW).chunks(
+        epoch=0, num_chunks=3))
+    per_host = [
+        list(plan.chunk_stream(streams, **CHUNK_KW).chunks(
+            epoch=0, num_chunks=3))
+        for plan in HostShardPlan.all_hosts(process_count, W)
+    ]
+    for k in range(3):
+        c = np.concatenate([hc[k][0] for hc in per_host], axis=0)
+        x = np.concatenate([hc[k][1] for hc in per_host], axis=0)
+        np.testing.assert_array_equal(c, base[k][0])
+        np.testing.assert_array_equal(x, base[k][1])
+
+
+@pytest.mark.parametrize("strategy", ("random", "shuffle"))
+def test_host_extraction_only_touches_owned_workers(streams_by_strategy,
+                                                    strategy):
+    """A host's local chunk stream is built from exactly its plan's
+    worker streams — worker ids and per-worker pair rows line up."""
+    streams = streams_by_strategy[strategy]
+    plan = HostShardPlan(1, 3, W)                       # workers [2, 4)
+    local = plan.local_streams(streams)
+    assert [s.worker for s in local] == list(plan.workers)
+    base_c, _ = next(PairChunkStream(streams, **CHUNK_KW).chunks(0, 1))
+    host_c, _ = next(plan.chunk_stream(streams, **CHUNK_KW).chunks(0, 1))
+    np.testing.assert_array_equal(host_c, base_c[plan.start:plan.stop])
+
+
+@pytest.mark.parametrize("process_count", (2, 3, 8))
+def test_prng_streams_disjoint_across_hosts(process_count):
+    """Each (host, local worker) extraction stream is globally unique:
+    worker ids never repeat across hosts, so the domain-tagged
+    SeedSequences (and their first draws) are pairwise distinct."""
+    draws = []
+    for plan in HostShardPlan.all_hosts(process_count, W):
+        for w in plan.workers:
+            for epoch in (0, 1):
+                rng = np.random.default_rng(_extract_seed(7, w, epoch))
+                draws.append(tuple(rng.integers(0, 2**63, 4)))
+    assert len(draws) == len(set(draws)) == 2 * W
+
+
+def test_sentence_samples_disjoint_across_hosts(streams_by_strategy):
+    """Random/shuffle sentence draws differ per worker, hence per host —
+    no two hosts ingest the same sample stream."""
+    for strategy in ("random", "shuffle"):
+        streams = streams_by_strategy[strategy]
+        idx = [tuple(s.sentence_indices(epoch=0)) for s in streams]
+        assert len(set(idx)) == W
+
+
+# ------------------------------------------------------------- assembly
+def test_assemble_worker_array_roundtrip_and_sharding():
+    from repro.launch.mesh import assemble_worker_array
+
+    mesh = jax.make_mesh((1,), ("worker",))
+    plan = HostShardPlan(0, 1, 4)
+    local = np.arange(4 * 3 * 2, dtype=np.int32).reshape(4, 3, 2)
+    arr = assemble_worker_array(mesh, plan, local)
+    assert isinstance(arr, jax.Array)
+    np.testing.assert_array_equal(np.asarray(arr), local)
+    assert arr.sharding.spec == P("worker")
+    with pytest.raises(ValueError, match="worker rows"):
+        assemble_worker_array(mesh, plan, local[:3])
+
+
+def test_trainer_device_chunk_and_table_assemble_globals():
+    """AsyncShardTrainer under a single-host plan: device_chunk /
+    device_table produce worker-sharded global arrays identical to the
+    host blocks (the path the multi-host driver loop runs per chunk)."""
+    from repro.core.async_trainer import AsyncShardTrainer
+    from repro.core.sgns import SGNSConfig
+
+    mesh = jax.make_mesh((1,), ("worker",))
+    plan = HostShardPlan(0, 1, 2)
+    tr = AsyncShardTrainer(
+        cfg=SGNSConfig(vocab_size=64, dim=8, negatives=2), num_workers=2,
+        total_steps=4, backend="shard_map", mesh=mesh, plan=plan)
+    c = np.arange(2 * 4 * 8, dtype=np.int32).reshape(2, 4, 8)
+    gc, gx = tr.device_chunk(c, c + 1)
+    np.testing.assert_array_equal(np.asarray(gc), c)
+    np.testing.assert_array_equal(np.asarray(gx), c + 1)
+    assert gc.sharding.spec == P("worker")
+    table = {"prob": np.ones((2, 64), np.float32),
+             "alias": np.zeros((2, 64), np.int32)}
+    gt = tr.device_table(table)
+    assert gt["prob"].sharding.spec == P("worker")
+    np.testing.assert_array_equal(np.asarray(gt["alias"]), table["alias"])
+
+
+def test_trainer_rejects_mismatched_plan():
+    from repro.core.async_trainer import AsyncShardTrainer
+    from repro.core.sgns import SGNSConfig
+
+    with pytest.raises(ValueError, match="plan covers"):
+        AsyncShardTrainer(cfg=SGNSConfig(vocab_size=64, dim=8), num_workers=3,
+                          total_steps=4, plan=HostShardPlan(0, 1, 2))
+    with pytest.raises(ValueError, match="shard_map"):
+        AsyncShardTrainer(cfg=SGNSConfig(vocab_size=64, dim=8), num_workers=4,
+                          total_steps=4, plan=HostShardPlan(0, 2, 4))
+
+
+# ------------------------------------------------------------- driver
+def test_driver_process_args_are_bit_identical_single_host(world):
+    """Threading (process_index, process_count) through train_submodels
+    must not perturb the single-host path at all."""
+    from repro.core.driver import train_submodels
+    from repro.core.sgns import SGNSConfig
+
+    corpus, _ = world
+    kw = dict(strategy="shuffle", num_workers=2,
+              cfg=SGNSConfig(vocab_size=0, dim=16, window=3, negatives=2),
+              epochs=1, batch_size=128, window=3, max_vocab=None,
+              max_steps_per_epoch=8, steps_per_chunk=4)
+    a = train_submodels(corpus, 300, **kw)
+    b = train_submodels(corpus, 300, process_index=0, process_count=1, **kw)
+    np.testing.assert_array_equal(np.asarray(a.stacked.models),
+                                  np.asarray(b.stacked.models))
+    assert a.losses == b.losses
+
+
+def test_driver_rejects_multihost_without_mesh(world):
+    from repro.core.driver import train_submodels
+    from repro.core.sgns import SGNSConfig
+
+    corpus, _ = world
+    with pytest.raises(ValueError, match="shard_map"):
+        train_submodels(
+            corpus, 300, strategy="shuffle", num_workers=2,
+            cfg=SGNSConfig(vocab_size=0, dim=8, window=3, negatives=2),
+            epochs=1, batch_size=64, window=3, max_vocab=None,
+            max_steps_per_epoch=4, process_index=0, process_count=2)

@@ -54,6 +54,58 @@ def test_procrustes_orthogonality_property(v, d, seed):
     assert np.linalg.norm(A @ W - B) <= np.linalg.norm(A - B) + 1e-3
 
 
+def _random_stacked(rng, n, v, d, full=False):
+    models = rng.normal(size=(n, v, d)).astype(np.float32)
+    if full:
+        mask = np.ones((n, v), bool)
+    else:
+        mask = rng.random((n, v)) > 0.3
+        mask[0] = True                      # keep the union total
+    return mg.StackedModels(models=jnp.asarray(models),
+                            mask=jnp.asarray(mask))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 5), v=st.integers(10, 60), d=st.integers(2, 8),
+       seed=st.integers(0, 999))
+def test_merge_average_concat_permutation_equivariant(n, v, d, seed):
+    """Sub-model order is an artifact of worker numbering, so merges must
+    be equivariant under it: `average` is permutation-invariant, `concat`
+    permutes its column blocks, and both validity masks are invariant."""
+    rng = np.random.default_rng(seed)
+    stacked = _random_stacked(rng, n, v, d)
+    perm = rng.permutation(n)
+    permuted = mg.StackedModels(models=stacked.models[perm],
+                                mask=stacked.mask[perm])
+
+    avg, valid = mg.merge_average(stacked)
+    avg_p, valid_p = mg.merge_average(permuted)
+    # invariant up to float summation order over the n axis
+    np.testing.assert_allclose(np.asarray(avg_p), np.asarray(avg),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(valid_p), np.asarray(valid))
+
+    emb, cvalid = mg.merge_concat(stacked)
+    emb_p, cvalid_p = mg.merge_concat(permuted)
+    expect = np.asarray(emb).reshape(v, n, d)[:, perm].reshape(v, n * d)
+    np.testing.assert_array_equal(np.asarray(emb_p), expect)
+    np.testing.assert_array_equal(np.asarray(cvalid_p), np.asarray(cvalid))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 5), v=st.integers(10, 60), d=st.integers(2, 8),
+       seed=st.integers(0, 999))
+def test_reconstruct_missing_is_exact_when_nothing_is_missing(n, v, d, seed):
+    """With full presence masks there is nothing to reconstruct:
+    reconstruct_missing must return every sub-model bit-unchanged
+    (the `where` keeps original rows wherever the mask is set)."""
+    rng = np.random.default_rng(seed)
+    stacked = _random_stacked(rng, n, v, d, full=True)
+    Y = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    out = mg.reconstruct_missing(stacked, Y)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(stacked.models))
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(2, 5), seed=st.integers(0, 999))
 def test_alir_displacement_never_explodes(n, seed):
