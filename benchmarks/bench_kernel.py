@@ -2,9 +2,10 @@
 Pallas-kernel equivalence check (interpret mode; Mosaic on TPU), and an
 update-engine smoke sweep — one timed step per registered engine, so the
 benchmark artifact shows every step path (dense / sparse / pallas /
-pallas_fused / pallas_fused_hbm) side by side, including the blocked
-HBM-streaming engine's bit-equivalence against the per-block sparse
-reference."""
+pallas_fused / pallas_fused_hbm / pallas_fused_pipe) side by side,
+including the blocked HBM-streaming engines' bit-equivalence against
+the per-block sparse reference (the pipelined engine must match it —
+and therefore the unpipelined chain — bit for bit)."""
 
 from __future__ import annotations
 
@@ -98,6 +99,15 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
     hbm_err = float(max(jnp.max(jnp.abs(ph["W"] - pr["W"])),
                         jnp.max(jnp.abs(ph["C"] - pr["C"]))))
 
+    # pipelined HBM engine vs the same per-block sparse reference — the
+    # DMA pipeline (dedup + overlap + hazard ordering) must not move a
+    # single bit relative to the serial chain
+    eng_p = get_engine("pallas_fused_pipe")
+    pp, _ = eng_p.make_step(cfg, 1000)(
+        jax.tree.map(jnp.copy, params), c, x, table, key, jnp.int32(0))
+    pipe_err = float(max(jnp.max(jnp.abs(pp["W"] - pr["W"])),
+                         jnp.max(jnp.abs(pp["C"] - pr["C"]))))
+
     engine_us = engine_sweep(cfg, params, c, x, counts,
                              iters=3 if quick else 10, specs=engines)
     return {
@@ -107,6 +117,7 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
         "kernel_max_err": err,
         "fused_vs_sparse_err": fused_err,
         "fused_hbm_vs_sparse_err": hbm_err,
+        "fused_pipe_vs_sparse_err": pipe_err,
         "engine_us": engine_us,
         "B": B,
     }
@@ -132,6 +143,9 @@ def main(quick=False, engine=None):
     print(f"pallas_fused_hbm step vs per-block sparse ref max|Δ| = "
           f"{r['fused_hbm_vs_sparse_err']:.2e} "
           f"(HBM tables, DMA-gathered rows; bit-identical by contract)")
+    print(f"pallas_fused_pipe step vs per-block sparse ref max|Δ| = "
+          f"{r['fused_pipe_vs_sparse_err']:.2e} "
+          f"(pipelined DMA, deduped rows; bit-identical by contract)")
     for name, us in r["engine_us"].items():
         print(f"engine {name:12s}: {us:9.1f} µs/step "
               f"({r['B'] / (us / 1e6):.2e} pairs/s)")
@@ -144,7 +158,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default=None,
                     help="time only this engine's step (dense | sparse | "
-                         "pallas | pallas_fused | pallas_fused_hbm)")
+                         "pallas | pallas_fused | pallas_fused_hbm | "
+                         "pallas_fused_pipe)")
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
     main(quick=a.quick, engine=a.engine)

@@ -9,10 +9,13 @@ On one CPU device we measure real compute and report:
   * merge times (PCA / ALiR), the paper's "few minutes" claim;
   * near-linear scaling of training time with corpus fraction (Fig 2);
   * one wall-clock row PER UPDATE ENGINE (dense/sparse/pallas/
-    pallas_fused/pallas_fused_hbm) through the full streamed driver —
-    written to ``BENCH_wallclock.json`` (CI uploads it as an artifact
-    next to the CSV summary; override the path with
-    ``REPRO_BENCH_WALLCLOCK_JSON``).
+    pallas_fused/pallas_fused_hbm/pallas_fused_pipe) through the full
+    streamed driver — written to ``BENCH_wallclock.json`` (CI uploads
+    it as an artifact next to the CSV summary; override the path with
+    ``REPRO_BENCH_WALLCLOCK_JSON``). The committed repo-root
+    ``BENCH_wallclock.json`` is the regression BASELINE the CI
+    bench-gate compares fresh rows against
+    (``python -m benchmarks.check_regression``).
 """
 
 from __future__ import annotations
@@ -28,13 +31,15 @@ from repro.core.driver import run_pipeline, train_submodels, train_sync_baseline
 from repro.core.engine import ENGINE_NAMES
 
 
-def engine_rows(quick=False):
+def engine_rows(quick=False, steps=None):
     """One end-to-end wall-clock row per registered engine: the streamed
     driver (chunked ingest → async trainer → stacked tables), small
-    enough that the interpret-mode Pallas engines stay honest on CPU."""
+    enough that the interpret-mode Pallas engines stay honest on CPU.
+    ``steps`` overrides the per-epoch step count — the CI bench-gate
+    raises it so the rows are step- rather than compile-dominated."""
     gen, corpus, _ = fixture()
     workers = 4
-    steps = 6 if quick else 60
+    steps = steps if steps is not None else (6 if quick else 60)
     rows = []
     for name in ENGINE_NAMES:
         with timer() as t:
@@ -111,7 +116,14 @@ def write_engine_json(rows, path=None) -> str:
     return path
 
 
-def main(quick=False):
+def print_engine_rows(rows) -> None:
+    for r in rows["engines"]:
+        print(f"  {r['engine']:18s} {r['train_s']:7.2f}s train "
+              f"({r['steps_per_epoch']} steps × {r['workers']} workers, "
+              f"loss {r['final_loss']:.3f})")
+
+
+def main(quick=False, out=None):
     with timer() as t:
         rows = run(quick=quick)
     a, s = rows["async"], rows["sync"]
@@ -129,14 +141,36 @@ def main(quick=False):
               f"({r['steps']} steps, "
               f"{r['train_s']/max(base['train_s'],1e-9):.2f}× vs 25%)")
     print("per-engine wall-clock (streamed driver, 1 epoch):")
-    for r in rows["engines"]:
-        print(f"  {r['engine']:16s} {r['train_s']:7.2f}s train "
-              f"({r['steps_per_epoch']} steps × {r['workers']} workers, "
-              f"loss {r['final_loss']:.3f})")
-    path = write_engine_json(rows)
+    print_engine_rows(rows)
+    path = write_engine_json(rows, path=out)
     print(f"engine rows → {path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (the CI setting)")
+    ap.add_argument("--engines-only", action="store_true",
+                    help="run only the per-engine wall-clock sweep and "
+                         "write the JSON rows — what the CI bench-gate "
+                         "compares against the committed baseline")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="per-epoch steps for the engine sweep "
+                         "(engines-only; the bench-gate uses 24 so rows "
+                         "are step- rather than compile-dominated)")
+    ap.add_argument("--out", default=None,
+                    help="engine-rows JSON path (default "
+                         "BENCH_wallclock.json / "
+                         "$REPRO_BENCH_WALLCLOCK_JSON)")
+    a = ap.parse_args()
+    if a.engines_only:
+        with timer() as t:
+            rows = {"engines": engine_rows(quick=a.quick, steps=a.steps)}
+        print_engine_rows(rows)
+        path = write_engine_json(rows, path=a.out)
+        print(f"engine rows ({t.s:.1f}s) → {path}")
+    else:
+        main(quick=a.quick, out=a.out)

@@ -1,0 +1,120 @@
+"""Benchmark-regression gate: compare a fresh ``BENCH_wallclock.json``
+engine sweep against the committed repo-root baseline.
+
+  python -m benchmarks.check_regression \\
+      --baseline BENCH_wallclock.json \\
+      --current  bench/BENCH_wallclock.json [--threshold 1.5]
+
+An engine REGRESSES when its wall-clock grows by more than ``threshold``
+× relative to the baseline, measured machine-normalized: raw seconds are
+not comparable across runners, so each engine's time is first divided by
+the run's ``sparse`` engine time (the pure-jnp path, a stable proxy for
+the machine's single-core speed), and the gate compares those ratios.
+A regression in the ``sparse`` reference itself is caught by comparing
+its share of the run's total sweep time instead.
+
+Exit status 1 on any regression — the CI ``bench-gate`` step fails the
+build. Intentional changes (an engine deliberately traded slower, a
+baseline refresh) go through the documented override: either apply the
+``bench-override`` label to the PR (the workflow skips the gate; the
+label re-triggers the run) or commit a regenerated baseline in the same
+PR with the gate's own command::
+
+    python -m benchmarks.bench_wallclock --engines-only --steps 24 \\
+        --out BENCH_wallclock.json
+
+The sweep deliberately uses enough steps per epoch that each row is
+step- rather than jit/interpret-compile-dominated; normalization then
+cancels machine speed, while compile-ratio shifts (toolchain bumps)
+remain the residual noise the 1.5x threshold absorbs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _by_engine(rows: list[dict]) -> dict[str, dict]:
+    return {r["engine"]: r for r in rows}
+
+
+def _normalized(rows: dict[str, dict], ref: str = "sparse") -> dict[str, float]:
+    """Per-engine train_s divided by the run's reference-engine train_s."""
+    if ref not in rows:
+        raise SystemExit(f"reference engine {ref!r} missing from rows "
+                         f"{sorted(rows)} — cannot machine-normalize")
+    denom = max(rows[ref]["train_s"], 1e-9)
+    return {name: r["train_s"] / denom for name, r in rows.items()}
+
+
+def compare(baseline: list[dict], current: list[dict],
+            threshold: float = 1.5, ref: str = "sparse") -> list[str]:
+    """Returns a list of human-readable regression reports (empty = ok)."""
+    base = _by_engine(baseline)
+    cur = _by_engine(current)
+    base_n = _normalized(base, ref)
+    cur_n = _normalized(cur, ref)
+    bad = []
+    # the reference engine itself: compare its share of the sweep total
+    # (self-normalization is identically 1.0 and would hide it)
+    base_tot = sum(r["train_s"] for r in base.values())
+    cur_tot = sum(r["train_s"] for r in cur.values())
+    base_share = base[ref]["train_s"] / max(base_tot, 1e-9)
+    cur_share = cur[ref]["train_s"] / max(cur_tot, 1e-9)
+    if cur_share > threshold * base_share:
+        bad.append(f"{ref}: share of sweep {cur_share:.3f} > "
+                   f"{threshold}x baseline share {base_share:.3f}")
+    for name in sorted(base):
+        if name == ref:
+            continue
+        if name not in cur:
+            bad.append(f"{name}: present in baseline but missing from "
+                       f"current run")
+            continue
+        ratio = cur_n[name] / max(base_n[name], 1e-9)
+        marker = "REGRESSED" if ratio > threshold else "ok"
+        print(f"  {name:18s} baseline {base_n[name]:7.2f}x{ref} "
+              f"current {cur_n[name]:7.2f}x{ref}  ({ratio:4.2f}x, {marker})")
+        if ratio > threshold:
+            bad.append(f"{name}: {cur_n[name]:.2f}x{ref} vs baseline "
+                       f"{base_n[name]:.2f}x{ref} ({ratio:.2f}x > "
+                       f"{threshold}x)")
+    new = sorted(set(cur) - set(base))
+    if new:
+        print(f"  (engines without a baseline row, not gated: {new})")
+    return bad
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_wallclock.json",
+                    help="committed baseline JSON (repo root)")
+    ap.add_argument("--current", required=True,
+                    help="freshly generated engine-rows JSON")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when an engine's machine-normalized "
+                         "wall-clock exceeds threshold x its baseline")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    print(f"bench-gate: {len(current)} engine rows vs baseline "
+          f"{args.baseline} (threshold {args.threshold}x, "
+          f"machine-normalized by the 'sparse' engine)")
+    bad = compare(baseline, current, threshold=args.threshold)
+    if bad:
+        print("\nBENCHMARK REGRESSION:", file=sys.stderr)
+        for line in bad:
+            print(f"  {line}", file=sys.stderr)
+        print("(intentional? add the 'bench-override' PR label or commit "
+              "a regenerated BENCH_wallclock.json baseline)",
+              file=sys.stderr)
+        sys.exit(1)
+    print("bench-gate: no engine regressed")
+
+
+if __name__ == "__main__":
+    main()

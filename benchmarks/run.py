@@ -77,9 +77,9 @@ def main(argv=None) -> None:
             rows[-1]["V"], rows[-1]["speedup"]))
     run("kernel_sgns", bench_kernel.main,
         lambda r: "pairs_per_s=%.2e;fused_err=%.1e;fused_hbm_err=%.1e;"
-                  "engines=%s" % (
+                  "fused_pipe_err=%.1e;engines=%s" % (
             r["pairs_per_s_sparse"], r["fused_vs_sparse_err"],
-            r["fused_hbm_vs_sparse_err"],
+            r["fused_hbm_vs_sparse_err"], r["fused_pipe_vs_sparse_err"],
             "|".join("%s:%.0fus" % (n, us)
                      for n, us in r["engine_us"].items())))
     run("roofline", roofline_table.main, lambda r: "see tables above")

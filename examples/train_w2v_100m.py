@@ -16,9 +16,12 @@ The per-step compute is an update engine (``--engine``): the default
 ``sparse:alias`` draws negatives from the O(1) alias sampler;
 ``pallas_fused`` moves the draw inside the step kernel;
 ``pallas_fused_hbm`` additionally keeps the (V, d) tables HBM-resident
-and DMA-streams only each pair block's touched rows — the engine sized
-for exactly this example's 100k×500 (and the paper's 300k×500) tables;
-``sparse:cdf`` is the binary-search oracle.
+and DMA-streams only each pair block's touched rows — the engine family
+sized for exactly this example's 100k×500 (and the paper's 300k×500)
+tables; ``pallas_fused_pipe`` is its double-buffered successor (each
+touched row deduped to one DMA per block, gathers overlapped with
+compute behind a hazard-ordering planner); ``sparse:cdf`` is the
+binary-search oracle.
 """
 
 import argparse
@@ -44,7 +47,8 @@ def main():
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--engine", default="sparse:alias",
                     help="update engine (dense | sparse | pallas | "
-                         "pallas_fused | pallas_fused_hbm, optional "
+                         "pallas_fused | pallas_fused_hbm | "
+                         "pallas_fused_pipe, optional "
                          "':cdf'/':alias' suffix)")
     ap.add_argument("--steps-per-chunk", type=int, default=128,
                     help="steps per fixed-shape streamed chunk")

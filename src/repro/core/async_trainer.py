@@ -12,7 +12,8 @@ The per-step compute itself (negative draw → row grads → apply) is an
 :class:`repro.core.engine.UpdateEngine`; every epoch builder here takes
 ``engine=`` and stays agnostic to which step path (dense autodiff,
 sparse scatter-add, Pallas tile kernel, the fully-fused in-kernel
-sampler, or its HBM-blocked paper-scale variant) runs inside the scan.
+sampler, its HBM-blocked paper-scale variant, or the double-buffered
+DMA-pipelined variant) runs inside the scan.
 
 The synchronized strawman (`sync_train_epoch`) is conventional
 data-parallel SGNS: one table, batch sharded, gradient all-reduced every
@@ -104,9 +105,9 @@ class AsyncShardTrainer:
     axis; the compiled step contains no collectives.
     ``engine`` — an :class:`repro.core.engine.UpdateEngine` or spec
     string (``"dense"`` / ``"sparse"`` / ``"pallas"`` /
-    ``"pallas_fused"`` / ``"pallas_fused_hbm"``, optionally ``":cdf"`` /
-    ``":alias"``) that owns the per-step compute; resolved once at
-    construction.
+    ``"pallas_fused"`` / ``"pallas_fused_hbm"`` /
+    ``"pallas_fused_pipe"``, optionally ``":cdf"`` / ``":alias"``) that
+    owns the per-step compute; resolved once at construction.
     ``plan`` — optional :class:`repro.data.pipeline.HostShardPlan` for
     multi-host ingestion: this host feeds :meth:`device_chunk` only its
     own workers' extracted rows and the trainer assembles the global

@@ -39,6 +39,16 @@ Registry (``get_engine``):
     ``block_pairs`` (a shorter tail block covers any remainder) and
     ``sequential`` (word2vec's true per-pair apply order instead of
     per-block).
+``pallas_fused_pipe``
+    The pipelined successor of ``pallas_fused_hbm``
+    (``kernels/sgns_fused_pipe.py``): one kernel invocation per step, a
+    2-slot ring of VMEM row buffers with per-slot DMA semaphores, and a
+    pure-JAX block planner that dedups each block's touched rows (each
+    row moves over DMA exactly once per block, no RMW round-trips) and
+    flags the scatter-before-regather hazards the schedule serializes
+    on. Bit-identical to ``pallas_fused_hbm`` — same replayed counter
+    PRNG, same per-block chain semantics. ``sequential=True`` is served
+    by the unpipelined kernel (per-pair order is inherently serial).
 
 Engine specs are engine instances or strings, optionally carrying a
 sampler: ``"sparse"``, ``"sparse:alias"``, ``"pallas:cdf"``. The fused
@@ -226,12 +236,52 @@ class FusedHBMPallasEngine(FusedPallasEngine):
         return step
 
 
+@dataclass(frozen=True)
+class FusedPipePallasEngine(FusedHBMPallasEngine):
+    """The HBM-resident fused step with the **double-buffered DMA
+    pipeline** (``kernels/sgns_fused_pipe.py``): a single kernel
+    invocation per step in which block *i+1*'s deduped row gathers are
+    in flight while block *i* computes and block *i-1*'s write-backs
+    drain, hazard-ordered by the pure-JAX block planner. Bit-identical
+    to ``pallas_fused_hbm`` (same replayed counter-PRNG negatives, same
+    per-block chain semantics) with strictly less HBM traffic — each
+    touched row moves exactly once per block in each direction.
+
+    ``block_pairs`` — pairs per pipeline block (the batch is padded to
+    whole blocks; padded pairs are masked to exactly-zero updates).
+    ``sequential`` — word2vec's per-pair apply order is inherently
+    unpipelineable, so ``sequential=True`` transparently runs the
+    unpipelined :func:`~repro.kernels.sgns_fused_hbm.sgns_fused_hbm_step`
+    oracle path instead.
+    """
+
+    name = "pallas_fused_pipe"
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        if self.sequential:
+            return FusedHBMPallasEngine.make_step(self, cfg, total_steps)
+        from repro.kernels.sgns_fused_pipe import sgns_fused_pipe_step
+
+        interpret = self.interpret if self.interpret is not None \
+            else _auto_interpret()
+
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            return sgns_fused_pipe_step(
+                params, centers, contexts, neg_table, key, lr,
+                negatives=cfg.negatives, block_pairs=self.block_pairs,
+                interpret=interpret)
+
+        return step
+
+
 ENGINES: dict[str, type[UpdateEngine]] = {
     "dense": DenseEngine,
     "sparse": SparseEngine,
     "pallas": PallasEngine,
     "pallas_fused": FusedPallasEngine,
     "pallas_fused_hbm": FusedHBMPallasEngine,
+    "pallas_fused_pipe": FusedPipePallasEngine,
 }
 ENGINE_NAMES = tuple(ENGINES)
 

@@ -23,8 +23,10 @@ in-kernel loop demote the HBM refs to loop-carried values whose
 per-DMA updates XLA materializes as full-table copies (~GB per step at
 paper scale). Single-level in-kernel loops keep every row DMA a true
 in-place row update; the chain keeps block b+1 reading block b's
-writes. On hardware, fusing the chain back into one launch with
-double-buffered DMA is the ROADMAP follow-up.
+writes. The single-launch double-buffered successor of this chain is
+``sgns_fused_pipe.py`` (engine ``pallas_fused_pipe``), which overlaps
+block *i+1*'s gathers with block *i*'s compute and block *i-1*'s
+scatter drain behind a hazard-ordering block planner.
 
 The negative draw stays inside the kernel (Ordentlich et al.'s
 network-efficient property: negative ids never exist off-chip): the
@@ -59,12 +61,18 @@ The row gradients use the exact expressions of
 "bit-identical" above holds at the float level in interpret mode, not
 just to tolerance.
 
-Hardware notes: DMAs are issued start→wait per row — correct everywhere
-and the shape Mosaic lowers; overlapping the gather of pair j+1 with the
-compute of pair j (double-buffered DMA, multiple in-flight semaphores)
-is the remaining on-TPU optimization, tracked in ROADMAP alongside
-Mosaic validation. Interpret mode (the CI gate) executes the same DMA
-semantics on CPU.
+Hardware notes: this kernel keeps the *unpipelined* start→wait-per-row
+DMA discipline — correct everywhere, the shape Mosaic lowers, and the
+simplest possible oracle for the pipelined engine's bit-equivalence
+tests. The DMA-overlap optimization it deliberately leaves on the table
+lives in ``sgns_fused_pipe.py``: a ring of VMEM row buffers with
+per-slot semaphores, touched-row dedup (one DMA per unique row per
+block instead of per-pair RMW round-trips), and planner-computed
+scatter-before-regather hazard ordering. This kernel remains the
+``sequential=True`` path (word2vec's per-pair apply order is inherently
+serial) and the fallback reference; real-TPU Mosaic validation of both
+is tracked in ROADMAP. Interpret mode (the CI gate) executes the same
+DMA semantics on CPU.
 """
 
 from __future__ import annotations

@@ -1,0 +1,406 @@
+"""Pipelined HBM-blocked fused SGNS step: overlapped DMA, deduped rows.
+
+``sgns_fused_hbm.py`` made the paper's 300k×500 sub-model shape feasible
+by keeping the ``(V, d)`` tables HBM-resident and DMA-streaming each
+pair block's touched rows — but its memory pipeline is fully serial:
+every row gather and every RMW scatter is issued start→wait, one row at
+a time, so the compute units idle through all of the step's DMA latency
+(the remaining hot-path item on ROADMAP). This module replaces that loop
+with a **multi-slot DMA pipeline** in a single ``pallas_call`` per step:
+
+* a ring of ``NUM_SLOTS`` VMEM row-buffer pairs (one ``(R_W, d)`` W
+  buffer + one ``(R_C, d)`` C buffer per slot) with per-slot DMA
+  semaphores, through which block *i+1*'s row gathers are in flight
+  while block *i* computes and block *i-1*'s scatters drain;
+* **touched-row dedup**: each block gathers every row it touches
+  exactly once (the unique centers for W; the unique contexts ∪
+  negatives for C), applies all of its updates to the VMEM-resident
+  copy, and writes each row back exactly once. This removes the
+  per-duplicate gathers *and* the entire read-modify-write round-trip
+  of the unpipelined kernel — per-block HBM traffic drops from
+  ``3·blk·(K+2)`` row transfers to ``2·R`` where ``R ≤ blk·(K+2)`` is
+  the unique-row count;
+* a **pure-JAX block planner** (:func:`plan_blocks`) that computes the
+  dedup, the pair→buffer-slot index maps, and the scatter-before-
+  regather **hazard flags** outside the kernel, and a static
+  :func:`kernel_schedule` that both the kernel body and the unit tests
+  iterate — the schedule (slot assignment, gather/compute/scatter/wait
+  ordering, hazard guards) is testable entirely without Pallas.
+
+Hazard ordering: with the chain semantics, block *b*'s gathers must
+observe every earlier block's applied updates. Pipelining reorders block
+*b+1*'s gathers before block *b*'s scatters have drained, which is only
+sound when the two blocks' row sets are disjoint — so the planner emits
+``hazard[b] = touched(b) ∩ written(b-1) ≠ ∅`` (per table), and the
+schedule issues block *b*'s gathers on the fast path (overlapped) when
+the flag is clear, or after draining block *b-1*'s scatters when it is
+set. Blocks further back are always drained by then: the 2-slot ring
+reuses block *b-1*'s buffers for block *b+1*, so the slot-recycling wait
+already serializes against everything older — which is why a single
+look-behind flag is sufficient for full chain fidelity.
+
+Bit-equivalence contract (same as the unpipelined engine): identical
+results to running :func:`repro.core.sgns.train_step_sparse` once per
+pair block on the replayed counter-PRNG negatives. Dedup preserves it
+exactly: the reference's scatter-add applies duplicate-row updates
+sequentially in pair order, and the in-VMEM ``.at[pos].add`` applies the
+same addends to the same base values in the same order before the row is
+written back once. The negative draw uses the same replayable counter
+PRNG (:func:`repro.kernels.sgns_fused.fused_negative_ids`); the planner
+replays it outside the kernel because the dedup needs the ids — the one
+deliberate trade against the in-kernel draw: negative *ids* now exist as
+planner metadata (O(B·K) int32, KBs) so that negative *rows* (MBs) move
+exactly once.
+
+Hardware notes: every DMA is started on a slot semaphore and waited
+exactly once, with matched start/wait structure under every hazard
+outcome (the guards are complementary ``pl.when`` pairs), so the kernel
+lowers the same way under Mosaic and interpret mode. Interpret mode (the
+CI gate) executes the schedule's DMA semantics serially on CPU — the
+overlap itself is a hardware property; real-TPU Mosaic validation stays
+open on ROADMAP. ``sequential=True`` (word2vec's per-pair apply order)
+is inherently unpipelineable and is served by the unpipelined kernel —
+see :class:`repro.core.engine.FusedPipePallasEngine`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sgns import sparse_row_grads_per_pair
+from repro.kernels.sgns_fused import _as_seed, fused_negative_ids
+from repro.kernels.sgns_fused_hbm import _pick_block_pairs
+
+NUM_SLOTS = 2   # ring depth: gathers of b+1 overlap scatters of b
+
+
+# ---------------------------------------------------------------------------
+# Block planner — pure JAX, unit-testable without Pallas.
+# ---------------------------------------------------------------------------
+class PipelinePlan(NamedTuple):
+    """Per-block DMA/compute metadata for one step's pair blocks.
+
+    Shapes: ``nblocks`` blocks of ``blk`` pairs (the batch is padded to
+    a whole number of blocks; padded pairs carry ``mask == 0`` and
+    contribute exactly-zero updates). ``R_W = blk`` and
+    ``R_C = blk·(K+1)`` are the row-buffer capacities.
+    """
+
+    uw: jax.Array       # (nblocks, R_W) int32 — sorted unique center rows, padded with V
+    uc: jax.Array       # (nblocks, R_C) int32 — sorted unique context∪negative rows, padded with V
+    n_w: jax.Array      # (nblocks,) int32 — valid rows in uw (gathered AND scattered)
+    n_c: jax.Array      # (nblocks,) int32 — valid rows in uc
+    w_pos: jax.Array    # (nblocks, blk) int32 — pair j's center row → uw slot
+    cp_pos: jax.Array   # (nblocks, blk) int32 — pair j's context row → uc slot
+    cn_pos: jax.Array   # (nblocks, blk·K) int32 — pair j's k-th negative row → uc slot
+    mask: jax.Array     # (nblocks, blk) float32 — 1 for real pairs, 0 for padding
+    hazard: jax.Array   # (nblocks,) int32 — 1 iff touched(b) ∩ written(b-1) ≠ ∅
+
+    @property
+    def nblocks(self) -> int:
+        return self.uw.shape[0]
+
+    @property
+    def block_pairs(self) -> int:
+        return self.w_pos.shape[1]
+
+
+def _pad_to_blocks(x: jax.Array, nblocks: int, blk: int) -> jax.Array:
+    """(B, ...) → (nblocks, blk, ...), padding with the first element
+    (any valid id — padded pairs are masked to zero-update anyway)."""
+    pad = nblocks * blk - x.shape[0]
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+    return x.reshape((nblocks, blk) + x.shape[1:])
+
+
+def _unique_rows(ids: jax.Array, vocab_size: int):
+    """Per-block sorted unique ids, padded with ``vocab_size``.
+
+    ids: (nblocks, R) int32 in [0, V). Returns (u (nblocks, R), n
+    (nblocks,)): ``u[b, :n[b]]`` is block b's sorted unique set and
+    ``u[b, n[b]:] == V`` (past every real id, so searchsorted lookups
+    of valid ids never land on padding).
+    """
+    s = jnp.sort(ids, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones(s.shape[:1] + (1,), bool), s[:, 1:] != s[:, :-1]], axis=1)
+    n = first.sum(axis=1).astype(jnp.int32)
+    # stable argsort floats the first-occurrences to the front, still in
+    # ascending id order; the duplicate tail is overwritten with V
+    order = jnp.argsort(~first, axis=1, stable=True)
+    u = jnp.take_along_axis(s, order, axis=1)
+    col = jnp.arange(s.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(col < n[:, None], u, jnp.int32(vocab_size)), n
+
+
+_searchsorted_rows = jax.vmap(
+    functools.partial(jnp.searchsorted, side="left"))
+
+
+def plan_blocks(
+    centers: jax.Array,
+    contexts: jax.Array,
+    negatives: jax.Array,
+    vocab_size: int,
+    block_pairs: int,
+) -> PipelinePlan:
+    """Plan one step's pair blocks for the pipelined kernel.
+
+    Pure JAX (jit/vmap-safe, static shapes): splits the batch into
+    ``blk``-pair blocks, dedups each block's touched rows per table,
+    maps every pair's (center, context, negatives) to positions in the
+    deduped row buffers, and flags the blocks whose touched set
+    intersects the previous block's written set (the scatter-before-
+    regather hazards the schedule must serialize on).
+    """
+    B = centers.shape[0]
+    K = negatives.shape[1]
+    blk = _pick_block_pairs(B, block_pairs)
+    nblocks = -(-B // blk)
+    V = vocab_size
+
+    cen = _pad_to_blocks(centers.astype(jnp.int32), nblocks, blk)
+    ctx = _pad_to_blocks(contexts.astype(jnp.int32), nblocks, blk)
+    neg = _pad_to_blocks(negatives.astype(jnp.int32), nblocks, blk)
+
+    uw, n_w = _unique_rows(cen, V)
+    c_rows = jnp.concatenate([ctx, neg.reshape(nblocks, blk * K)], axis=1)
+    uc, n_c = _unique_rows(c_rows, V)
+
+    w_pos = _searchsorted_rows(uw, cen).astype(jnp.int32)
+    c_pos = _searchsorted_rows(uc, c_rows).astype(jnp.int32)
+    cp_pos, cn_pos = c_pos[:, :blk], c_pos[:, blk:]
+
+    # With dedup, written(b) == touched(b) per table (every gathered row
+    # receives at least one update), so the look-behind intersection is
+    # over the same padded unique sets. W rows only conflict with W
+    # writes, C rows with C writes — the tables are separate buffers.
+    def hit(u):
+        idx = _searchsorted_rows(u[:-1], u[1:])
+        found = jnp.take_along_axis(
+            u[:-1], jnp.minimum(idx, u.shape[1] - 1), axis=1) == u[1:]
+        return (found & (u[1:] < jnp.int32(V))).any(axis=1)
+
+    hz = jnp.concatenate(
+        [jnp.zeros((1,), bool), hit(uw) | hit(uc)]).astype(jnp.int32)
+
+    mask = (jnp.arange(nblocks * blk, dtype=jnp.int32) < B).astype(
+        jnp.float32).reshape(nblocks, blk)
+    return PipelinePlan(uw=uw, uc=uc, n_w=n_w, n_c=n_c, w_pos=w_pos,
+                        cp_pos=cp_pos, cn_pos=cn_pos, mask=mask, hazard=hz)
+
+
+# ---------------------------------------------------------------------------
+# The static pipeline schedule — the single source of truth iterated by
+# the kernel body (hazard guards become pl.when) and by the tests
+# (hazard guards resolved against a concrete hazard vector).
+# ---------------------------------------------------------------------------
+def kernel_schedule(nblocks: int, num_slots: int = NUM_SLOTS):
+    """The unrolled pipeline as ``(op, block, slot, guard)`` events.
+
+    ``op`` ∈ {gather, wait_gather, compute, scatter, wait_scatter};
+    ``guard`` is ``None`` (unconditional) or ``(b, want)`` meaning "only
+    when bool(hazard[b]) == want". Guarded events come in complementary
+    pairs, so each block is gathered/waited/scattered/drained exactly
+    once for every hazard outcome:
+
+    * block b+1's gathers are issued *before* block b's scatters when
+      ``hazard[b+1]`` is clear (the overlap fast path), else after block
+      b's scatters have drained;
+    * block b-1's scatters drain either on block b's hazard path (just
+      shown) or at the top of position b — always before block b+1's
+      gathers recycle block b-1's buffer slot.
+    """
+    ev = [("gather", 0, 0, None)]
+    for b in range(nblocks):
+        s = b % num_slots
+        if b >= 1:
+            ev.append(("wait_scatter", b - 1, (b - 1) % num_slots,
+                       (b, False)))
+        if b + 1 < nblocks:
+            ev.append(("gather", b + 1, (b + 1) % num_slots,
+                       (b + 1, False)))
+        ev.append(("wait_gather", b, s, None))
+        ev.append(("compute", b, s, None))
+        ev.append(("scatter", b, s, None))
+        if b + 1 < nblocks:
+            ev.append(("wait_scatter", b, s, (b + 1, True)))
+            ev.append(("gather", b + 1, (b + 1) % num_slots, (b + 1, True)))
+    ev.append(("wait_scatter", nblocks - 1, (nblocks - 1) % num_slots, None))
+    return ev
+
+
+def resolve_schedule(hazard, num_slots: int = NUM_SLOTS):
+    """The concrete ``(op, block, slot)`` event order the kernel executes
+    for a given hazard vector — what the planner property tests check."""
+    return [(op, b, s)
+            for op, b, s, g in kernel_schedule(len(hazard), num_slots)
+            if g is None or bool(hazard[g[0]]) is g[1]]
+
+
+# ---------------------------------------------------------------------------
+# Kernel body. Operand order:
+#   lr (1,) f32 SMEM | n_w, n_c, hazard (nblocks,) i32 SMEM
+#   uw | uc | w_pos | cp_pos | cn_pos | mask                 [VMEM]
+#   W, C (V, d) HBM (ANY), aliased to the first two outputs
+# outputs: W', C' (ANY) | per-pair masked loss (nblocks, blk) VMEM
+# scratch: bufW (S, R_W, d) | bufC (S, R_C, d) | gather + scatter DMA
+#          semaphore rings (S,)
+# ---------------------------------------------------------------------------
+def _pipe_kernel(nblocks, K, lr_ref, n_w_ref, n_c_ref, hz_ref,
+                 uw_ref, uc_ref, wpos_ref, cppos_ref, cnpos_ref, mask_ref,
+                 _w_in, _c_in, w_hbm, c_hbm, loss_ref,
+                 buf_w, buf_c, gsem, ssem):
+    blk = wpos_ref.shape[1]
+    d = buf_w.shape[2]
+    lr = lr_ref[0]
+
+    def row_dmas(b, s, gather):
+        """Matched start/wait loops over block b's valid rows: each
+        valid uw/uc slot is one row DMA (HBM→slot buffer for gathers,
+        buffer→HBM for the write-back scatters)."""
+        def w_dma(j):
+            pair = (w_hbm.at[uw_ref[b, j]], buf_w.at[s, j])
+            src, dst = pair if gather else pair[::-1]
+            return pltpu.make_async_copy(src, dst, (gsem if gather
+                                                    else ssem).at[s])
+
+        def c_dma(j):
+            pair = (c_hbm.at[uc_ref[b, j]], buf_c.at[s, j])
+            src, dst = pair if gather else pair[::-1]
+            return pltpu.make_async_copy(src, dst, (gsem if gather
+                                                    else ssem).at[s])
+
+        return w_dma, c_dma
+
+    def run_rows(b, s, gather, wait):
+        w_dma, c_dma = row_dmas(b, s, gather)
+
+        def go(dma):
+            def body(j, _):
+                d_ = dma(j)
+                d_.wait() if wait else d_.start()
+                return 0
+            return body
+
+        jax.lax.fori_loop(0, n_w_ref[b], go(w_dma), 0)
+        jax.lax.fori_loop(0, n_c_ref[b], go(c_dma), 0)
+
+    def compute(b, s):
+        W_blk = buf_w[s]                                    # (R_W, d)
+        C_blk = buf_c[s]                                    # (R_C, d)
+        w_pos = wpos_ref[b]
+        cp_pos = cppos_ref[b]
+        cn_pos = cnpos_ref[b]
+        w = W_blk[w_pos]                                    # (blk, d)
+        cp = C_blk[cp_pos]                                  # (blk, d)
+        cn = C_blk[cn_pos].reshape(blk, K, d)               # (blk, K, d)
+        # the exact expressions of the sparse reference — what the
+        # bit-equivalence contract stands on
+        loss, d_w, d_cp, d_cn = sparse_row_grads_per_pair(w, cp, cn)
+        m = mask_ref[b]                                     # (blk,)
+        u_w = -lr * (d_w * m[:, None])
+        u_cp = -lr * (d_cp * m[:, None])
+        u_cn = (-lr * (d_cn * m[:, None, None])).reshape(blk * K, d)
+        # same scatter-add order as the reference (W, then C-context,
+        # then C-negatives): duplicate rows accumulate identically, so
+        # the single write-back per row is bit-identical to its RMW chain
+        buf_w[s] = W_blk.at[w_pos].add(u_w)
+        buf_c[s] = C_blk.at[cp_pos].add(u_cp).at[cn_pos].add(u_cn)
+        loss_ref[b] = loss * m
+
+    ops = {
+        "gather": lambda b, s: run_rows(b, s, gather=True, wait=False),
+        "wait_gather": lambda b, s: run_rows(b, s, gather=True, wait=True),
+        "compute": compute,
+        "scatter": lambda b, s: run_rows(b, s, gather=False, wait=False),
+        "wait_scatter": lambda b, s: run_rows(b, s, gather=False, wait=True),
+    }
+    for op, b, s, guard in kernel_schedule(nblocks):
+        if guard is None:
+            ops[op](b, s)
+        else:
+            gb, want = guard
+            pred = (hz_ref[gb] != 0) if want else (hz_ref[gb] == 0)
+            pl.when(pred)(functools.partial(ops[op], b, s))
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "negatives", "block_pairs", "interpret"))
+def sgns_fused_pipe_step(
+    params: dict,
+    centers: jax.Array,
+    contexts: jax.Array,
+    table: dict,
+    key: jax.Array,
+    lr: jax.Array,
+    *,
+    negatives: int = 5,
+    block_pairs: int = 256,
+    interpret: bool = True,
+) -> tuple[dict, jax.Array]:
+    """One SGNS step through the pipelined HBM engine.
+
+    Same contract as :func:`repro.kernels.sgns_fused_hbm.sgns_fused_hbm_step`
+    with ``sequential=False`` — and bit-identical to it (and therefore
+    to the per-block ``train_step_sparse`` reference on the replayed
+    negatives): the planner replays the same counter-PRNG draw, and the
+    schedule's hazard guards preserve the chain's read-after-write
+    semantics exactly. One ``pallas_call`` covers the whole batch.
+    """
+    V, d = params["W"].shape
+    B = centers.shape[0]
+    K = negatives
+    seed = _as_seed(key)
+    neg_ids = fused_negative_ids(seed, table["prob"], table["alias"], (B, K))
+    plan = plan_blocks(centers, contexts, neg_ids, V, block_pairs)
+    nblocks, blk = plan.nblocks, plan.block_pairs
+
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    vmem = functools.partial(pl.BlockSpec, memory_space=pltpu.VMEM)
+    out = pl.pallas_call(
+        functools.partial(_pipe_kernel, nblocks, K),
+        in_specs=[
+            smem(),                                 # lr (1,)
+            smem(), smem(), smem(),                 # n_w, n_c, hazard
+            vmem(), vmem(),                         # uw, uc
+            vmem(), vmem(), vmem(),                 # w_pos, cp_pos, cn_pos
+            vmem(),                                 # mask
+            pl.BlockSpec(memory_space=pltpu.ANY),   # W (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),   # C (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            vmem(),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((V, d), params["W"].dtype),
+            jax.ShapeDtypeStruct((V, d), params["C"].dtype),
+            jax.ShapeDtypeStruct((nblocks, blk), jnp.float32),
+        ],
+        # in-place tables: HBM operands 10, 11 alias outputs 0, 1
+        input_output_aliases={10: 0, 11: 1},
+        scratch_shapes=[
+            pltpu.VMEM((NUM_SLOTS, blk, d), jnp.float32),            # W rows
+            pltpu.VMEM((NUM_SLOTS, blk * (K + 1), d), jnp.float32),  # C rows
+            pltpu.SemaphoreType.DMA((NUM_SLOTS,)),                   # gathers
+            pltpu.SemaphoreType.DMA((NUM_SLOTS,)),                   # scatters
+        ],
+        interpret=interpret,
+    )(jnp.reshape(lr, (1,)).astype(jnp.float32),
+      plan.n_w, plan.n_c, plan.hazard,
+      plan.uw, plan.uc, plan.w_pos, plan.cp_pos, plan.cn_pos, plan.mask,
+      params["W"], params["C"])
+    # padded pairs were masked to exactly-zero loss, so the batch mean
+    # divides by the true pair count
+    return {"W": out[0], "C": out[1]}, jnp.sum(out[2]) / B

@@ -23,6 +23,13 @@ Cases:
                    what makes the 300k×500 sub-model shape of this very
                    dry-run feasible per worker. Same zero-collective
                    assertion as every async engine.
+  async_fused_pipe— `pallas_fused_pipe` engine: the HBM-resident step
+                   with the double-buffered DMA pipeline — deduped row
+                   gathers/write-backs on a 2-slot VMEM ring, block
+                   b+1's gathers in flight while block b computes,
+                   hazard-ordered by the pure-JAX block planner. Same
+                   zero-collective assertion (the planner is local
+                   sort/searchsorted work, no communication).
   sync           — the synchronized strawman (Hogwild/MLLib stand-in):
                    data-parallel minibatch SGNS, dense-gradient psum
                    every step (the 600 MB/step the paper eliminates).
@@ -33,6 +40,11 @@ Cases:
 
 Usage: python -m repro.launch.dryrun_sgns [--json out.json]
        [--cases async,async_alias,...] [--workers N --steps S --batch B]
+       [--processes P] [--plan-only]
+
+``--plan-only`` prints the per-host ingestion shard plans and exits
+without lowering any case — the cheap multi-host smoke CI runs with
+``--processes 4``.
 """
 
 import argparse
@@ -60,6 +72,7 @@ ASYNC_ENGINES = {
     "async_pallas": "pallas",
     "async_fused": "pallas_fused",
     "async_fused_hbm": "pallas_fused_hbm",
+    "async_fused_pipe": "pallas_fused_pipe",
 }
 
 
@@ -175,7 +188,7 @@ def compare_sampler_paths(rows: list[dict]) -> None:
     by_case = {r["arch"]: r for r in rows}
     base = by_case.get("sgns-async")
     for other in ("sgns-async_alias", "sgns-async_fused",
-                  "sgns-async_fused_hbm"):
+                  "sgns-async_fused_hbm", "sgns-async_fused_pipe"):
         r = by_case.get(other)
         if not (base and r):
             continue
@@ -193,17 +206,24 @@ def main(argv=None):
                     default="async,async_alias,sync,local_sgd_8,"
                             "local_sgd_64,merge_alir_iter",
                     help="comma list; also available: async_pallas, "
-                         "async_fused, async_fused_hbm")
+                         "async_fused, async_fused_hbm, async_fused_pipe")
     ap.add_argument("--workers", type=int, default=WORKERS)
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--batch", type=int, default=BATCH)
     ap.add_argument("--processes", type=int, default=None,
                     help="ingestion hosts to plan for (default: "
                          "jax.process_count(); any count can be simulated)")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the per-host ingestion plans and exit "
+                         "(no case lowering — the CI multi-host smoke)")
     args = ap.parse_args(argv)
     processes = (args.processes if args.processes is not None
                  else jax.process_count())
-    print_ingestion_plans(args.workers, processes, args.steps, args.batch)
+    plans = print_ingestion_plans(args.workers, processes, args.steps,
+                                  args.batch)
+    if args.plan_only:
+        assert plans, "ingestion planning produced no per-host plans"
+        return
     mesh = make_worker_mesh(args.workers)
     rows = [run(c, mesh, args.workers, args.steps, args.batch)
             for c in args.cases.split(",")]

@@ -7,11 +7,13 @@
 Runs the full pipeline on the synthetic corpus (see DESIGN.md §4) and
 prints paper-style scores + timings. ``--engine`` selects the per-step
 update engine (``sparse``, ``dense``, ``pallas``, ``pallas_fused``,
-``pallas_fused_hbm``, optionally with a sampler suffix like
-``sparse:alias``); Pallas engines run in interpret mode on CPU, Mosaic
-on TPU. ``pallas_fused_hbm`` keeps the parameter tables HBM-resident
-and DMA-streams only the touched rows per pair block — the engine for
-paper-scale (300k×500) sub-models.
+``pallas_fused_hbm``, ``pallas_fused_pipe``, optionally with a sampler
+suffix like ``sparse:alias``); Pallas engines run in interpret mode on
+CPU, Mosaic on TPU. ``pallas_fused_hbm`` keeps the parameter tables
+HBM-resident and DMA-streams only the touched rows per pair block —
+the engine family for paper-scale (300k×500) sub-models;
+``pallas_fused_pipe`` is its double-buffered successor (deduped row
+DMAs overlapped with compute behind a hazard-ordering block planner).
 """
 
 from __future__ import annotations
@@ -48,7 +50,8 @@ def main(argv=None):
                     help="also train the synchronized baseline")
     ap.add_argument("--engine", default="sparse", type=get_engine,
                     help="update engine: dense | sparse | pallas | "
-                         "pallas_fused | pallas_fused_hbm, optionally "
+                         "pallas_fused | pallas_fused_hbm | "
+                         "pallas_fused_pipe, optionally "
                          "':cdf'/':alias' (e.g. sparse:alias)")
     ap.add_argument("--processes", type=int, default=None,
                     help="ingestion host count (default: "

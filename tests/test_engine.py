@@ -219,6 +219,8 @@ ASYNC_ENGINE_SPECS = (
     "pallas:cdf", "pallas:alias",
     "pallas_fused:alias",            # fused engines sample in-kernel:
     "pallas_fused_hbm:alias",        # alias is their only layout
+    "pallas_fused_pipe:alias",       # planner replays the same draw —
+                                     # sort/searchsorted, no collectives
 )
 
 
