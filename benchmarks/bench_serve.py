@@ -1,0 +1,110 @@
+"""Serving-tier benchmark: lookup latency under a concurrent workload.
+
+Publishes a synthetic artifact (no training — the read path is what is
+being measured), then drives the :class:`~repro.serve.EmbeddingServer`
+with Zipf-distributed concurrent clients, a quarter of them querying in
+sub-model space (the on-the-fly reconstruction path). Reports p50/p99
+per-lookup latency (submit→resolve through the coalescer; cache hits
+bypass it and are counted in the hit rate instead), the mean coalesced
+batch size, and throughput.
+
+The row rides in ``BENCH_wallclock.json`` as ``{"engine": "serve"}``
+next to the update-engine rows, so the CI bench-gate
+(``benchmarks.check_regression``) covers serving regressions with the
+same machine-normalized threshold as training ones.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint import publish_table
+from repro.serve import EmbeddingServer, ServeConfig
+
+N_MODELS = 4
+ZIPF_A = 1.3          # benchmark-query popularity skew
+
+
+def _publish_synthetic(artifact_dir: str, V: int, d: int, n: int,
+                       seed: int = 0) -> None:
+    """A fully-sidecarred artifact with per-model holes, straight from
+    random data — table contents don't affect read-path timing."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(V, d)).astype(np.float32)
+    mask = rng.random((n, V)) > 0.3
+    mask[0] = True
+    qs = [np.linalg.qr(rng.normal(size=(d, d)))[0].astype(np.float32)
+          for _ in range(n)]
+    transforms = np.stack(qs)
+    models = np.stack([(emb @ q) * m[:, None]
+                       for q, m in zip(qs, mask.astype(np.float32))])
+    publish_table(artifact_dir, emb, np.ones(V, bool),
+                  worker_ids=np.arange(n, dtype=np.int32), mask=mask,
+                  transforms=transforms, models=models,
+                  meta={"synthetic": True})
+
+
+async def _client(server: EmbeddingServer, seed: int, requests: int,
+                  batch: int, V: int, submodel: int | None) -> None:
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        rows = np.minimum(rng.zipf(ZIPF_A, size=batch) - 1, V - 1)
+        await server.embed_rows(rows, submodel=submodel)
+
+
+def serve_row(quick: bool = False) -> dict:
+    """One bench-gate row for the serving workload (train_s = wall)."""
+    V, d = (2_000, 32) if quick else (4_000, 64)
+    clients = 16 if quick else 32
+    requests = 4 if quick else 8
+    batch = 64
+    cfg = ServeConfig(coalesce_ms=0.5, max_batch=1024, cache_rows=V // 4)
+
+    with tempfile.TemporaryDirectory() as td:
+        _publish_synthetic(td, V, d, N_MODELS)
+
+        async def go():
+            server = EmbeddingServer(td, cfg)
+            t0 = time.perf_counter()
+            await asyncio.gather(*(
+                _client(server, 100 + c, requests, batch, V,
+                        submodel=(c % N_MODELS) if c % 4 == 0 else None)
+                for c in range(clients)))
+            return time.perf_counter() - t0, server.stats()
+
+        wall, stats = asyncio.run(go())
+
+    lookups = clients * requests * batch
+    return {
+        "engine": "serve",
+        "clients": clients,
+        "lookups": lookups,
+        "rows": V,
+        "dim": d,
+        "train_s": wall,                     # the gate's compared field
+        "lookups_per_s": lookups / max(wall, 1e-9),
+        "p50_ms": stats["p50_ms"],
+        "p99_ms": stats["p99_ms"],
+        "mean_batch": stats["mean_batch"],
+        "dispatches": stats["dispatches"],
+        "cache_hit_rate": stats["cache_hit_rate"],
+    }
+
+
+def main(quick: bool = False) -> dict:
+    row = serve_row(quick=quick)
+    print(f"[serve] {row['lookups']} lookups ({row['clients']} clients, "
+          f"{row['rows']}×{row['dim']} table) in {row['train_s']:.2f}s "
+          f"→ {row['lookups_per_s']:.0f} lookups/s")
+    print(f"        p50 {row['p50_ms']:.2f} ms  p99 {row['p99_ms']:.2f} ms  "
+          f"mean batch {row['mean_batch']:.1f}  "
+          f"cache hit rate {row['cache_hit_rate']:.2f}")
+    return row
+
+
+if __name__ == "__main__":
+    main()

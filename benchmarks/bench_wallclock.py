@@ -10,7 +10,9 @@ On one CPU device we measure real compute and report:
   * near-linear scaling of training time with corpus fraction (Fig 2);
   * one wall-clock row PER UPDATE ENGINE (dense/sparse/pallas/
     pallas_fused/pallas_fused_hbm/pallas_fused_pipe) through the full
-    streamed driver — written to ``BENCH_wallclock.json`` (CI uploads
+    streamed driver, plus one ``serve`` row for the read path
+    (``benchmarks.bench_serve``) — written to ``BENCH_wallclock.json``
+    (CI uploads
     it as an artifact next to the CSV summary; override the path with
     ``REPRO_BENCH_WALLCLOCK_JSON``). The committed repo-root
     ``BENCH_wallclock.json`` is the regression BASELINE the CI
@@ -103,9 +105,15 @@ def run(rate=0.1, epochs=3, quick=False):
                         "steps": inf["steps_per_epoch"]})
     rows["scaling"] = scaling
 
-    # Per-engine wall-clock (the bench trajectory CI tracks as JSON)
-    rows["engines"] = engine_rows(quick=quick)
+    # Per-engine wall-clock (the bench trajectory CI tracks as JSON),
+    # plus the serving-workload row the same gate covers
+    rows["engines"] = engine_rows(quick=quick) + [_serve_row(quick=quick)]
     return rows
+
+
+def _serve_row(quick=False):
+    from benchmarks.bench_serve import serve_row
+    return serve_row(quick=quick)
 
 
 def write_engine_json(rows, path=None) -> str:
@@ -118,6 +126,13 @@ def write_engine_json(rows, path=None) -> str:
 
 def print_engine_rows(rows) -> None:
     for r in rows["engines"]:
+        if r["engine"] == "serve":
+            print(f"  {r['engine']:18s} {r['train_s']:7.2f}s workload "
+                  f"({r['lookups']} lookups, p50 {r['p50_ms']:.2f} ms, "
+                  f"p99 {r['p99_ms']:.2f} ms, mean batch "
+                  f"{r['mean_batch']:.1f}, cache hit "
+                  f"{r['cache_hit_rate']:.2f})")
+            continue
         print(f"  {r['engine']:18s} {r['train_s']:7.2f}s train "
               f"({r['steps_per_epoch']} steps × {r['workers']} workers, "
               f"loss {r['final_loss']:.3f})")
@@ -168,7 +183,8 @@ if __name__ == "__main__":
     a = ap.parse_args()
     if a.engines_only:
         with timer() as t:
-            rows = {"engines": engine_rows(quick=a.quick, steps=a.steps)}
+            rows = {"engines": engine_rows(quick=a.quick, steps=a.steps)
+                    + [_serve_row(quick=a.quick)]}
         print_engine_rows(rows)
         path = write_engine_json(rows, path=a.out)
         print(f"engine rows ({t.s:.1f}s) → {path}")

@@ -8,6 +8,8 @@
   bench_kernel    — SGNS step micro-bench + Pallas/oracle check +
                     update-engine sweep (dense/sparse/pallas/pallas_fused/
                     pallas_fused_hbm, incl. the HBM-blocked bit-equivalence)
+  bench_serve     — serving tier (p50/p99 lookup latency, coalesced
+                    batch size, cache hit rate under concurrent clients)
   roofline_table  — §Roofline terms from the dry-run sweeps
 
 Prints a final ``name,us_per_call,derived`` CSV summary.
@@ -52,7 +54,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_kl, bench_sampling, bench_merge,
                             bench_wallclock, bench_oov, bench_kernel,
-                            roofline_table)
+                            bench_serve, roofline_table)
 
     run("fig1_kl", lambda quick: bench_kl.main(),
         lambda rows: "kl_random<kl_equal=%s" % (
@@ -82,6 +84,9 @@ def main(argv=None) -> None:
             r["fused_hbm_vs_sparse_err"], r["fused_pipe_vs_sparse_err"],
             "|".join("%s:%.0fus" % (n, us)
                      for n, us in r["engine_us"].items())))
+    run("serve_tier", bench_serve.main,
+        lambda r: "p50_ms=%.2f;p99_ms=%.2f;mean_batch=%.1f;hit_rate=%.2f" % (
+            r["p50_ms"], r["p99_ms"], r["mean_batch"], r["cache_hit_rate"]))
     run("roofline", roofline_table.main, lambda r: "see tables above")
 
     lines = [f"{name},{us:.1f},{derived}" for name, us, derived in csv]

@@ -4,10 +4,16 @@ ALiR merge, then fine-tune the LM and compare against random init.
 
     PYTHONPATH=src python examples/async_embeddings_for_llm.py   (~3 min)
 
-ALiR's OOV reconstruction is what makes this integration work: any vocab
-entry present in ≥1 sub-model gets a consensus vector; the rest keep
-their random init.
+The LM never touches trainer internals: the merge is published as a
+versioned artifact and the embedding table is fetched through the
+batched :class:`~repro.serve.EmbeddingServer` — the same read path a
+production consumer would use. ALiR's OOV reconstruction is what makes
+this integration work: any vocab entry present in ≥1 sub-model gets a
+consensus vector; the rest keep their random init.
 """
+
+import asyncio
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +25,8 @@ from repro.core.sgns import SGNSConfig
 from repro.data.corpus import SemanticCorpusModel
 from repro.models import Model
 from repro.optim import get_optimizer
+from repro.serve import EmbeddingServer, ServeConfig, publish_incremental
+from repro.serve.publish import submodel_arrivals
 
 
 def make_lm_batches(corpus, vocab_size, batch, seq, steps, seed=0):
@@ -45,6 +53,18 @@ def train_lm(cfg, params, corpus, steps=60, batch=8, seq=48, lr=3e-3):
     return losses
 
 
+async def fetch_table(artifact_dir, raw_ids):
+    """Pull pretrained vectors through the serving tier: batched,
+    coalesced lookups against the latest published artifact version."""
+    server = EmbeddingServer(artifact_dir, ServeConfig(coalesce_ms=1.0))
+    out = await server.embed_ids(np.asarray(raw_ids))
+    s = server.stats()
+    print(f"fetched {len(raw_ids)} vectors from artifact "
+          f"v{out['version']} in {s['dispatches']} coalesced dispatches "
+          f"(mean batch {s['mean_batch']:.0f})")
+    return out["vectors"], out["found"]
+
+
 def main():
     cfg = get_config("smollm-360m").reduced()
     d = cfg.d_model
@@ -52,25 +72,31 @@ def main():
     gen = SemanticCorpusModel.create(vocab_size=cfg.vocab_size, seed=0)
     corpus = gen.generate(num_sentences=15_000, seed=1)
 
-    # Phase 1: the paper — async sub-models + ALiR merge, at the LM's dim.
+    # Phase 1: the paper — async sub-models + ALiR merge, at the LM's
+    # dim; publish the incremental merge as a versioned artifact.
     res = run_pipeline(
         corpus, cfg.vocab_size, strategy="shuffle", num_workers=4,
         cfg=SGNSConfig(vocab_size=0, dim=d, window=5, negatives=5),
         epochs=8, batch_size=512, window=5, max_vocab=None,
-        merge_methods=("alir_pca",))
-    emb, valid = res.merged["alir_pca"]
-    print(f"async embedding pretrain: {res.timings['train_s']:.1f}s, "
-          f"{int(np.asarray(valid).sum())}/{cfg.vocab_size} vocab covered")
+        merge_methods=())
+    print(f"async embedding pretrain: {res.timings['train_s']:.1f}s; "
+          f"publishing incremental merge…")
 
-    # Phase 2: initialize the LM embedding table from the merged model.
+    # Phase 2: initialize the LM embedding table via the serving tier —
+    # the LM is just another client of the published artifact.
+    with tempfile.TemporaryDirectory() as td:
+        publish_incremental(submodel_arrivals(res.stacked), td,
+                            word_ids=res.union_vocab.word_ids)
+        emb, found = asyncio.run(fetch_table(td, np.arange(cfg.vocab_size)))
+    print(f"{int(found.sum())}/{cfg.vocab_size} vocab covered by the "
+          f"merged model")
+
     model = Model(cfg)
     params_rand = model.init(jax.random.PRNGKey(0))
     params_pre = jax.tree.map(jnp.copy, params_rand)
     table = np.array(params_pre["embed"], np.float32)  # writable copy
-    word_rows = res.union_vocab.word_ids          # raw id per union row
-    scale = np.std(table) / (np.std(emb[np.asarray(valid)]) + 1e-9)
-    table[word_rows] = np.where(np.asarray(valid)[:, None],
-                                emb * scale, table[word_rows])
+    scale = np.std(table) / (np.std(emb[found]) + 1e-9)
+    table = np.where(found[:, None], emb * scale, table)
     params_pre["embed"] = jnp.asarray(table, params_pre["embed"].dtype)
 
     # Phase 3: fine-tune both and compare.

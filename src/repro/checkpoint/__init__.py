@@ -1,3 +1,23 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_step_path
+from repro.checkpoint.io import (
+    MANIFEST_NAME,
+    ServableTable,
+    latest_step_path,
+    load_checkpoint,
+    load_manifest,
+    load_table,
+    next_version,
+    publish_table,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step_path"]
+__all__ = [
+    "MANIFEST_NAME",
+    "ServableTable",
+    "latest_step_path",
+    "load_checkpoint",
+    "load_manifest",
+    "load_table",
+    "next_version",
+    "publish_table",
+    "save_checkpoint",
+]

@@ -1,15 +1,37 @@
-"""Checkpointing: flat-key .npz save/restore for arbitrary pytrees.
+"""Checkpointing + the versioned merged-table artifact.
 
-Scope-appropriate for this framework (single-host save of possibly
-sharded trees by device_get; restore re-shards via the caller's specs).
-Keys encode the tree path; dataclass-free trees (dict/list/tuple) only —
-which is all this codebase uses for params/opt state/caches.
+Two layers live here:
+
+1. **Pytree checkpoints** (:func:`save_checkpoint` /
+   :func:`load_checkpoint`): flat-key .npz save/restore for arbitrary
+   dict/list/tuple trees — training state, single-host scope
+   (device_get on save; the caller re-shards on restore).
+
+2. **Published embedding artifacts** (:func:`publish_table` /
+   :func:`load_table`): the handoff point between the merge phase and
+   the serving tier. An artifact directory holds monotonically
+   versioned, immutable table files plus a ``MANIFEST.json`` naming the
+   latest complete one. Both the table file and the manifest are
+   written to a temp name in the same directory and atomically
+   ``os.replace``d, so a reader (or a crash at any instant) can only
+   ever observe:
+
+   * no manifest — nothing published yet;
+   * a manifest pointing at a fully-written table file.
+
+   A partial table write leaves only a ``.tmp-``-prefixed file that
+   readers never look at; a crash *between* the table rename and the
+   manifest rename leaves an orphan table file that readers ignore
+   (manifest is the source of truth) and whose version number is never
+   reused (:func:`next_version` scans files as well as the manifest).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import time
+from dataclasses import dataclass, field
 
 import jax
 import numpy as np
@@ -76,6 +98,10 @@ def _unflatten(flat: dict[str, np.ndarray]):
 
 def save_checkpoint(path: str, tree, step: int | None = None,
                     extra: dict | None = None) -> None:
+    """Save a dict/list/tuple pytree of arrays to ``path`` (.npz) plus a
+    ``<path>.meta.json`` sidecar carrying ``step`` and ``extra``.
+    Not atomic — use :func:`publish_table` for tables a live reader may
+    race with."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(path, **flat)
@@ -85,6 +111,8 @@ def save_checkpoint(path: str, tree, step: int | None = None,
 
 
 def load_checkpoint(path: str):
+    """Restore a :func:`save_checkpoint` pytree. Returns ``(tree, meta)``
+    where ``meta`` is the sidecar dict (empty if the sidecar is gone)."""
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path, allow_pickle=False)
@@ -100,6 +128,8 @@ def load_checkpoint(path: str):
 
 
 def latest_step_path(ckpt_dir: str, prefix: str = "step_") -> str | None:
+    """Path of the highest-step ``<prefix>N.npz`` checkpoint in
+    ``ckpt_dir``, or ``None`` if there is none."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
@@ -112,3 +142,197 @@ def latest_step_path(ckpt_dir: str, prefix: str = "step_") -> str | None:
     if not steps:
         return None
     return os.path.join(ckpt_dir, max(steps)[1])
+
+
+# ---------------------------------------------------------------------------
+# Versioned merged-table artifacts (the merge → serve handoff).
+# ---------------------------------------------------------------------------
+MANIFEST_NAME = "MANIFEST.json"
+_TABLE_FMT = "table_v{:06d}.npz"
+_TMP_PREFIX = ".tmp-"
+# Keys of publish_table's array kwargs, in npz order. Optional ones are
+# simply absent from the file when not published.
+_REQUIRED_KEYS = ("emb", "valid")
+_OPTIONAL_KEYS = ("word_ids", "worker_ids", "mask", "transforms", "models")
+
+
+@dataclass(frozen=True)
+class ServableTable:
+    """One complete, immutable published table version.
+
+    Required payload:
+        ``emb (V, d)``   — the merged embedding table;
+        ``valid (V,)``   — rows the table actually covers (union
+                           presence of the folded sub-models).
+
+    Optional serving sidecars (``None`` when not published):
+        ``word_ids (V,)``      — raw word id per table row (the external
+                                 query namespace);
+        ``worker_ids (n,)``    — which workers each sub-model axis index
+                                 corresponds to, canonical order;
+        ``mask (n, V)``        — per-sub-model presence;
+        ``transforms (n,d,d)`` — ALiR alignment maps ``W_i``, enough to
+                                 reconstruct any sub-model's *missing*
+                                 rows on the fly (``Y[w] @ W_i.T``);
+        ``models (n, V, d)``   — the aligned-input sub-models themselves
+                                 (needed to serve a sub-model's
+                                 *present* rows in its own space).
+    """
+
+    emb: np.ndarray
+    valid: np.ndarray
+    version: int
+    meta: dict = field(default_factory=dict)
+    word_ids: np.ndarray | None = None
+    worker_ids: np.ndarray | None = None
+    mask: np.ndarray | None = None
+    transforms: np.ndarray | None = None
+    models: np.ndarray | None = None
+
+    @property
+    def dim(self) -> int:
+        """Embedding dimensionality of the published table."""
+        return int(self.emb.shape[1])
+
+
+def _table_path(artifact_dir: str, version: int) -> str:
+    return os.path.join(artifact_dir, _TABLE_FMT.format(version))
+
+
+def _atomic_write_bytes(path: str, write_fn) -> None:
+    """Write via a same-directory temp file + ``os.replace``. ``write_fn``
+    receives the temp path; on any failure the temp file is removed (a
+    crash can still leave one behind — readers never match the
+    ``.tmp-`` prefix, and publishers overwrite/ignore it)."""
+    d, name = os.path.split(path)
+    tmp = os.path.join(d, f"{_TMP_PREFIX}{name}.{os.getpid()}")
+    try:
+        write_fn(tmp)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_manifest(artifact_dir: str) -> dict | None:
+    """The artifact directory's manifest, or ``None`` before the first
+    completed publish."""
+    path = os.path.join(artifact_dir, MANIFEST_NAME)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _scan_table_versions(artifact_dir: str) -> list[int]:
+    if not os.path.isdir(artifact_dir):
+        return []
+    out = []
+    for f in os.listdir(artifact_dir):
+        if f.startswith("table_v") and f.endswith(".npz"):
+            try:
+                out.append(int(f[len("table_v"):-4]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def next_version(artifact_dir: str) -> int:
+    """The next free (monotonic) version number: past the manifest's
+    latest AND past any orphan table file a crash-between-renames left
+    behind — an orphan's number is never reused, so a version string
+    uniquely names one byte-content forever."""
+    manifest = load_manifest(artifact_dir)
+    latest = manifest["latest"] if manifest else 0
+    orphans = _scan_table_versions(artifact_dir)
+    return max([latest] + orphans) + 1
+
+
+def publish_table(
+    artifact_dir: str,
+    emb,
+    valid,
+    *,
+    word_ids=None,
+    worker_ids=None,
+    mask=None,
+    transforms=None,
+    models=None,
+    meta: dict | None = None,
+) -> int:
+    """Atomically publish one table version; returns its version number.
+
+    Write order is the crash-safety argument: (1) the table .npz goes to
+    a temp name and is renamed into place — a reader can never open a
+    partial table; (2) only then is the manifest (also temp + rename)
+    updated to point at it — a crash between (1) and (2) leaves the
+    previous version live and the new file an ignored, never-reused
+    orphan. Concurrent publishers to the same directory are not
+    supported (single merge process per artifact dir, by design — the
+    merge is the system's one synchronization point).
+    """
+    os.makedirs(artifact_dir, exist_ok=True)
+    version = next_version(artifact_dir)
+    arrays = {"emb": np.asarray(emb), "valid": np.asarray(valid)}
+    for k, v in (("word_ids", word_ids), ("worker_ids", worker_ids),
+                 ("mask", mask), ("transforms", transforms),
+                 ("models", models)):
+        if v is not None:
+            arrays[k] = np.asarray(v)
+    table_path = _table_path(artifact_dir, version)
+    _atomic_write_bytes(table_path, lambda tmp: _savez_to(tmp, arrays))
+
+    manifest = load_manifest(artifact_dir) or {"latest": 0, "versions": []}
+    entry = {"version": version, "file": os.path.basename(table_path),
+             "created_unix": time.time(),
+             "rows": int(arrays["emb"].shape[0]),
+             "dim": int(arrays["emb"].shape[1]),
+             "n_models": int(arrays["mask"].shape[0]) if mask is not None
+             else None,
+             **(meta or {})}
+    manifest["versions"].append(entry)
+    manifest["latest"] = version
+    _atomic_write_bytes(
+        os.path.join(artifact_dir, MANIFEST_NAME),
+        lambda tmp: _write_json(tmp, manifest))
+    return version
+
+
+def _savez_to(path: str, arrays: dict) -> None:
+    # np.savez appends '.npz' to bare string names; temp names end in
+    # '.<pid>', so hand it an open file object, which it never renames.
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def _write_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def load_table(artifact_dir: str, version: int | None = None) -> ServableTable:
+    """Load a published table — always a complete one.
+
+    ``version=None`` loads the manifest's latest. Raises
+    ``FileNotFoundError`` if nothing has been published (or the named
+    version was never *manifested* — orphan files are not loadable
+    state)."""
+    manifest = load_manifest(artifact_dir)
+    if manifest is None or not manifest["versions"]:
+        raise FileNotFoundError(
+            f"no published table in {artifact_dir!r} (no {MANIFEST_NAME})")
+    by_version = {e["version"]: e for e in manifest["versions"]}
+    version = manifest["latest"] if version is None else version
+    if version not in by_version:
+        raise FileNotFoundError(
+            f"version {version} not in manifest (has "
+            f"{sorted(by_version)})")
+    entry = by_version[version]
+    with np.load(os.path.join(artifact_dir, entry["file"]),
+                 allow_pickle=False) as data:
+        arrays = {k: data[k] for k in data.files}
+    meta = {k: v for k, v in entry.items() if k not in ("version", "file")}
+    return ServableTable(
+        emb=arrays["emb"], valid=arrays["valid"].astype(bool),
+        version=version, meta=meta,
+        **{k: arrays.get(k) for k in _OPTIONAL_KEYS})

@@ -90,6 +90,8 @@ class UpdateEngine:
 
     @property
     def table_kind(self) -> str:
+        """Noise-table layout this engine's steps consume ("cdf" |
+        "alias") — pass to ``build_noise_table(kind=...)``."""
         return self.sampler
 
     def sample(self, table, key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
@@ -103,6 +105,7 @@ class UpdateEngine:
         raise NotImplementedError
 
     def describe(self) -> str:
+        """Human-readable ``"name:sampler"`` tag (log/bench labels)."""
         return f"{self.name}:{self.sampler}"
 
 
@@ -113,6 +116,8 @@ class DenseEngine(UpdateEngine):
     name = "dense"
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """Autodiff step: ``value_and_grad`` through the gathers, dense
+        ``(V, d)`` gradient, full-table SGD apply."""
         def step(params, centers, contexts, neg_table, key, step_idx):
             negs = self.sample(neg_table, key, (centers.shape[0], cfg.negatives))
             lr = sgns.linear_lr(step_idx, total_steps, cfg)
@@ -132,9 +137,13 @@ class SparseEngine(UpdateEngine):
     name = "sparse"
 
     def row_grad_fn(self, cfg: SGNSConfig):
+        """Per-row gradient callable the step threads into
+        ``train_step_sparse`` (subclass hook — see PallasEngine)."""
         return sgns.sparse_row_grads
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """Sparse step: XLA draw + gather, manual row grads, per-row
+        accumulating scatter-add apply."""
         row_grads = self.row_grad_fn(cfg)
 
         def step(params, centers, contexts, neg_table, key, step_idx):
@@ -156,6 +165,8 @@ class PallasEngine(SparseEngine):
     name = "pallas"
 
     def row_grad_fn(self, cfg: SGNSConfig):
+        """Swap the jnp row grads for the VMEM-tile Pallas kernel
+        (interpret-mode off-TPU unless overridden)."""
         from repro.kernels import ops
 
         interpret = self.interpret if self.interpret is not None \
@@ -187,6 +198,8 @@ class FusedPallasEngine(UpdateEngine):
                                   table["alias"], shape)
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """Single-kernel step: in-kernel draw + forward + row grads +
+        apply, both tables VMEM-resident."""
         from repro.kernels.sgns_fused import sgns_fused_step
 
         interpret = self.interpret if self.interpret is not None \
@@ -221,6 +234,8 @@ class FusedHBMPallasEngine(FusedPallasEngine):
     name = "pallas_fused_hbm"
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """Per-block kernel-chain step against HBM-resident tables
+        (DMA gather/RMW-scatter of touched rows only)."""
         from repro.kernels.sgns_fused_hbm import sgns_fused_hbm_step
 
         interpret = self.interpret if self.interpret is not None \
@@ -258,6 +273,8 @@ class FusedPipePallasEngine(FusedHBMPallasEngine):
     name = "pallas_fused_pipe"
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """One pipelined-kernel step (double-buffered DMA, deduped row
+        traffic); ``sequential=True`` falls back to the HBM oracle."""
         if self.sequential:
             return FusedHBMPallasEngine.make_step(self, cfg, total_steps)
         from repro.kernels.sgns_fused_pipe import sgns_fused_pipe_step

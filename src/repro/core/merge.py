@@ -21,6 +21,18 @@ Stops when the change in the average normalized Frobenius displacement
 
 Everything is vmapped over the model axis and jittable (SVDs are d×d —
 tiny next to training).
+
+Two merge schedules share this math:
+
+* **batch** (:func:`merge_alir`) — all sub-models at once, the paper's
+  "few minutes at the end" synchronization point;
+* **incremental** (:class:`IncrementalAlirMerger`) — sub-models fold
+  into the running consensus *as workers finish*, so a versioned,
+  servable table exists after the first arrival and improves
+  monotonically. There is no wait-for-all barrier; the final fold
+  restacks in canonical worker order and is therefore **bit-identical**
+  to the batch merge no matter the arrival order
+  (``tests/test_merge.py`` property-tests the permutation invariance).
 """
 
 from __future__ import annotations
@@ -38,21 +50,30 @@ import numpy as np
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class StackedModels:
+    """``n`` sub-models on the union vocabulary: ``(n, V, d)`` rows plus
+    a ``(n, V)`` presence mask (rows are garbage where the mask is
+    False). The input type every ``merge_*`` consumes."""
+
     models: jax.Array   # (n, V, d) union-vocab rows; garbage where absent
     mask: jax.Array     # (n, V) bool presence
 
     @property
     def n(self) -> int:
+        """Number of stacked sub-models."""
         return self.models.shape[0]
 
     def intersection(self) -> jax.Array:
+        """(V,) bool — words present in *every* sub-model."""
         return jnp.all(self.mask, axis=0)
 
     def union_present(self) -> jax.Array:
+        """(V,) bool — words present in *at least one* sub-model."""
         return jnp.any(self.mask, axis=0)
 
 
 def stack_models(models: list[np.ndarray], masks: list[np.ndarray]) -> StackedModels:
+    """Stack per-worker ``(V, d)`` arrays + ``(V,)`` masks into a
+    :class:`StackedModels` (list order is the stacking order)."""
     m = jnp.asarray(np.stack(models))
     k = jnp.asarray(np.stack(masks)).astype(bool)
     return StackedModels(models=m, mask=k)
@@ -160,6 +181,8 @@ def _alir_loop(Y0, models, mask, max_iters: int, tol: float):
 
 
 def alir_init(stacked: StackedModels, out_dim: int, init: str, key: jax.Array):
+    """Initial ``(V, out_dim)`` consensus for ALiR: "random" (paper init
+    i) or "pca" — PCA on intersection rows, random elsewhere (init ii)."""
     n, V, d = stacked.models.shape
     if init == "random":
         return 0.1 * jax.random.normal(key, (V, out_dim), dtype=jnp.float32)
@@ -178,29 +201,78 @@ def merge_alir(
     max_iters: int = 10,
     tol: float = 1e-4,
     key: jax.Array | None = None,
+    Y0: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (Y (V, d), valid (V,), per-iteration displacements).
+    """ALiR-merge a stack of sub-models into one consensus table.
 
-    ``valid`` marks union-vocabulary rows (present in ≥1 sub-model);
-    every valid row has a representation — that is ALiR's point.
+    Args:
+        stacked: ``(n, V, d)`` sub-models over the union vocabulary plus
+            their ``(n, V)`` presence mask.
+        out_dim: output dimension — must equal ``d`` (ALiR aligns, it
+            does not project; use :func:`merge_pca` to change dims).
+        init: ``"pca"`` (paper init ii — intersection rows from the PCA
+            merge, the rest random) or ``"random"``.
+        max_iters / tol: fixed iteration budget and the displacement-
+            change convergence threshold; once converged the remaining
+            iterations are skipped via ``lax.cond`` and the trace
+            repeats the converged displacement.
+        key: PRNG key for the random part of the init.
+        Y0: optional **warm start** — an explicit initial consensus
+            table that overrides ``init``/``key``. Used by
+            :class:`IncrementalAlirMerger` to re-fold from the previous
+            consensus when one more sub-model arrives (typically 1–2
+            iterations to re-converge instead of a cold solve).
+
+    Returns:
+        ``(Y (V, d), valid (V,), disps (max_iters,))`` where ``valid``
+        marks union-vocabulary rows (present in ≥1 sub-model); every
+        valid row has a representation — that is ALiR's point. Invalid
+        rows are zeroed.
     """
     n, V, d = stacked.models.shape
     out_dim = out_dim or d
     if out_dim != d:
         raise ValueError("ALiR aligns in the sub-model dimension; out_dim must equal d")
-    key = key if key is not None else jax.random.PRNGKey(0)
-    Y0 = alir_init(stacked, out_dim, init, key)
+    if Y0 is None:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        Y0 = alir_init(stacked, out_dim, init, key)
+    elif Y0.shape != (V, d):
+        raise ValueError(f"warm-start Y0 has shape {Y0.shape}, expected {(V, d)}")
     models = stacked.models * stacked.mask[..., None]
     Y, disps = _alir_loop(Y0, models, stacked.mask, max_iters, tol)
     valid = stacked.union_present()
     return Y * valid[:, None], valid, disps
 
 
-def reconstruct_missing(stacked: StackedModels, Y: jax.Array) -> jax.Array:
-    """Per-sub-model reconstruction of its missing rows in its own space:
-    M_i* = Y* W_iᵀ. Returns completed models (n, V, d)."""
+def alir_transforms(stacked: StackedModels, Y: jax.Array) -> jax.Array:
+    """Per-sub-model orthogonal alignment maps ``W_i`` onto consensus ``Y``.
+
+    Solves Orthogonal Procrustes on each sub-model's **present** rows
+    (one :func:`_alir_iteration` step without updating ``Y``). The
+    returned ``(n, d, d)`` stack is what the serving tier stores in the
+    published artifact: a row absent from sub-model *i* is reconstructed
+    on the fly as ``Y[w] @ W_i.T`` — exactly the
+    :func:`reconstruct_missing` formula, as a per-query operation.
+    """
     _, _, Ws = _alir_iteration(Y, stacked.models * stacked.mask[..., None],
                                stacked.mask)
+    return Ws
+
+
+def reconstruct_missing(stacked: StackedModels, Y: jax.Array) -> jax.Array:
+    """Per-sub-model reconstruction of its missing rows in its own space:
+    M_i* = Y* W_iᵀ (paper §3.3.2 step 2 — the robustness claim).
+
+    Args:
+        stacked: the sub-model stack with presence mask.
+        Y: the merged consensus table ``(V, d)``.
+
+    Returns:
+        Completed models ``(n, V, d)``: present rows pass through
+        untouched, missing rows are reconstructed from the consensus.
+    """
+    Ws = alir_transforms(stacked, Y)
+
     def back(M_i, m_i, W):
         rec = Y @ W.T
         return jnp.where(m_i[:, None], M_i, rec)
@@ -208,9 +280,141 @@ def reconstruct_missing(stacked: StackedModels, Y: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Incremental merge — fold sub-models in as workers finish.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FoldResult:
+    """One incremental-merge fold: the consensus over sub-models so far.
+
+    ``worker_ids`` is the canonical (ascending) order of the arrived
+    workers — also the sub-model axis order of every array here and of
+    the published artifact's ``mask``/``transforms``/``models``.
+    """
+
+    worker_ids: tuple[int, ...]
+    Y: jax.Array            # (V, d) consensus; invalid rows zeroed
+    valid: jax.Array        # (V,) union-presence over arrived sub-models
+    disps: jax.Array        # per-iteration ALiR displacement trace
+
+
+class IncrementalAlirMerger:
+    """Folds sub-models into the merged table **as they arrive** — the
+    paper's only synchronization point, without the wait-for-all barrier.
+
+    Protocol::
+
+        merger = IncrementalAlirMerger()
+        for worker_id, (model, mask) in arrivals:      # any order
+            fold = merger.add(worker_id, model, mask)  # servable now
+            publish(fold)                              # version k
+        final = merger.fold(warm=False)                # == batch merge
+
+    Invariants:
+
+    * Sub-models are restacked in **canonical worker-id order** before
+      every fold, so the *final* fold (all arrived, ``warm=False``) is
+      bit-identical to :func:`merge_alir` on the batch-stacked models
+      regardless of arrival order — property-tested under permutation
+      in ``tests/test_merge.py``.
+    * Intermediate folds warm-start from the previous consensus
+      (``warm_start=True``, the default): the early-convergence freeze
+      in :func:`_alir_loop` makes a re-fold that barely moves cost 1–2
+      SVD rounds instead of ``max_iters``. The documented tolerance of
+      a warm-started full fold vs the batch merge: ALiR's consensus is
+      only defined up to a global orthogonal map (rotate ``Y``, absorb
+      it into every ``W_i``), and the warm path inherits its gauge from
+      the arrival history — so warm results match the batch merge up to
+      Procrustes alignment (small residual), not element-wise. Call
+      ``fold(warm=False)`` for the canonical, gauge-fixed cold solve.
+    * ``valid`` only covers words present in some *arrived* sub-model:
+      an early fold is a complete, servable table for its coverage, and
+      coverage grows monotonically with arrivals.
+    """
+
+    def __init__(self, *, init: str = "pca", max_iters: int = 10,
+                 tol: float = 1e-4, key: jax.Array | None = None,
+                 warm_start: bool = True):
+        self.init = init
+        self.max_iters = max_iters
+        self.tol = tol
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.warm_start = warm_start
+        self._models: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._Y: jax.Array | None = None
+
+    @property
+    def worker_ids(self) -> tuple[int, ...]:
+        """Arrived workers in canonical (ascending) order."""
+        return tuple(sorted(self._models))
+
+    @property
+    def n_folded(self) -> int:
+        """Number of sub-models that have arrived so far."""
+        return len(self._models)
+
+    def stacked(self) -> StackedModels:
+        """The arrived sub-models restacked in canonical worker order."""
+        if not self._models:
+            raise ValueError("no sub-models have arrived yet")
+        ids = self.worker_ids
+        return stack_models([np.asarray(self._models[i][0]) for i in ids],
+                            [np.asarray(self._models[i][1]) for i in ids])
+
+    def add(self, worker_id: int, model, mask, *,
+            fold: bool = True) -> FoldResult | None:
+        """Register a finished worker's sub-model (and, by default,
+        immediately re-fold the consensus).
+
+        Args:
+            worker_id: the worker's global id — duplicate arrivals are
+                rejected (a retried worker must be idempotent upstream).
+            model: ``(V, d)`` table over the union vocabulary.
+            mask: ``(V,)`` bool presence for this sub-model.
+            fold: re-fold now and return the :class:`FoldResult`;
+                ``fold=False`` just registers (batch several arrivals
+                into one fold with a later :meth:`fold` call).
+        """
+        if worker_id in self._models:
+            raise ValueError(f"worker {worker_id} already folded in")
+        model = np.asarray(model)
+        mask = np.asarray(mask).astype(bool)
+        if model.ndim != 2 or mask.shape != (model.shape[0],):
+            raise ValueError(
+                f"expected model (V, d) and mask (V,); got {model.shape} "
+                f"and {mask.shape}")
+        if self._models:
+            V, d = next(iter(self._models.values()))[0].shape
+            if model.shape != (V, d):
+                raise ValueError(
+                    f"sub-model shape {model.shape} != established {(V, d)}")
+        self._models[worker_id] = (model, mask)
+        return self.fold() if fold else None
+
+    def fold(self, warm: bool | None = None) -> FoldResult:
+        """Re-solve ALiR over everything that has arrived.
+
+        ``warm`` overrides the constructor's ``warm_start`` for this
+        fold; ``fold(warm=False)`` after all arrivals reproduces the
+        batch :func:`merge_alir` bit-for-bit.
+        """
+        warm = self.warm_start if warm is None else warm
+        stacked = self.stacked()
+        Y0 = self._Y if (warm and self._Y is not None) else None
+        Y, valid, disps = merge_alir(
+            stacked, init=self.init, max_iters=self.max_iters, tol=self.tol,
+            key=self.key, Y0=Y0)
+        self._Y = Y
+        return FoldResult(worker_ids=self.worker_ids, Y=Y, valid=valid,
+                          disps=disps)
+
+
+# ---------------------------------------------------------------------------
 # Naive averaging (the paper's counter-example) — for tests/benchmarks.
 # ---------------------------------------------------------------------------
 def merge_average(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    """Presence-weighted element-wise mean over union rows — the
+    paper's counter-example (sub-models live in incompatible gauges, so
+    averaging cancels signal). Returns (emb, valid=union)."""
     maskf = stacked.mask.astype(stacked.models.dtype)
     num = jnp.sum(stacked.models * maskf[..., None], axis=0)
     den = jnp.maximum(jnp.sum(maskf, axis=0), 1.0)
@@ -222,6 +426,9 @@ MERGE_METHODS = ("concat", "pca", "alir_rand", "alir_pca", "average", "single")
 
 def merge(stacked: StackedModels, method: str, out_dim: int,
           key: jax.Array | None = None, **kw):
+    """Dispatch a merge by name (one of :data:`MERGE_METHODS`). Returns
+    ``(emb, valid)``; ``key`` is required by the alir_* methods, extra
+    kwargs are forwarded to :func:`merge_alir`."""
     if method == "concat":
         return merge_concat(stacked)
     if method == "pca":

@@ -59,6 +59,10 @@ class WorkerStream:
     seed: int = 0
 
     def sentence_indices(self, epoch: int) -> np.ndarray:
+        """This worker's sentence sample for ``epoch`` — deterministic in
+        ``(seed, worker, epoch)`` per the division strategy (EQUAL keeps
+        a fixed contiguous slice, RANDOM a fixed with-replacement draw,
+        SHUFFLE a fresh draw per epoch)."""
         return sample_sentence_indices(
             num_sentences=self.corpus.num_sentences,
             strategy=self.strategy,
@@ -70,6 +74,10 @@ class WorkerStream:
         )
 
     def pairs(self, epoch: int, max_pairs: int | None = None):
+        """All of this worker's ``(centers, contexts)`` pairs for
+        ``epoch``, materialized in one pass (epoch-sized host memory —
+        prefer :meth:`pair_blocks` / :class:`PairChunkStream` for large
+        corpora). ``max_pairs`` truncates extraction early."""
         idx = self.sentence_indices(epoch)
         sub = self.corpus.select(idx)
         return extract_pairs(
@@ -123,6 +131,8 @@ class WorkerStream:
     def batches(
         self, epoch: int, batch_size: int, max_pairs: int | None = None
     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Full-batch slices of :meth:`pairs` (the materialized path;
+        the trailing partial batch is dropped)."""
         centers, contexts = self.pairs(epoch, max_pairs=max_pairs)
         n = (len(centers) // batch_size) * batch_size
         for i in range(0, n, batch_size):
@@ -137,6 +147,11 @@ def make_worker_streams(
     rate: float | None = None,
     **kw,
 ) -> list[WorkerStream]:
+    """One :class:`WorkerStream` per worker (ordered by worker id — the
+    order :meth:`HostShardPlan.local_streams` validates against), all
+    sharing the corpus/vocab and the division ``strategy``. ``rate``
+    defaults to the paper's ``1/num_workers``; extra kwargs (``window``,
+    ``subsample_t``, ``seed``) pass through to every stream."""
     rate = rate if rate is not None else 1.0 / num_workers
     return [
         WorkerStream(
@@ -176,10 +191,13 @@ class PairChunkStream:
 
     @property
     def num_workers(self) -> int:
+        """Number of worker streams feeding this chunk stream."""
         return len(self.streams)
 
     @property
     def chunk_pairs(self) -> int:
+        """Pairs each worker contributes per chunk
+        (``batch_size * steps_per_chunk``)."""
         return self.batch_size * self.steps_per_chunk
 
     def chunks(
@@ -268,10 +286,12 @@ class HostShardPlan:
     # -------------------------------------------------- worker ownership
     @property
     def start(self) -> int:
+        """First global worker id this host owns (inclusive)."""
         return (self.process_index * self.num_workers) // self.process_count
 
     @property
     def stop(self) -> int:
+        """One past the last global worker id this host owns."""
         return ((self.process_index + 1) * self.num_workers) // self.process_count
 
     @property
@@ -282,6 +302,7 @@ class HostShardPlan:
 
     @property
     def num_local(self) -> int:
+        """How many workers this host owns."""
         return self.stop - self.start
 
     # ------------------------------------------------------ construction
@@ -354,6 +375,7 @@ class HostShardPlan:
                 f"sharding (got uneven blocks)")
 
     def describe(self) -> str:
+        """One-line plan summary (the dryrun CLI's printout)."""
         return (f"host {self.process_index}/{self.process_count}: "
                 f"workers [{self.start}, {self.stop}) "
                 f"({self.num_local} of {self.num_workers})")

@@ -1,0 +1,89 @@
+"""LLM batched greedy decode with KV/state caches — **seed scaffolding**
+(see ``docs/SEED_SCAFFOLDING.md``). Kept because the transformer smoke
+tests exercise it; it is NOT the paper system's serving tier — that is
+``repro.launch.serve`` over the ``repro.serve`` package.
+
+  PYTHONPATH=src python -m repro.launch.decode_llm --arch qwen1.5-0.5b \
+      --reduced --batch 4 --prompt-len 16 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+from repro.models import transformer as tfm
+
+
+def serve(arch: str, *, reduced: bool, batch: int, prompt_len: int,
+          new_tokens: int, seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len), dtype=np.int32))
+
+    cache_len = prompt_len + new_tokens
+    if cfg.attention_window is not None:
+        cache_len = min(cache_len, cfg.attention_window)
+    enc_len = prompt_len if cfg.encoder_layers else None
+    cache = model.init_cache(batch, cache_len, enc_len=enc_len)
+    if cfg.encoder_layers:
+        frames = jnp.zeros((batch, prompt_len, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+        cache = jax.jit(lambda p, f, c: tfm.prefill_encoder(p, cfg, f, c, batch)
+                        )(params, frames, cache)
+
+    step = jax.jit(model.make_decode_step())
+
+    # prefill by decoding the prompt (cache-building pass)
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = step(params, cache, prompts[:, i : i + 1],
+                             jnp.int32(i))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    out = []
+    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(new_tokens):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1
+                         ).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    return gen, {"prefill_s": t_prefill, "decode_s": t_decode,
+                 "tok_per_s": batch * new_tokens / t_decode}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+    gen, stats = serve(args.arch, reduced=args.reduced, batch=args.batch,
+                       prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+    print(f"generated {gen.shape} tokens; "
+          f"prefill {stats['prefill_s']:.2f}s decode {stats['decode_s']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s)")
+    print("first sequence:", np.asarray(gen[0])[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

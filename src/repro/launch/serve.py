@@ -1,85 +1,120 @@
-"""Serving launcher: batched greedy decode with KV/state caches.
+"""Embedding serving launcher — the read path of the train→publish→serve
+loop.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-      --reduced --batch 4 --prompt-len 16 --new-tokens 32
+Point it at an artifact directory that ``repro.launch.train_sgns
+--publish`` (or :func:`repro.serve.publish_incremental`) wrote:
+
+  # one-shot query from the CLI (raw word ids, comma-separated)
+  PYTHONPATH=src python -m repro.launch.serve --artifact artifacts/ \
+      --query 11,42,7
+
+  # a worker's own space: present rows served, absent rows
+  # reconstructed on the fly (Y @ W_i.T)
+  PYTHONPATH=src python -m repro.launch.serve --artifact artifacts/ \
+      --query 11,42,7 --submodel 2
+
+  # long-running JSON-lines TCP server (requests: {"ids": [...]},
+  # {"op": "stats"}, {"op": "refresh"} — see repro.serve.tcp)
+  PYTHONPATH=src python -m repro.launch.serve --artifact artifacts/ \
+      --port 8765
+
+The server polls the artifact manifest every ``--refresh-s`` seconds
+and hot-swaps to newer versions as the incremental merge publishes
+them — a query never waits for training to finish.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import asyncio
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.models import Model
-from repro.models import transformer as tfm
+from repro.serve import EmbeddingServer, ServeConfig, start_tcp_server
 
 
-def serve(arch: str, *, reduced: bool, batch: int, prompt_len: int,
-          new_tokens: int, seed: int = 0):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (batch, prompt_len), dtype=np.int32))
+def _config(args) -> ServeConfig:
+    return ServeConfig(coalesce_ms=args.coalesce_ms, max_batch=args.max_batch,
+                       max_concurrency=args.concurrency,
+                       cache_rows=args.cache_rows)
 
-    cache_len = prompt_len + new_tokens
-    if cfg.attention_window is not None:
-        cache_len = min(cache_len, cfg.attention_window)
-    enc_len = prompt_len if cfg.encoder_layers else None
-    cache = model.init_cache(batch, cache_len, enc_len=enc_len)
-    if cfg.encoder_layers:
-        frames = jnp.zeros((batch, prompt_len, cfg.d_model),
-                           jnp.dtype(cfg.dtype))
-        cache = jax.jit(lambda p, f, c: tfm.prefill_encoder(p, cfg, f, c, batch)
-                        )(params, frames, cache)
 
-    step = jax.jit(model.make_decode_step())
+async def query_once(server: EmbeddingServer, raw_ids: list[int],
+                     submodel: int | None) -> None:
+    res = await server.embed_ids(np.asarray(raw_ids), submodel=submodel)
+    space = "merged" if submodel is None else f"submodel {submodel}"
+    print(f"artifact v{res['version']}  space={space}  dim="
+          f"{res['vectors'].shape[1]}")
+    for rid, vec, ok in zip(raw_ids, res["vectors"], res["found"]):
+        head = np.array2string(vec[:4], precision=3, suppress_small=True)
+        status = "ok " if ok else "OOV"
+        print(f"  id {rid:>8d} [{status}] ‖v‖={np.linalg.norm(vec):6.3f}  "
+              f"{head}…")
+    s = server.stats()
+    print(f"stats: p50 {s['p50_ms']:.2f} ms  p99 {s['p99_ms']:.2f} ms  "
+          f"mean batch {s['mean_batch']:.1f}  "
+          f"cache hit rate {s['cache_hit_rate']:.2f}")
 
-    # prefill by decoding the prompt (cache-building pass)
-    t0 = time.perf_counter()
-    logits = None
-    for i in range(prompt_len):
-        logits, cache = step(params, cache, prompts[:, i : i + 1],
-                             jnp.int32(i))
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
 
-    out = []
-    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(new_tokens):
-        out.append(tok)
-        logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1
-                         ).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    gen = jnp.concatenate(out, axis=1)
-    return gen, {"prefill_s": t_prefill, "decode_s": t_decode,
-                 "tok_per_s": batch * new_tokens / t_decode}
+async def run_tcp(server: EmbeddingServer, host: str, port: int,
+                  refresh_s: float) -> None:
+    srv = await start_tcp_server(server, host, port)
+    actual = srv.sockets[0].getsockname()[1]
+    print(f"serving artifact v{server.store.version} on {host}:{actual} "
+          f"(JSON lines; Ctrl-C to stop)")
+
+    async def poll():
+        while True:
+            await asyncio.sleep(refresh_s)
+            if server.refresh():
+                print(f"hot-swapped to artifact v{server.store.version}")
+
+    poller = asyncio.create_task(poll())
+    try:
+        async with srv:
+            await srv.serve_forever()
+    finally:
+        poller.cancel()
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifact", required=True,
+                    help="artifact directory (publish_table output)")
+    ap.add_argument("--query", default=None,
+                    help="comma-separated raw word ids: answer once and exit")
+    ap.add_argument("--submodel", type=int, default=None,
+                    help="serve in this worker's sub-model space "
+                         "(absent rows reconstructed on the fly)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="run the JSON-lines TCP server on this port "
+                         "(0 = ephemeral)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--version", type=int, default=None,
+                    help="pin a table version (default: track latest)")
+    ap.add_argument("--coalesce-ms", type=float, default=2.0)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--concurrency", type=int, default=4)
+    ap.add_argument("--cache-rows", type=int, default=4096)
+    ap.add_argument("--refresh-s", type=float, default=2.0,
+                    help="manifest poll interval for hot reloads")
     args = ap.parse_args(argv)
-    gen, stats = serve(args.arch, reduced=args.reduced, batch=args.batch,
-                       prompt_len=args.prompt_len, new_tokens=args.new_tokens)
-    print(f"generated {gen.shape} tokens; "
-          f"prefill {stats['prefill_s']:.2f}s decode {stats['decode_s']:.2f}s "
-          f"({stats['tok_per_s']:.1f} tok/s)")
-    print("first sequence:", np.asarray(gen[0])[:16].tolist())
+
+    from repro.serve import ArtifactStore
+    store = ArtifactStore(args.artifact, version=args.version)
+    server = EmbeddingServer(store, _config(args))
+
+    if args.query is not None:
+        ids = [int(x) for x in args.query.split(",") if x.strip()]
+        asyncio.run(query_once(server, ids, args.submodel))
+        return
+    if args.port is not None:
+        try:
+            asyncio.run(run_tcp(server, args.host, args.port, args.refresh_s))
+        except KeyboardInterrupt:
+            pass
+        return
+    ap.error("one of --query or --port is required")
 
 
 if __name__ == "__main__":

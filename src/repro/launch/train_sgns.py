@@ -60,6 +60,14 @@ def main(argv=None):
     ap.add_argument("--process-index", type=int, default=None,
                     help="this host's index (default: jax.process_index())")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--publish", default=None, metavar="DIR",
+                    help="incrementally ALiR-fold the sub-models and "
+                         "publish versioned merged-table artifacts to "
+                         "DIR (serve with `python -m repro.launch.serve "
+                         "--artifact DIR`)")
+    ap.add_argument("--publish-every", type=int, default=1,
+                    help="publish a table version every k folded "
+                         "sub-models (default 1: a version per worker)")
     args = ap.parse_args(argv)
     processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
@@ -100,6 +108,20 @@ def main(argv=None):
               f"ana={scores['analogy']:.3f} "
               f"cat={scores['categorization']:.3f} "
               f"train={info['train_s']:.1f}s")
+
+    if args.publish:
+        from repro.serve import publish_incremental
+        from repro.serve.publish import submodel_arrivals
+        versions, final = publish_incremental(
+            submodel_arrivals(res.stacked), args.publish,
+            word_ids=res.union_vocab.word_ids,
+            publish_every=args.publish_every,
+            meta={"strategy": args.strategy})
+        print(f"published {len(versions)} incremental table version(s) → "
+              f"{args.publish} (latest v{versions[-1]}, "
+              f"{int(np.asarray(final.valid).sum())} rows valid); serve: "
+              f"python -m repro.launch.serve --artifact {args.publish} "
+              f"--query <ids>")
 
     if args.save:
         best = args.merge[-1]

@@ -1,0 +1,38 @@
+"""The embedding serving tier — the read path of the system.
+
+Training produces sub-models; the merge folds them into a consensus
+table; this package serves that table to clients:
+
+* :mod:`repro.serve.publish` — incremental merge → versioned artifact
+  (one atomic :func:`repro.checkpoint.publish_table` per fold);
+* :mod:`repro.serve.store`   — artifact directory → always-complete
+  in-memory :class:`~repro.checkpoint.ServableTable`, hot-reloadable;
+* :mod:`repro.serve.batcher` — asyncio request coalescing + semaphore-
+  bounded batch dispatch;
+* :mod:`repro.serve.cache`   — hot-row LRU;
+* :mod:`repro.serve.server`  — :class:`EmbeddingServer`, tying the four
+  together, including on-the-fly ``reconstruct_missing`` for words
+  absent from some sub-models;
+* :mod:`repro.serve.tcp`     — a JSON-lines TCP front end.
+
+See ``docs/ARCHITECTURE.md`` ("Merge and serve") for the dataflow.
+"""
+
+from repro.serve.batcher import CoalescingBatcher, ServeConfig
+from repro.serve.cache import LRUCache
+from repro.serve.publish import publish_incremental
+from repro.serve.server import MERGED, EmbeddingServer
+from repro.serve.store import ArtifactStore
+from repro.serve.tcp import request_once, start_tcp_server
+
+__all__ = [
+    "ArtifactStore",
+    "CoalescingBatcher",
+    "EmbeddingServer",
+    "LRUCache",
+    "MERGED",
+    "ServeConfig",
+    "publish_incremental",
+    "request_once",
+    "start_tcp_server",
+]

@@ -1,0 +1,104 @@
+"""Incremental merge → versioned artifact: the train→serve bridge.
+
+The trainer's output is a stack of sub-models; this module folds them
+through :class:`~repro.core.merge.IncrementalAlirMerger` **as they
+arrive** and atomically publishes one artifact version per fold. A
+serving process pointed at the directory picks up each version via
+``refresh()`` — the first workers' embeddings are live while the rest
+are still training; the final fold (cold, canonical order) is
+bit-identical to the batch merge.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from repro.checkpoint.io import publish_table
+from repro.core.merge import FoldResult, IncrementalAlirMerger, alir_transforms
+
+
+def submodel_arrivals(stacked, order: Iterable[int] | None = None
+                      ) -> Iterator[tuple[int, np.ndarray, np.ndarray]]:
+    """Yield ``(worker_id, model, mask)`` from a trained
+    :class:`~repro.core.merge.StackedModels` — in ``order`` if given
+    (simulating an out-of-order finish), else worker order."""
+    models = np.asarray(stacked.models)
+    masks = np.asarray(stacked.mask)
+    for w in (range(len(models)) if order is None else order):
+        yield int(w), models[int(w)], masks[int(w)]
+
+
+def publish_incremental(
+    arrivals,
+    artifact_dir: str,
+    *,
+    word_ids: np.ndarray | None = None,
+    publish_every: int = 1,
+    include_models: bool = True,
+    final_cold_fold: bool = True,
+    merger: IncrementalAlirMerger | None = None,
+    meta: dict | None = None,
+) -> tuple[list[int], FoldResult]:
+    """Fold arriving sub-models and publish a table version per fold.
+
+    Args:
+        arrivals: iterable of ``(worker_id, model (V, d), mask (V,))``
+            — a :func:`submodel_arrivals` generator over a trained
+            stack, or a live queue drained as workers finish.
+        artifact_dir: target directory (created if needed); versions
+            are monotonic across runs into the same directory.
+        word_ids: raw word id per union-vocab row
+            (``union_vocab.word_ids``) — published so the server can
+            answer raw-id queries.
+        publish_every: publish after every k-th arrival (the last
+            arrival always publishes).
+        include_models: ship the folded sub-models as an artifact
+            sidecar so sub-model-space queries can serve *present* rows
+            too; turn off at production vocab where ``n·V·d`` dwarfs
+            the table and only reconstruction (absent rows) is needed.
+        final_cold_fold: finish with ``fold(warm=False)`` — the
+            canonical solve that is bit-identical to the batch
+            ``merge_alir`` regardless of arrival order.
+        merger: a pre-configured :class:`IncrementalAlirMerger`
+            (defaults to one with the standard init/iters/tol).
+        meta: extra manifest fields for every published version.
+
+    Returns:
+        ``(published version numbers, final FoldResult)``.
+    """
+    merger = merger or IncrementalAlirMerger()
+    versions: list[int] = []
+    fold = None
+    arrivals = list(arrivals)
+    if not arrivals:
+        raise ValueError("no sub-model arrivals to publish")
+    for k, (worker_id, model, mask) in enumerate(arrivals):
+        last = k == len(arrivals) - 1
+        fold = merger.add(worker_id, model, mask)
+        if last and final_cold_fold:
+            fold = merger.fold(warm=False)
+        if last or (k + 1) % publish_every == 0:
+            versions.append(_publish_fold(
+                merger, fold, artifact_dir, word_ids=word_ids,
+                include_models=include_models,
+                meta={**(meta or {}), "final": last}))
+    return versions, fold
+
+
+def _publish_fold(merger: IncrementalAlirMerger, fold: FoldResult,
+                  artifact_dir: str, *, word_ids, include_models: bool,
+                  meta: dict) -> int:
+    stacked = merger.stacked()
+    Ws = alir_transforms(stacked, fold.Y)
+    return publish_table(
+        artifact_dir,
+        np.asarray(fold.Y), np.asarray(fold.valid),
+        word_ids=word_ids,
+        worker_ids=np.asarray(fold.worker_ids, dtype=np.int32),
+        mask=np.asarray(stacked.mask),
+        transforms=np.asarray(Ws),
+        models=np.asarray(stacked.models) if include_models else None,
+        meta={"merge": "alir_incremental",
+              "n_folded": merger.n_folded, **meta})

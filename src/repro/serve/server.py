@@ -1,0 +1,173 @@
+"""The embedding query server.
+
+One :class:`EmbeddingServer` owns the read path end to end: external
+word ids map to table rows (store), hot rows come from the LRU, misses
+ride a coalesced batch dispatch, and sub-model-space queries
+reconstruct absent rows on the fly — the paper's robustness claim
+(``reconstruct_missing``, benchmarked in ``bench_oov.py``) as a per-
+query serving feature.
+
+Query spaces:
+
+* **merged** (default) — rows of the ALiR consensus table ``Y``;
+* **sub-model** (``submodel=worker_id``) — rows in that worker's own
+  coordinate space: present rows are the worker's trained vectors
+  (requires the artifact's ``models`` sidecar), absent rows are
+  reconstructed as ``Y[row] @ W_i.T`` from the stored alignment maps —
+  bit-identical to :func:`repro.core.merge.reconstruct_missing`.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+import numpy as np
+
+from repro.data.vocab import UNK
+from repro.serve.batcher import CoalescingBatcher, ServeConfig
+from repro.serve.cache import LRUCache
+from repro.serve.store import ArtifactStore
+
+MERGED = -1   # the merged-consensus query space (sentinel "submodel")
+
+
+class EmbeddingServer:
+    """Batched asyncio lookups over a published artifact.
+
+    Args:
+        store: an :class:`ArtifactStore` (or a path, for convenience).
+        cfg: coalescing window / batch cap / concurrency / cache size.
+
+    All lookups for all spaces flow through one batcher and one cache,
+    keyed by ``(space, row)`` — a reconstruction is cached exactly like
+    a plain row. ``refresh()`` hot-swaps to a newer table version and
+    drops the cache; row ids are stable across versions (the union
+    vocabulary is fixed before training), so in-flight keys stay valid.
+    """
+
+    def __init__(self, store: ArtifactStore | str,
+                 cfg: ServeConfig = ServeConfig()):
+        self.store = ArtifactStore(store) if isinstance(store, str) else store
+        self.cfg = cfg
+        self.cache = LRUCache(cfg.cache_rows)
+        self.batcher = CoalescingBatcher(self._gather, cfg)
+
+    # ------------------------------------------------------------------ query
+    async def embed_ids(self, raw_ids, submodel: int | None = None) -> dict:
+        """Embed external (raw) word ids.
+
+        Args:
+            raw_ids: sequence of raw word ids (the corpus namespace —
+                what ``Vocab.word_ids`` holds per table row).
+            submodel: a worker id for sub-model-space vectors; ``None``
+                for the merged consensus.
+
+        Returns:
+            ``{"vectors": (B, d) float32, "found": (B,) bool,
+            "version": int}``. Ids unknown to the vocabulary or not yet
+            covered by any folded sub-model come back zero with
+            ``found=False`` — a serving miss, never an error.
+        """
+        rows = self.store.rows_of(np.asarray(raw_ids, dtype=np.int64))
+        return await self.embed_rows(rows, submodel=submodel)
+
+    async def embed_rows(self, rows, submodel: int | None = None) -> dict:
+        """Embed table-row ids directly (see :meth:`embed_ids`)."""
+        table = self.store.table
+        rows = np.asarray(rows, dtype=np.int64)
+        space = MERGED if submodel is None else self._axis_of(submodel)
+        found = (rows != UNK) & (rows >= 0) & (rows < len(table.valid))
+        found = found & table.valid[np.clip(rows, 0, len(table.valid) - 1)]
+        out = np.zeros((len(rows), table.dim), dtype=np.float32)
+
+        async def one(i: int, row: int):
+            key = (space, row)
+            vec = self.cache.get(key)
+            if vec is None:
+                vec = await self.batcher.submit(key)
+                self.cache.put(key, vec)
+            out[i] = vec
+
+        await asyncio.gather(*(one(i, int(r)) for i, r in enumerate(rows)
+                               if found[i]))
+        return {"vectors": out, "found": found,
+                "version": table.version}
+
+    def _axis_of(self, worker_id: int) -> int:
+        """Map a worker id to its sub-model axis index in the artifact."""
+        table = self.store.table
+        if table.mask is None:
+            raise ValueError(
+                "artifact has no per-sub-model mask — published without "
+                "sub-model sidecars; sub-model-space queries unavailable")
+        if table.worker_ids is None:
+            axis = int(worker_id)
+        else:
+            hits = np.flatnonzero(np.asarray(table.worker_ids) == worker_id)
+            if len(hits) == 0:
+                raise KeyError(
+                    f"worker {worker_id} not in this artifact's fold "
+                    f"(has {np.asarray(table.worker_ids).tolist()})")
+            axis = int(hits[0])
+        if not 0 <= axis < table.mask.shape[0]:
+            raise KeyError(f"sub-model axis {axis} out of range")
+        return axis
+
+    # --------------------------------------------------------------- dispatch
+    def _gather(self, keys) -> dict:
+        """The batched lookup behind the coalescer: group the deduped
+        ``(space, row)`` keys by space, one vectorized gather (or
+        reconstruct) per space."""
+        table = self.store.table
+        by_space: dict[int, list[int]] = {}
+        for space, row in keys:
+            by_space.setdefault(space, []).append(row)
+        out = {}
+        for space, rows in by_space.items():
+            r = np.asarray(rows, dtype=np.int64)
+            if space == MERGED:
+                vecs = table.emb[r]
+            else:
+                vecs = self._reconstruct(table, space, r)
+            for row, v in zip(rows, vecs):
+                out[(space, row)] = np.asarray(v, dtype=np.float32)
+        return out
+
+    @staticmethod
+    def _reconstruct(table, axis: int, rows: np.ndarray) -> np.ndarray:
+        """Sub-model-space rows: the worker's own vector where present,
+        ``Y[row] @ W_i.T`` where absent (reconstruct_missing, served)."""
+        present = table.mask[axis, rows].astype(bool)
+        if table.transforms is None:
+            raise ValueError(
+                "artifact has no alignment transforms — publish with "
+                "transforms=alir_transforms(...) to serve reconstructions")
+        rec = table.emb[rows] @ table.transforms[axis].T
+        if present.any():
+            if table.models is None:
+                raise ValueError(
+                    "rows present in this sub-model need the artifact's "
+                    "`models` sidecar (publish_table(..., models=...)); "
+                    "only absent rows are reconstructable from Y and W_i")
+            rec = np.where(present[:, None], table.models[axis, rows], rec)
+        return rec
+
+    # ------------------------------------------------------------- lifecycle
+    def refresh(self) -> bool:
+        """Hot-swap to the newest published version (drops the cache).
+        Returns True when a swap happened."""
+        if self.store.refresh():
+            self.cache.clear()
+            return True
+        return False
+
+    async def drain(self) -> None:
+        """Flush pending coalesced batches and wait for them."""
+        await self.batcher.drain()
+
+    def stats(self) -> dict:
+        """Batcher latency/batch stats + cache hit rate + live version."""
+        return {**self.batcher.stats(),
+                "cache_hit_rate": self.cache.hit_rate,
+                "cache_rows": len(self.cache),
+                "version": self.store.version}

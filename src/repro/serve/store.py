@@ -1,0 +1,84 @@
+"""Artifact directory → always-complete in-memory table, hot-swappable.
+
+The store is the reader half of the atomic-publish contract in
+``repro.checkpoint.io``: it only ever opens table files the manifest
+names, so it can never observe a partial write, and :meth:`refresh`
+swaps to a newer version in one reference assignment — queries in
+flight keep the table object they started with.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint.io import ServableTable, load_manifest, load_table
+from repro.data.vocab import UNK
+
+
+class ArtifactStore:
+    """A live view over a versioned artifact directory.
+
+    Args:
+        artifact_dir: directory :func:`repro.checkpoint.publish_table`
+            writes to.
+        version: pin a specific version (``refresh`` then never moves);
+            default tracks the manifest's latest.
+
+    Attributes:
+        table: the current :class:`~repro.checkpoint.ServableTable`.
+    """
+
+    def __init__(self, artifact_dir: str, version: int | None = None):
+        self.artifact_dir = artifact_dir
+        self._pinned = version
+        self.table: ServableTable = load_table(artifact_dir, version)
+        self._raw_to_row = self._build_lookup(self.table)
+
+    @staticmethod
+    def _build_lookup(table: ServableTable) -> np.ndarray | None:
+        """raw word id → table row (or UNK), from the artifact's
+        ``word_ids``; ``None`` when the artifact was published without
+        one (queries are then already row ids)."""
+        if table.word_ids is None:
+            return None
+        word_ids = np.asarray(table.word_ids)
+        lookup = np.full(int(word_ids.max()) + 1, UNK, dtype=np.int32)
+        lookup[word_ids] = np.arange(len(word_ids), dtype=np.int32)
+        return lookup
+
+    @property
+    def version(self) -> int:
+        """Version of the currently loaded table."""
+        return self.table.version
+
+    def latest_available(self) -> int | None:
+        """The manifest's latest published version (cheap poll)."""
+        manifest = load_manifest(self.artifact_dir)
+        return manifest["latest"] if manifest else None
+
+    def refresh(self) -> bool:
+        """Reload if a newer version has been published (and the store
+        is not pinned). Returns True when the table was swapped."""
+        if self._pinned is not None:
+            return False
+        latest = self.latest_available()
+        if latest is None or latest <= self.table.version:
+            return False
+        self.table = load_table(self.artifact_dir, latest)
+        self._raw_to_row = self._build_lookup(self.table)
+        return True
+
+    def rows_of(self, raw_ids: np.ndarray) -> np.ndarray:
+        """Map external (raw) word ids to table rows; unknown → UNK.
+
+        With no ``word_ids`` in the artifact the query namespace *is*
+        row space: out-of-range ids map to UNK."""
+        raw_ids = np.asarray(raw_ids)
+        if self._raw_to_row is None:
+            rows = raw_ids.astype(np.int32, copy=True)
+            rows[(rows < 0) | (rows >= len(self.table.emb))] = UNK
+            return rows
+        rows = np.full(raw_ids.shape, UNK, dtype=np.int32)
+        ok = (raw_ids >= 0) & (raw_ids < len(self._raw_to_row))
+        rows[ok] = self._raw_to_row[raw_ids[ok]]
+        return rows

@@ -1,0 +1,130 @@
+"""Versioned merged-table artifacts: atomic publish, crash safety,
+version monotonicity (repro.checkpoint.io publish_table/load_table)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (MANIFEST_NAME, load_manifest, load_table,
+                              next_version, publish_table)
+from repro.checkpoint.io import _atomic_write_bytes, _savez_to, _table_path
+
+
+def _payload(V=20, d=4, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        emb=rng.normal(size=(V, d)).astype(np.float32),
+        valid=np.ones(V, bool),
+        word_ids=np.arange(V, dtype=np.int32) * 2,
+        worker_ids=np.arange(n, dtype=np.int32),
+        mask=rng.random((n, V)) > 0.3,
+        transforms=rng.normal(size=(n, d, d)).astype(np.float32),
+        models=rng.normal(size=(n, V, d)).astype(np.float32),
+    )
+
+
+def test_publish_load_roundtrip_with_sidecars(tmp_path):
+    p = _payload()
+    v = publish_table(str(tmp_path), meta={"merge": "test"}, **p)
+    assert v == 1
+    t = load_table(str(tmp_path))
+    assert t.version == 1 and t.dim == p["emb"].shape[1]
+    for k in p:
+        np.testing.assert_array_equal(getattr(t, k), p[k])
+    assert t.meta["merge"] == "test"
+    assert t.meta["rows"] == p["emb"].shape[0]
+    assert t.meta["n_models"] == p["mask"].shape[0]
+
+
+def test_optional_sidecars_absent_load_as_none(tmp_path):
+    p = _payload()
+    publish_table(str(tmp_path), p["emb"], p["valid"])
+    t = load_table(str(tmp_path))
+    assert t.word_ids is None and t.worker_ids is None
+    assert t.mask is None and t.transforms is None and t.models is None
+
+
+def test_versions_monotonic_and_pinnable(tmp_path):
+    for k in range(3):
+        p = _payload(seed=k)
+        assert publish_table(str(tmp_path), p["emb"], p["valid"]) == k + 1
+    assert load_table(str(tmp_path)).version == 3
+    t2 = load_table(str(tmp_path), version=2)
+    np.testing.assert_array_equal(t2.emb, _payload(seed=1)["emb"])
+    m = load_manifest(str(tmp_path))
+    assert m["latest"] == 3
+    assert [e["version"] for e in m["versions"]] == [1, 2, 3]
+
+
+def test_load_before_first_publish_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_table(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        load_table(str(tmp_path / "never-created"))
+
+
+def test_failed_write_leaves_no_temp_and_no_manifest(tmp_path):
+    """A crash mid-table-write must leave the directory publishable and
+    readers unaffected: the temp file is cleaned up (or at worst ignored
+    — it never matches the table_v*/manifest names)."""
+    target = str(tmp_path / "table_v000001.npz")
+
+    def boom(tmp):
+        with open(tmp, "wb") as f:
+            f.write(b"partial")
+        raise OSError("disk full")
+
+    with pytest.raises(OSError):
+        _atomic_write_bytes(target, boom)
+    assert os.listdir(tmp_path) == []          # temp removed, no target
+    assert load_manifest(str(tmp_path)) is None
+    p = _payload()
+    assert publish_table(str(tmp_path), p["emb"], p["valid"]) == 1
+
+
+def test_stray_tmp_file_is_invisible_to_readers(tmp_path):
+    p = _payload()
+    publish_table(str(tmp_path), p["emb"], p["valid"])
+    (tmp_path / ".tmp-table_v000002.npz.999").write_bytes(b"partial write")
+    t = load_table(str(tmp_path))                    # still v1, complete
+    assert t.version == 1
+    np.testing.assert_array_equal(t.emb, p["emb"])
+    assert next_version(str(tmp_path)) == 2          # tmp name not scanned
+
+
+def test_orphan_table_version_never_reused(tmp_path):
+    """Crash *between* the table rename and the manifest rename: the new
+    file exists but the manifest still names the old version. Readers
+    stay on the old version; the orphan's number is burned forever, so a
+    version string uniquely names one byte-content."""
+    p1 = _payload(seed=1)
+    publish_table(str(tmp_path), p1["emb"], p1["valid"])
+    # simulate the crash: v2's table lands, manifest never updated
+    orphan = _payload(seed=2)
+    _savez_to(_table_path(str(tmp_path), 2),
+              {"emb": orphan["emb"], "valid": orphan["valid"]})
+
+    t = load_table(str(tmp_path))
+    assert t.version == 1                            # manifest is truth
+    np.testing.assert_array_equal(t.emb, p1["emb"])
+    with pytest.raises(FileNotFoundError):
+        load_table(str(tmp_path), version=2)         # orphan unloadable
+
+    p3 = _payload(seed=3)
+    v = publish_table(str(tmp_path), p3["emb"], p3["valid"])
+    assert v == 3                                    # 2 never reused
+    np.testing.assert_array_equal(load_table(str(tmp_path)).emb, p3["emb"])
+
+
+def test_manifest_written_after_table(tmp_path):
+    """The manifest only ever names files that are fully on disk."""
+    p = _payload()
+    publish_table(str(tmp_path), p["emb"], p["valid"])
+    m = load_manifest(str(tmp_path))
+    for e in m["versions"]:
+        path = tmp_path / e["file"]
+        assert path.exists()
+        with np.load(path) as data:                  # loadable = complete
+            assert "emb" in data.files
+    assert (tmp_path / MANIFEST_NAME).exists()

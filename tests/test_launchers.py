@@ -31,8 +31,8 @@ def test_train_launcher_resume(tmp_path):
     assert len(losses) > 0 and np.isfinite(losses).all()
 
 
-def test_serve_launcher_generates():
-    from repro.launch.serve import serve
+def test_decode_llm_launcher_generates():
+    from repro.launch.decode_llm import serve
     gen, stats = serve("qwen1.5-0.5b", reduced=True, batch=2, prompt_len=6,
                        new_tokens=8)
     assert gen.shape == (2, 8)
@@ -48,6 +48,31 @@ def test_train_sgns_cli(capsys):
           "--merge", "alir_pca"])
     out = capsys.readouterr().out
     assert "alir_pca" in out and "sim=" in out
+
+
+def test_train_sgns_publish_then_serve_cli(tmp_path, capsys):
+    """The full production loop at CLI granularity: train with --publish,
+    then answer queries (merged and sub-model space) with the serve
+    launcher against the artifact directory."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train_sgns import main as train_main
+    art = str(tmp_path / "artifacts")
+    train_main(["--strategy", "random", "--workers", "2", "--epochs", "1",
+                "--dim", "16", "--vocab", "400", "--sentences", "3000",
+                "--merge", "concat", "--publish", art])
+    out = capsys.readouterr().out
+    assert "published 2 incremental table version(s)" in out
+
+    serve_main(["--artifact", art, "--query", "1,2,3,999999"])
+    out = capsys.readouterr().out
+    assert "artifact v2" in out and "space=merged" in out
+    assert "[OOV]" in out                     # 999999 is out of vocab
+    assert "stats:" in out
+
+    serve_main(["--artifact", art, "--query", "1,2", "--submodel", "0",
+                "--version", "1"])
+    out = capsys.readouterr().out
+    assert "artifact v1" in out and "space=submodel 0" in out
 
 
 def test_grouped_moe_matches_ungrouped_with_ample_capacity():

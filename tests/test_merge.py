@@ -166,6 +166,67 @@ def test_pca_shape_and_variance_order():
     assert np.all(var[:-1] >= var[1:] - 1e-5)  # descending components
 
 
+def test_incremental_add_validations():
+    _, stacked = make_rotated_models(V=60, d=6, n=3)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    m = mg.IncrementalAlirMerger()
+    m.add(0, models[0], masks[0])
+    with pytest.raises(ValueError, match="already folded"):
+        m.add(0, models[1], masks[1])
+    with pytest.raises(ValueError, match="shape"):
+        m.add(1, models[1][:, :3], masks[1])
+    with pytest.raises(ValueError, match="mask"):
+        m.add(1, models[1], masks[1][:10])
+    assert m.worker_ids == (0,) and m.n_folded == 1
+
+
+def test_incremental_cold_fold_bitwise_matches_batch():
+    """fold(warm=False) after all arrivals must reproduce the batch
+    merge_alir bit-for-bit, regardless of arrival order (the canonical
+    worker-id restacking). Exhaustive permutations are property-tested
+    in test_property.py; these are fixed representative orders."""
+    _, stacked = make_rotated_models(V=80, d=8, n=4, miss_frac=0.2, seed=2)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    Yb, validb, _ = mg.merge_alir(stacked)
+    for order in ((0, 1, 2, 3), (3, 1, 0, 2), (2, 3, 1, 0)):
+        m = mg.IncrementalAlirMerger()
+        for w in order:
+            m.add(w, models[w], masks[w])
+        final = m.fold(warm=False)
+        assert final.worker_ids == (0, 1, 2, 3)
+        np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(Yb))
+        np.testing.assert_array_equal(np.asarray(final.valid),
+                                      np.asarray(validb))
+
+
+def test_incremental_warm_folds_match_batch_up_to_rotation():
+    """Warm intermediate folds inherit their gauge from the arrival
+    history: the documented tolerance vs the batch merge is a small
+    residual after optimal rotation, not element-wise equality."""
+    _, stacked = make_rotated_models(V=100, d=8, n=4, miss_frac=0.2,
+                                     noise=0.005, seed=6)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    m = mg.IncrementalAlirMerger()
+    folds = [m.add(w, models[w], masks[w]) for w in range(4)]
+    # coverage grows monotonically with arrivals
+    counts = [int(np.asarray(f.valid).sum()) for f in folds]
+    assert counts == sorted(counts) and counts[-1] == 100
+    Yb, validb, _ = mg.merge_alir(stacked)
+    v = np.asarray(validb)
+    warm = np.asarray(folds[-1].Y)
+    assert procrustes_distance(warm[v], np.asarray(Yb)[v]) < 0.05
+
+
+def test_incremental_early_fold_is_servable_for_its_coverage():
+    _, stacked = make_rotated_models(V=80, d=8, n=3, miss_frac=0.4, seed=9)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    m = mg.IncrementalAlirMerger()
+    first = m.add(1, models[1], masks[1])        # any worker can be first
+    np.testing.assert_array_equal(np.asarray(first.valid), masks[1])
+    Y = np.asarray(first.Y)
+    assert np.isfinite(Y).all() and np.all(Y[~masks[1]] == 0)
+
+
 def test_merge_dispatch_all_methods():
     _, stacked = make_rotated_models(V=60, d=6, n=3, miss_frac=0.1, seed=11)
     for m in mg.MERGE_METHODS:

@@ -127,6 +127,38 @@ def test_alir_displacement_never_explodes(n, seed):
     assert d_arr[-1] <= d_arr[0] + 1e-5     # displacement non-increasing-ish
 
 
+@settings(max_examples=10, deadline=None)
+@given(perm=st.permutations(tuple(range(4))), seed=st.integers(0, 999))
+def test_incremental_cold_fold_is_arrival_order_invariant(perm, seed):
+    """The acceptance property of the incremental merger: fold sub-models
+    in ANY arrival order, finish with the canonical cold fold, and the
+    result is bit-identical to the batch merge_alir — the canonical
+    worker-id restacking erases the arrival history entirely."""
+    rng = np.random.default_rng(seed)
+    V, d = 40, 5
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(4):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) > 0.25
+        mask[: d + 2] = True
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 0
+        models.append(M)
+        masks.append(mask)
+    stacked = mg.stack_models(models, masks)
+    Yb, validb, _ = mg.merge_alir(stacked)
+
+    merger = mg.IncrementalAlirMerger()
+    for w in perm:
+        merger.add(w, models[w], masks[w], fold=False)  # arrival only
+    final = merger.fold(warm=False)
+    assert final.worker_ids == (0, 1, 2, 3)
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(Yb))
+    np.testing.assert_array_equal(np.asarray(final.valid),
+                                  np.asarray(validb))
+
+
 # ------------------------------------------------------------ data substrate
 @settings(max_examples=15, deadline=None)
 @given(v=st.integers(10, 200), seed=st.integers(0, 999))

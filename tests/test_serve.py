@@ -1,0 +1,282 @@
+"""Serving tier: LRU cache, request coalescing, the embedding server's
+equivalence to the merge-phase math, hot reload, and the TCP front end."""
+
+import asyncio
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import merge as mg
+from repro.checkpoint import publish_table
+from repro.serve import (ArtifactStore, CoalescingBatcher, EmbeddingServer,
+                         LRUCache, ServeConfig)
+from repro.serve.tcp import request_once, start_tcp_server
+
+V, D, N = 60, 6, 3
+
+
+def _stacked(V=V, d=D, n=N, seed=0, full=False):
+    """Rotated copies of one table with per-model holes (ALiR's model)."""
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        M = (Y @ q).astype(np.float32)
+        mask = np.ones(V, bool) if (i == 0 or full) else rng.random(V) >= 0.3
+        mask[: d + 2] = True
+        M[~mask] = 0.0
+        models.append(M)
+        masks.append(mask)
+    return mg.stack_models(models, masks)
+
+
+def _publish(artifact_dir, stacked, word_ids=None, scale=1.0):
+    """Batch-merge and publish with every serving sidecar."""
+    Y, valid, _ = mg.merge_alir(stacked)
+    Y = jnp.asarray(np.asarray(Y) * scale)
+    Ws = mg.alir_transforms(stacked, Y)
+    publish_table(str(artifact_dir), np.asarray(Y), np.asarray(valid),
+                  word_ids=word_ids,
+                  worker_ids=np.arange(stacked.n, dtype=np.int32),
+                  mask=np.asarray(stacked.mask),
+                  transforms=np.asarray(Ws),
+                  models=np.asarray(stacked.models))
+    return np.asarray(Y), np.asarray(valid)
+
+
+# --------------------------------------------------------------------- cache
+def test_lru_evicts_least_recently_used():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refresh a → b is now LRU
+    c.put("c", 3)
+    assert c.get("b") is None and c.get("a") == 1 and c.get("c") == 3
+    assert len(c) == 2
+
+
+def test_lru_hit_rate_and_zero_capacity():
+    c = LRUCache(4)
+    c.put("k", 7)
+    assert c.get("k") == 7 and c.get("x") is None
+    assert c.hit_rate == pytest.approx(0.5)
+    c.clear()
+    assert len(c) == 0 and c.get("k") is None
+
+    off = LRUCache(0)
+    off.put("k", 7)
+    assert off.get("k") is None and len(off) == 0
+
+
+# ------------------------------------------------------------------- batcher
+def test_batcher_coalesces_and_dedups_one_window():
+    calls = []
+
+    def dispatch(keys):
+        calls.append(sorted(keys))
+        return {k: k * 10 for k in keys}
+
+    async def go():
+        b = CoalescingBatcher(dispatch, ServeConfig(coalesce_ms=5.0,
+                                                    max_batch=100))
+        res = await asyncio.gather(*(b.submit(i % 3) for i in range(9)))
+        assert res == [0, 10, 20] * 3
+        assert b.requests == 9 and b.dispatches == 1
+        s = b.stats()
+        assert s["mean_batch"] == 3 and s["max_batch"] == 3
+
+    asyncio.run(go())
+    assert calls == [[0, 1, 2]]      # 9 submits → 1 deduped dispatch
+
+
+def test_batcher_flushes_immediately_at_max_batch():
+    def dispatch(keys):
+        return {k: k for k in keys}
+
+    async def go():
+        b = CoalescingBatcher(dispatch, ServeConfig(coalesce_ms=1000.0,
+                                                    max_batch=4))
+        # a 1 s window would stall the test — only the cap can flush
+        await asyncio.wait_for(
+            asyncio.gather(*(b.submit(i) for i in range(8))), timeout=5)
+        assert b.dispatches == 2 and b.stats()["max_batch"] == 4
+
+    asyncio.run(go())
+
+
+def test_batcher_respects_concurrency_semaphore():
+    def dispatch(keys):
+        time.sleep(0.02)
+        return {k: k for k in keys}
+
+    async def go():
+        b = CoalescingBatcher(dispatch, ServeConfig(
+            coalesce_ms=0.1, max_batch=1, max_concurrency=2,
+            dispatch_in_thread=True))
+        await asyncio.gather(*(b.submit(i) for i in range(6)))
+        s = b.stats()
+        assert s["dispatches"] == 6
+        assert 1 <= s["max_concurrent_dispatches"] <= 2
+
+    asyncio.run(go())
+
+
+def test_batcher_rejects_whole_batch_on_dispatch_error():
+    def dispatch(keys):
+        raise RuntimeError("backend down")
+
+    async def go():
+        b = CoalescingBatcher(dispatch, ServeConfig(coalesce_ms=1.0))
+        res = await asyncio.gather(b.submit("a"), b.submit("b"),
+                                   return_exceptions=True)
+        assert all(isinstance(r, RuntimeError) for r in res)
+        # the batcher survives the failure: next window works if the
+        # backend recovers
+        b._dispatch = lambda keys: {k: 1 for k in keys}
+        assert await b.submit("a") == 1
+
+    asyncio.run(go())
+
+
+# -------------------------------------------------------------------- server
+def test_server_merged_rows_match_published_table(tmp_path):
+    stacked = _stacked()
+    Y, valid = _publish(tmp_path, stacked)
+
+    async def go():
+        srv = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5))
+        out = await srv.embed_rows(np.arange(V))
+        np.testing.assert_array_equal(out["found"], valid)
+        np.testing.assert_array_equal(out["vectors"][valid],
+                                      Y.astype(np.float32)[valid])
+        assert out["version"] == 1
+
+    asyncio.run(go())
+
+
+def test_server_submodel_space_equals_reconstruct_missing(tmp_path):
+    """The served sub-model path must reproduce the merge-phase
+    ``reconstruct_missing`` — present rows from the sidecar, absent
+    rows ``Y @ W_i.T``."""
+    stacked = _stacked()
+    Y, _ = _publish(tmp_path, stacked)
+    rec = np.asarray(mg.reconstruct_missing(stacked, jnp.asarray(Y)))
+
+    async def go():
+        srv = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5))
+        for w in range(N):
+            out = await srv.embed_rows(np.arange(V), submodel=w)
+            np.testing.assert_allclose(out["vectors"],
+                                       rec[w].astype(np.float32),
+                                       rtol=1e-5, atol=1e-5)
+        with pytest.raises(KeyError):
+            await srv.embed_rows([0], submodel=99)
+
+    asyncio.run(go())
+
+
+def test_server_serves_bench_oov_knockout_masks(tmp_path):
+    """The bench_oov knock-out scenario end to end through the server:
+    words masked out of random model subsets are still answerable in
+    every sub-model's space."""
+    from benchmarks.bench_oov import knock_out
+    from repro.data.vocab import Vocab
+
+    base = _stacked(full=True, seed=4)
+    vocab = Vocab(word_ids=np.arange(V, dtype=np.int32),
+                  counts=np.ones(V, np.int64),
+                  lookup=np.arange(V, dtype=np.int32))
+    stacked = knock_out(base, vocab, np.arange(V), frac=0.5, seed=1)
+    mask = np.asarray(stacked.mask)
+    assert not mask.all() and mask.any(axis=0).all()   # holes, full union
+    Y, _ = _publish(tmp_path, stacked)
+    rec = np.asarray(mg.reconstruct_missing(stacked, jnp.asarray(Y)))
+
+    async def go():
+        srv = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5))
+        w = int(np.argmax((~mask).sum(axis=1)))        # loss-heaviest model
+        out = await srv.embed_rows(np.arange(V), submodel=w)
+        assert out["found"].all()                      # nothing unanswerable
+        np.testing.assert_allclose(out["vectors"], rec[w].astype(np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+    asyncio.run(go())
+
+
+def test_server_raw_id_namespace_and_unknown_ids(tmp_path):
+    stacked = _stacked()
+    word_ids = np.arange(V, dtype=np.int32) * 2        # raw ids: evens
+    Y, valid = _publish(tmp_path, stacked, word_ids=word_ids)
+
+    async def go():
+        srv = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5))
+        out = await srv.embed_ids([0, 4, 3, 10_000, -1])
+        np.testing.assert_array_equal(out["found"],
+                                      [valid[0], valid[2], False, False,
+                                       False])
+        np.testing.assert_array_equal(out["vectors"][1], Y[2])
+        assert (out["vectors"][2:] == 0).all()         # misses are zeros
+
+    asyncio.run(go())
+
+
+def test_server_cache_hits_and_hot_reload(tmp_path):
+    stacked = _stacked()
+    Y1, _ = _publish(tmp_path, stacked)
+
+    async def go():
+        srv = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5,
+                                                         cache_rows=V))
+        await srv.embed_rows(np.arange(V))
+        out = await srv.embed_rows(np.arange(V))       # all cached now
+        assert srv.stats()["cache_hit_rate"] >= 0.5
+        assert srv.refresh() is False                  # nothing newer
+
+        Y2, _ = _publish(tmp_path, stacked, scale=2.0)  # version 2
+        assert srv.refresh() is True
+        assert srv.store.version == 2 and len(srv.cache) == 0  # cache drop
+        out2 = await srv.embed_rows(np.arange(V))
+        np.testing.assert_array_equal(out2["vectors"][out2["found"]],
+                                      Y2.astype(np.float32)[out2["found"]])
+        assert not np.array_equal(out2["vectors"], out["vectors"])
+
+        pinned = EmbeddingServer(ArtifactStore(str(tmp_path), version=1))
+        assert pinned.refresh() is False and pinned.store.version == 1
+
+    asyncio.run(go())
+
+
+# ----------------------------------------------------------------------- tcp
+def test_tcp_round_trip_stats_and_errors(tmp_path):
+    stacked = _stacked()
+    Y, valid = _publish(tmp_path, stacked)
+
+    async def go():
+        server = EmbeddingServer(str(tmp_path), ServeConfig(coalesce_ms=0.5))
+        srv = await start_tcp_server(server)
+        port = srv.sockets[0].getsockname()[1]
+        try:
+            r = await request_once("127.0.0.1", port, {"rows": [0, 1]})
+            assert r["version"] == 1 and len(r["vectors"]) == 2
+            np.testing.assert_allclose(r["vectors"][0], Y[0], rtol=1e-6)
+
+            r = await request_once("127.0.0.1", port,
+                                   {"rows": [5], "submodel": 0})
+            assert r["found"] == [bool(valid[5])]
+
+            s = await request_once("127.0.0.1", port, {"op": "stats"})
+            assert s["stats"]["requests"] >= 3
+
+            bad = await request_once("127.0.0.1", port, {"op": "nope"})
+            assert "error" in bad
+            # a malformed request didn't kill the server
+            r = await request_once("127.0.0.1", port, {"op": "refresh"})
+            assert r == {"refreshed": False, "version": 1}
+        finally:
+            srv.close()
+            await srv.wait_closed()
+
+    asyncio.run(go())
