@@ -2,10 +2,17 @@
 Pallas-kernel equivalence check (interpret mode; Mosaic on TPU), and an
 update-engine smoke sweep — one timed step per registered engine, so the
 benchmark artifact shows every step path (dense / sparse / pallas /
-pallas_fused / pallas_fused_hbm / pallas_fused_pipe) side by side,
-including the blocked HBM-streaming engines' bit-equivalence against
-the per-block sparse reference (the pipelined engine must match it —
-and therefore the unpipelined chain — bit for bit)."""
+pallas_fused / pallas_fused_hbm / pallas_fused_pipe /
+pallas_fused_tiered) side by side, including the blocked HBM-streaming
+engines' bit-equivalence against the per-block sparse reference (the
+pipelined and tiered engines must match it — and therefore the
+unpipelined chain — bit for bit).
+
+A **hot-fraction sweep** times ``pallas_fused_tiered`` over a ladder of
+``hot_rows`` settings on a Zipfian pair stream — the VMEM-budget vs
+DMA-traffic trade-off curve, landed in the CI bench artifact (a compact
+ladder rides in every ``run()``; ``--hot-sweep`` prints a finer
+standalone one)."""
 
 from __future__ import annotations
 
@@ -47,6 +54,36 @@ def engine_sweep(cfg, params, c, x, counts, iters=10, specs=ENGINE_NAMES):
                     iters=iters)
         out[str(name)] = us
     return out
+
+
+def zipf_ids(rng, V, shape, a=1.2):
+    """Zipfian ids clipped to the vocab — the skewed stream the hot
+    tier is built for (ids are frequency-ranked, so low id = hot)."""
+    return jnp.asarray(np.minimum(rng.zipf(a, shape) - 1, V - 1)
+                       .astype(np.int32))
+
+
+def hot_sweep(cfg, params, counts, hots, B=1024, iters=3, seed=7):
+    """Time ``pallas_fused_tiered`` at a ladder of ``hot_rows`` settings
+    on a Zipfian pair stream (uniform ids would starve the hot tier).
+    Returns ``[{"hot_rows": k, "us": µs_per_step}, ...]`` — the
+    VMEM-budget/speed trade-off curve; ``hot_rows=0`` is the pure
+    pipeline baseline of the same kernel family."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    c = zipf_ids(rng, V, B)
+    x = zipf_ids(rng, V, B)
+    table = build_noise_table(counts, kind="alias")
+    rows = []
+    for k in hots:
+        eng = get_engine("pallas_fused_tiered", hot_rows=int(k))
+        step = jax.jit(eng.make_step(cfg, total_steps=1000))
+        key = jax.random.PRNGKey(3)
+        p0 = jax.tree.map(jnp.copy, params)
+        us = _bench(lambda: step(p0, c, x, table, key, jnp.int32(1)), (),
+                    iters=iters)
+        rows.append({"hot_rows": int(k), "us": us})
+    return rows
 
 
 def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
@@ -108,8 +145,21 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
     pipe_err = float(max(jnp.max(jnp.abs(pp["W"] - pr["W"])),
                          jnp.max(jnp.abs(pp["C"] - pr["C"]))))
 
+    # frequency-tiered engine vs the same reference — tier routing must
+    # be bit-invisible too (the hot prefix is genuinely touched: the
+    # noise draw is Zipfian over frequency-ranked ids)
+    eng_t = get_engine("pallas_fused_tiered")
+    pt, _ = eng_t.make_step(cfg, 1000)(
+        jax.tree.map(jnp.copy, params), c, x, table, key, jnp.int32(0))
+    tiered_err = float(max(jnp.max(jnp.abs(pt["W"] - pr["W"])),
+                           jnp.max(jnp.abs(pt["C"] - pr["C"]))))
+
     engine_us = engine_sweep(cfg, params, c, x, counts,
                              iters=3 if quick else 10, specs=engines)
+    sweep = hot_sweep(cfg, params, counts,
+                      hots=(0, 256, 4096) if quick else (0, 64, 256, 1024,
+                                                         4096, V),
+                      B=B, iters=2 if quick else 5)
     return {
         "us_sparse_step": us_sparse,
         "us_dense_step": us_dense,
@@ -118,7 +168,9 @@ def run(B=1024, K=5, D=512, V=50_000, quick=False, engines=ENGINE_NAMES):
         "fused_vs_sparse_err": fused_err,
         "fused_hbm_vs_sparse_err": hbm_err,
         "fused_pipe_vs_sparse_err": pipe_err,
+        "fused_tiered_vs_sparse_err": tiered_err,
         "engine_us": engine_us,
+        "tiered_hot_sweep": sweep,
         "B": B,
     }
 
@@ -146,10 +198,38 @@ def main(quick=False, engine=None):
     print(f"pallas_fused_pipe step vs per-block sparse ref max|Δ| = "
           f"{r['fused_pipe_vs_sparse_err']:.2e} "
           f"(pipelined DMA, deduped rows; bit-identical by contract)")
+    print(f"pallas_fused_tiered step vs per-block sparse ref max|Δ| = "
+          f"{r['fused_tiered_vs_sparse_err']:.2e} "
+          f"(VMEM hot prefix + cold DMA ring; bit-identical by contract)")
     for name, us in r["engine_us"].items():
         print(f"engine {name:12s}: {us:9.1f} µs/step "
               f"({r['B'] / (us / 1e6):.2e} pairs/s)")
+    print("tiered hot-fraction sweep (Zipfian stream; hot_rows → µs/step):")
+    for row in r["tiered_hot_sweep"]:
+        print(f"  hot_rows {row['hot_rows']:6d}: {row['us']:9.1f} µs/step "
+              f"({r['B'] / (row['us'] / 1e6):.2e} pairs/s)")
     return r
+
+
+def main_hot_sweep(quick=False, B=1024, K=5, D=512, V=50_000):
+    """Standalone fine-grained hot-fraction ladder — the VMEM-budget vs
+    speed trade-off of ``pallas_fused_tiered`` on a Zipfian stream."""
+    cfg = sgns.SGNSConfig(vocab_size=V, dim=D, negatives=K)
+    params = sgns.init_params(jax.random.PRNGKey(0), cfg)
+    counts = np.random.default_rng(0).zipf(1.3, V).astype(np.float64)
+    hots = (0, 256, 4096) if quick else (0, 16, 64, 256, 1024, 4096,
+                                         16_384, V)
+    with timer() as t:
+        rows = hot_sweep(cfg, params, counts, hots, B=B,
+                         iters=2 if quick else 5)
+    print(f"\n[kernel] pallas_fused_tiered hot-fraction sweep "
+          f"(V={V}, d={D}, B={B}, Zipfian ids; {t.s:.1f}s)")
+    for row in rows:
+        vmem_mb = 2 * row["hot_rows"] * D * 4 / 1e6
+        print(f"  hot_rows {row['hot_rows']:6d} "
+              f"({vmem_mb:7.2f} MB VMEM): {row['us']:9.1f} µs/step "
+              f"({B / (row['us'] / 1e6):.2e} pairs/s)")
+    return rows
 
 
 if __name__ == "__main__":
@@ -159,7 +239,13 @@ if __name__ == "__main__":
     ap.add_argument("--engine", default=None,
                     help="time only this engine's step (dense | sparse | "
                          "pallas | pallas_fused | pallas_fused_hbm | "
-                         "pallas_fused_pipe)")
+                         "pallas_fused_pipe | pallas_fused_tiered)")
+    ap.add_argument("--hot-sweep", action="store_true",
+                    help="run only the fine-grained pallas_fused_tiered "
+                         "hot-fraction ladder (VMEM budget vs µs/step)")
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
-    main(quick=a.quick, engine=a.engine)
+    if a.hot_sweep:
+        main_hot_sweep(quick=a.quick)
+    else:
+        main(quick=a.quick, engine=a.engine)

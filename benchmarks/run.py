@@ -7,7 +7,8 @@
   bench_oov       — Fig 3   (missing-vocabulary reconstruction)
   bench_kernel    — SGNS step micro-bench + Pallas/oracle check +
                     update-engine sweep (dense/sparse/pallas/pallas_fused/
-                    pallas_fused_hbm, incl. the HBM-blocked bit-equivalence)
+                    pallas_fused_hbm/_pipe/_tiered, incl. the HBM-blocked
+                    bit-equivalences and the tiered hot-fraction ladder)
   bench_serve     — serving tier (p50/p99 lookup latency, coalesced
                     batch size, cache hit rate under concurrent clients)
   roofline_table  — §Roofline terms from the dry-run sweeps
@@ -79,11 +80,15 @@ def main(argv=None) -> None:
             rows[-1]["V"], rows[-1]["speedup"]))
     run("kernel_sgns", bench_kernel.main,
         lambda r: "pairs_per_s=%.2e;fused_err=%.1e;fused_hbm_err=%.1e;"
-                  "fused_pipe_err=%.1e;engines=%s" % (
+                  "fused_pipe_err=%.1e;fused_tiered_err=%.1e;engines=%s;"
+                  "hot_sweep=%s" % (
             r["pairs_per_s_sparse"], r["fused_vs_sparse_err"],
             r["fused_hbm_vs_sparse_err"], r["fused_pipe_vs_sparse_err"],
+            r["fused_tiered_vs_sparse_err"],
             "|".join("%s:%.0fus" % (n, us)
-                     for n, us in r["engine_us"].items())))
+                     for n, us in r["engine_us"].items()),
+            "|".join("%d:%.0fus" % (h["hot_rows"], h["us"])
+                     for h in r["tiered_hot_sweep"])))
     run("serve_tier", bench_serve.main,
         lambda r: "p50_ms=%.2f;p99_ms=%.2f;mean_batch=%.1f;hit_rate=%.2f" % (
             r["p50_ms"], r["p99_ms"], r["mean_batch"], r["cache_hit_rate"]))

@@ -20,8 +20,11 @@ and DMA-streams only each pair block's touched rows — the engine family
 sized for exactly this example's 100k×500 (and the paper's 300k×500)
 tables; ``pallas_fused_pipe`` is its double-buffered successor (each
 touched row deduped to one DMA per block, gathers overlapped with
-compute behind a hazard-ordering planner); ``sparse:cdf`` is the
-binary-search oracle.
+compute behind a hazard-ordering planner); ``pallas_fused_tiered`` adds
+frequency-tiered placement on top — the ``--hot-rows`` hottest rows
+(the frequency-sorted id prefix) pinned VMEM-resident so the Zipfian
+bulk of row traffic never touches DMA, cold rows behind a
+``--ring-depth``-slot ring; ``sparse:cdf`` is the binary-search oracle.
 """
 
 import argparse
@@ -48,8 +51,14 @@ def main():
     ap.add_argument("--engine", default="sparse:alias",
                     help="update engine (dense | sparse | pallas | "
                          "pallas_fused | pallas_fused_hbm | "
-                         "pallas_fused_pipe, optional "
-                         "':cdf'/':alias' suffix)")
+                         "pallas_fused_pipe | pallas_fused_tiered, "
+                         "optional ':cdf'/':alias' suffix)")
+    ap.add_argument("--hot-rows", type=int, default=None,
+                    help="pallas_fused_tiered: VMEM-pinned hot-prefix "
+                         "rows per table (default 256)")
+    ap.add_argument("--ring-depth", type=int, default=None,
+                    help="pallas_fused_pipe/_tiered: cold-row DMA ring "
+                         "slots (default 2)")
     ap.add_argument("--steps-per-chunk", type=int, default=128,
                     help="steps per fixed-shape streamed chunk")
     ap.add_argument("--prefetch", type=int, default=2,
@@ -63,7 +72,12 @@ def main():
     ap.add_argument("--save", default="/tmp/w2v_100m.npz")
     args = ap.parse_args()
 
+    from repro.core.engine import get_engine
     from repro.launch.mesh import multihost_train_kwargs
+    overrides = {k: v for k, v in (("hot_rows", args.hot_rows),
+                                   ("ring_depth", args.ring_depth))
+                 if v is not None}
+    args.engine = get_engine(args.engine, **overrides)
     processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
     print(f"model: 2 × {args.vocab} × {args.dim} = "

@@ -106,8 +106,9 @@ class AsyncShardTrainer:
     ``engine`` — an :class:`repro.core.engine.UpdateEngine` or spec
     string (``"dense"`` / ``"sparse"`` / ``"pallas"`` /
     ``"pallas_fused"`` / ``"pallas_fused_hbm"`` /
-    ``"pallas_fused_pipe"``, optionally ``":cdf"`` / ``":alias"``) that
-    owns the per-step compute; resolved once at construction.
+    ``"pallas_fused_pipe"`` / ``"pallas_fused_tiered"``, optionally
+    ``":cdf"`` / ``":alias"``) that owns the per-step compute; resolved
+    once at construction.
     ``plan`` — optional :class:`repro.data.pipeline.HostShardPlan` for
     multi-host ingestion: this host feeds :meth:`device_chunk` only its
     own workers' extracted rows and the trainer assembles the global

@@ -42,13 +42,25 @@ Registry (``get_engine``):
 ``pallas_fused_pipe``
     The pipelined successor of ``pallas_fused_hbm``
     (``kernels/sgns_fused_pipe.py``): one kernel invocation per step, a
-    2-slot ring of VMEM row buffers with per-slot DMA semaphores, and a
-    pure-JAX block planner that dedups each block's touched rows (each
-    row moves over DMA exactly once per block, no RMW round-trips) and
-    flags the scatter-before-regather hazards the schedule serializes
-    on. Bit-identical to ``pallas_fused_hbm`` — same replayed counter
-    PRNG, same per-block chain semantics. ``sequential=True`` is served
-    by the unpipelined kernel (per-pair order is inherently serial).
+    ``ring_depth``-slot ring of VMEM row buffers (default 2) with
+    per-slot DMA semaphores, and a pure-JAX block planner that dedups
+    each block's touched rows (each row moves over DMA exactly once per
+    block, no RMW round-trips) and flags the scatter-before-regather
+    hazards the schedule serializes on. Bit-identical to
+    ``pallas_fused_hbm`` — same replayed counter PRNG, same per-block
+    chain semantics. ``sequential=True`` is served by the unpipelined
+    kernel (per-pair order is inherently serial).
+``pallas_fused_tiered``
+    The pipelined engine with **frequency-tiered parameter placement**
+    (``kernels/sgns_fused_tiered.py``): the ``hot_rows`` hottest rows
+    by unigram count — the id prefix, since the vocab is
+    frequency-sorted — live in a VMEM-resident copy of the table
+    prefix (bulk-DMA'd in once per step and written back once), while
+    cold rows stay HBM-resident behind the same DMA pipeline (dedup
+    and hazards computed over cold rows only). A tunable dial on the
+    VMEM-vs-HBM cliff: ``hot_rows=0`` is ``pallas_fused_pipe``,
+    ``hot_rows=V`` is pure-resident like ``pallas_fused``. Bit-identical
+    to ``pallas_fused_hbm`` at every setting.
 
 Engine specs are engine instances or strings, optionally carrying a
 sampler: ``"sparse"``, ``"sparse:alias"``, ``"pallas:cdf"``. The fused
@@ -264,16 +276,28 @@ class FusedPipePallasEngine(FusedHBMPallasEngine):
 
     ``block_pairs`` — pairs per pipeline block (the batch is padded to
     whole blocks; padded pairs are masked to exactly-zero updates).
+    ``ring_depth`` — VMEM row-buffer ring slots (≥ 2): a deeper ring
+    keeps more blocks' write-backs in flight before the slot-recycling
+    wait, at ``ring_depth × block_pairs × (K+2) × d`` floats of VMEM.
     ``sequential`` — word2vec's per-pair apply order is inherently
     unpipelineable, so ``sequential=True`` transparently runs the
     unpipelined :func:`~repro.kernels.sgns_fused_hbm.sgns_fused_hbm_step`
     oracle path instead.
     """
 
+    ring_depth: int = 2
     name = "pallas_fused_pipe"
 
+    def __post_init__(self):
+        super().__post_init__()
+        if self.ring_depth < 2:
+            raise ValueError(
+                f"{self.name} needs ring_depth >= 2 (gathers of block "
+                f"b+1 must overlap scatters of block b), got "
+                f"{self.ring_depth}")
+
     def make_step(self, cfg: SGNSConfig, total_steps: int):
-        """One pipelined-kernel step (double-buffered DMA, deduped row
+        """One pipelined-kernel step (multi-slot DMA ring, deduped row
         traffic); ``sequential=True`` falls back to the HBM oracle."""
         if self.sequential:
             return FusedHBMPallasEngine.make_step(self, cfg, total_steps)
@@ -287,6 +311,59 @@ class FusedPipePallasEngine(FusedHBMPallasEngine):
             return sgns_fused_pipe_step(
                 params, centers, contexts, neg_table, key, lr,
                 negatives=cfg.negatives, block_pairs=self.block_pairs,
+                ring_depth=self.ring_depth, interpret=interpret)
+
+        return step
+
+
+@dataclass(frozen=True)
+class FusedTieredPallasEngine(FusedPipePallasEngine):
+    """The pipelined HBM engine with **frequency-tiered hot/cold
+    parameter placement** (``kernels/sgns_fused_tiered.py``): the
+    ``hot_rows`` hottest rows by unigram count — the id prefix, since
+    ``build_vocab`` sorts ids by descending frequency — are pinned in a
+    VMEM-resident copy of each table's prefix (one bulk DMA in at step
+    start, one back at step end), while cold rows stay HBM-resident
+    behind the inherited ``ring_depth``-slot DMA pipeline with dedup
+    and hazard flags computed over cold rows only. Under Zipfian word
+    frequencies the hot prefix absorbs most row traffic, so per-block
+    DMA volume collapses while the VMEM footprint stays a chosen
+    ``2 × hot_rows × d`` floats — a tunable dial from pure-pipe
+    (``hot_rows=0``, delegates to the pipelined kernel) to
+    pure-resident (``hot_rows ≥ V``, zero per-block row DMAs).
+    Bit-identical to ``pallas_fused_hbm`` at every setting.
+
+    ``hot_rows`` — rows pinned per table (clamped to ``[0, V]``).
+    ``block_pairs`` / ``ring_depth`` / ``sequential`` — as inherited
+    (``sequential=True`` falls back to the unpipelined oracle, which is
+    tier-free but bit-identical anyway).
+    """
+
+    hot_rows: int = 256
+    name = "pallas_fused_tiered"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.hot_rows < 0:
+            raise ValueError(
+                f"{self.name} needs hot_rows >= 0, got {self.hot_rows}")
+
+    def make_step(self, cfg: SGNSConfig, total_steps: int):
+        """One tiered-kernel step (VMEM hot prefix + cold DMA ring);
+        ``sequential=True`` falls back to the HBM oracle."""
+        if self.sequential:
+            return FusedHBMPallasEngine.make_step(self, cfg, total_steps)
+        from repro.kernels.sgns_fused_tiered import sgns_fused_tiered_step
+
+        interpret = self.interpret if self.interpret is not None \
+            else _auto_interpret()
+
+        def step(params, centers, contexts, neg_table, key, step_idx):
+            lr = sgns.linear_lr(step_idx, total_steps, cfg)
+            return sgns_fused_tiered_step(
+                params, centers, contexts, neg_table, key, lr,
+                negatives=cfg.negatives, block_pairs=self.block_pairs,
+                hot_rows=self.hot_rows, ring_depth=self.ring_depth,
                 interpret=interpret)
 
         return step
@@ -299,6 +376,7 @@ ENGINES: dict[str, type[UpdateEngine]] = {
     "pallas_fused": FusedPallasEngine,
     "pallas_fused_hbm": FusedHBMPallasEngine,
     "pallas_fused_pipe": FusedPipePallasEngine,
+    "pallas_fused_tiered": FusedTieredPallasEngine,
 }
 ENGINE_NAMES = tuple(ENGINES)
 

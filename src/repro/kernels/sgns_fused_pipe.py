@@ -8,10 +8,13 @@ a time, so the compute units idle through all of the step's DMA latency
 (the remaining hot-path item on ROADMAP). This module replaces that loop
 with a **multi-slot DMA pipeline** in a single ``pallas_call`` per step:
 
-* a ring of ``NUM_SLOTS`` VMEM row-buffer pairs (one ``(R_W, d)`` W
+* a ring of ``ring_depth`` VMEM row-buffer pairs (one ``(R_W, d)`` W
   buffer + one ``(R_C, d)`` C buffer per slot) with per-slot DMA
   semaphores, through which block *i+1*'s row gathers are in flight
-  while block *i* computes and block *i-1*'s scatters drain;
+  while block *i* computes and older blocks' scatters drain; the ring
+  defaults to the classic 2 slots (``NUM_SLOTS``) and deepens to any
+  ``ring_depth ≥ 2`` — a deeper ring leaves older blocks' write-backs
+  in flight longer before their slot-recycling wait;
 * **touched-row dedup**: each block gathers every row it touches
   exactly once (the unique centers for W; the unique contexts ∪
   negatives for C), applies all of its updates to the VMEM-resident
@@ -29,15 +32,33 @@ with a **multi-slot DMA pipeline** in a single ``pallas_call`` per step:
 
 Hazard ordering: with the chain semantics, block *b*'s gathers must
 observe every earlier block's applied updates. Pipelining reorders block
-*b+1*'s gathers before block *b*'s scatters have drained, which is only
-sound when the two blocks' row sets are disjoint — so the planner emits
-``hazard[b] = touched(b) ∩ written(b-1) ≠ ∅`` (per table), and the
-schedule issues block *b*'s gathers on the fast path (overlapped) when
-the flag is clear, or after draining block *b-1*'s scatters when it is
-set. Blocks further back are always drained by then: the 2-slot ring
-reuses block *b-1*'s buffers for block *b+1*, so the slot-recycling wait
-already serializes against everything older — which is why a single
-look-behind flag is sufficient for full chain fidelity.
+*b*'s gathers before older blocks' scatters have drained, which is only
+sound when the row sets are disjoint — so the planner emits
+``hazard[b] = touched(b) ∩ (written(b-1) ∪ … ∪ written(b-(S-1))) ≠ ∅``
+(per table, over the ``S = ring_depth`` ring), and the schedule issues
+block *b*'s gathers on the fast path (overlapped) when the flag is
+clear, or after draining every still-outstanding write-back when it is
+set. Blocks older than the window are always drained by then: the
+S-slot ring reuses block *b-S*'s buffers for block *b*, so the
+slot-recycling wait already serializes against everything older — which
+is why a window of S-1 look-behind flags is sufficient for full chain
+fidelity. Each block's scatter drain is guarded by a *partition* of the
+hazard outcomes over its window ("first hazard that fires drains it,
+else the slot-recycling default"), so every DMA is started and waited
+exactly once under every hazard vector — the ``ring_depth = 2``
+schedule degenerates to the original complementary ``pl.when`` pairs.
+
+**Frequency tiers** (engine ``pallas_fused_tiered``,
+``kernels/sgns_fused_tiered.py``): vocab ids are frequency-sorted, so
+:func:`plan_blocks` can route the ``hot_rows`` hottest rows (ids
+``< hot_rows``) out of the DMA pipeline entirely — hot ids are dropped
+from the gather/scatter lists and from the hazard row sets (dedup and
+hazards are computed over **cold rows only**), and their buffer
+positions point at a masked pad slot. The tiered kernel serves hot rows
+from a pinned VMEM-resident copy of the table prefix instead; this
+module's planner/schedule stay the single source of truth for the cold
+path. ``hot_rows = 0`` (the ``pallas_fused_pipe`` engine) is the pure
+pipeline.
 
 Bit-equivalence contract (same as the unpipelined engine): identical
 results to running :func:`repro.core.sgns.train_step_sparse` once per
@@ -54,7 +75,7 @@ exactly once.
 
 Hardware notes: every DMA is started on a slot semaphore and waited
 exactly once, with matched start/wait structure under every hazard
-outcome (the guards are complementary ``pl.when`` pairs), so the kernel
+outcome (the guards partition the hazard-outcome space), so the kernel
 lowers the same way under Mosaic and interpret mode. Interpret mode (the
 CI gate) executes the schedule's DMA semantics serially on CPU — the
 overlap itself is a hardware property; real-TPU Mosaic validation stays
@@ -77,7 +98,7 @@ from repro.core.sgns import sparse_row_grads_per_pair
 from repro.kernels.sgns_fused import _as_seed, fused_negative_ids
 from repro.kernels.sgns_fused_hbm import _pick_block_pairs
 
-NUM_SLOTS = 2   # ring depth: gathers of b+1 overlap scatters of b
+NUM_SLOTS = 2   # default ring depth: gathers of b+1 overlap scatters of b
 
 
 # ---------------------------------------------------------------------------
@@ -90,17 +111,27 @@ class PipelinePlan(NamedTuple):
     a whole number of blocks; padded pairs carry ``mask == 0`` and
     contribute exactly-zero updates). ``R_W = blk`` and
     ``R_C = blk·(K+1)`` are the row-buffer capacities.
+
+    With a hot tier (``hot_rows > 0``), the unique sets / counts /
+    hazards cover **cold rows only** (ids ``≥ hot_rows``); a hot pair
+    element's ``*_pos`` entry points at the first pad slot of its
+    buffer (its update is tier-masked to zero there — the kernel
+    applies it to the VMEM-resident hot prefix instead, indexed
+    directly by the id carried in ``cen``/``ctx``/``neg``).
     """
 
-    uw: jax.Array       # (nblocks, R_W) int32 — sorted unique center rows, padded with V
-    uc: jax.Array       # (nblocks, R_C) int32 — sorted unique context∪negative rows, padded with V
-    n_w: jax.Array      # (nblocks,) int32 — valid rows in uw (gathered AND scattered)
-    n_c: jax.Array      # (nblocks,) int32 — valid rows in uc
+    uw: jax.Array       # (nblocks, R_W) int32 — sorted unique cold center rows, padded with V
+    uc: jax.Array       # (nblocks, R_C) int32 — sorted unique cold context∪negative rows, padded with V
+    n_w: jax.Array      # (nblocks,) int32 — valid cold rows in uw (gathered AND scattered)
+    n_c: jax.Array      # (nblocks,) int32 — valid cold rows in uc
     w_pos: jax.Array    # (nblocks, blk) int32 — pair j's center row → uw slot
     cp_pos: jax.Array   # (nblocks, blk) int32 — pair j's context row → uc slot
     cn_pos: jax.Array   # (nblocks, blk·K) int32 — pair j's k-th negative row → uc slot
     mask: jax.Array     # (nblocks, blk) float32 — 1 for real pairs, 0 for padding
-    hazard: jax.Array   # (nblocks,) int32 — 1 iff touched(b) ∩ written(b-1) ≠ ∅
+    hazard: jax.Array   # (nblocks,) int32 — 1 iff touched(b) ∩ written(b-1..b-(S-1)) ≠ ∅
+    cen: jax.Array      # (nblocks, blk) int32 — blocked center ids (hot-tier direct index)
+    ctx: jax.Array      # (nblocks, blk) int32 — blocked context ids
+    neg: jax.Array      # (nblocks, blk·K) int32 — blocked negative ids
 
     @property
     def nblocks(self) -> int:
@@ -124,17 +155,19 @@ def _pad_to_blocks(x: jax.Array, nblocks: int, blk: int) -> jax.Array:
 def _unique_rows(ids: jax.Array, vocab_size: int):
     """Per-block sorted unique ids, padded with ``vocab_size``.
 
-    ids: (nblocks, R) int32 in [0, V). Returns (u (nblocks, R), n
-    (nblocks,)): ``u[b, :n[b]]`` is block b's sorted unique set and
-    ``u[b, n[b]:] == V`` (past every real id, so searchsorted lookups
-    of valid ids never land on padding).
+    ids: (nblocks, R) int32 in [0, V) ∪ {V} (V marks entries already
+    routed elsewhere — the hot tier). Returns (u (nblocks, R), n
+    (nblocks,)): ``u[b, :n[b]]`` is block b's sorted unique set of
+    ids < V and ``u[b, n[b]:] == V`` (past every real id, so
+    searchsorted lookups of valid ids never land on padding).
     """
     s = jnp.sort(ids, axis=1)
     first = jnp.concatenate(
         [jnp.ones(s.shape[:1] + (1,), bool), s[:, 1:] != s[:, :-1]], axis=1)
-    n = first.sum(axis=1).astype(jnp.int32)
+    # sentinel entries (== V) are not counted as unique rows
+    n = (first & (s < jnp.int32(vocab_size))).sum(axis=1).astype(jnp.int32)
     # stable argsort floats the first-occurrences to the front, still in
-    # ascending id order; the duplicate tail is overwritten with V
+    # ascending id order; the duplicate/sentinel tail is overwritten with V
     order = jnp.argsort(~first, axis=1, stable=True)
     u = jnp.take_along_axis(s, order, axis=1)
     col = jnp.arange(s.shape[1], dtype=jnp.int32)[None, :]
@@ -151,15 +184,23 @@ def plan_blocks(
     negatives: jax.Array,
     vocab_size: int,
     block_pairs: int,
+    *,
+    hot_rows: int = 0,
+    ring_depth: int = NUM_SLOTS,
 ) -> PipelinePlan:
     """Plan one step's pair blocks for the pipelined kernel.
 
     Pure JAX (jit/vmap-safe, static shapes): splits the batch into
-    ``blk``-pair blocks, dedups each block's touched rows per table,
-    maps every pair's (center, context, negatives) to positions in the
-    deduped row buffers, and flags the blocks whose touched set
-    intersects the previous block's written set (the scatter-before-
-    regather hazards the schedule must serialize on).
+    ``blk``-pair blocks, routes each touched row to its tier (ids
+    ``< hot_rows`` are hot — dropped from the gather/scatter lists and
+    the hazard row sets; the rest are cold), dedups each block's
+    touched cold rows per table, maps every pair's (center, context,
+    negatives) to positions in the deduped row buffers, and flags the
+    blocks whose cold touched set intersects any of the previous
+    ``ring_depth - 1`` blocks' written sets (the scatter-before-
+    regather hazards the schedule must serialize on; a deeper ring
+    leaves more write-backs in flight, so the look-behind window grows
+    with it).
     """
     B = centers.shape[0]
     K = negatives.shape[1]
@@ -170,32 +211,50 @@ def plan_blocks(
     cen = _pad_to_blocks(centers.astype(jnp.int32), nblocks, blk)
     ctx = _pad_to_blocks(contexts.astype(jnp.int32), nblocks, blk)
     neg = _pad_to_blocks(negatives.astype(jnp.int32), nblocks, blk)
+    negf = neg.reshape(nblocks, blk * K)
 
-    uw, n_w = _unique_rows(cen, V)
-    c_rows = jnp.concatenate([ctx, neg.reshape(nblocks, blk * K)], axis=1)
+    # tier routing: hot ids leave the DMA path entirely — mapped to the
+    # V sentinel so they sort past every cold id and out of the counts
+    def cold(ids):
+        if hot_rows <= 0:
+            return ids
+        return jnp.where(ids < jnp.int32(hot_rows), jnp.int32(V), ids)
+
+    uw, n_w = _unique_rows(cold(cen), V)
+    c_rows = jnp.concatenate([cold(ctx), cold(negf)], axis=1)
     uc, n_c = _unique_rows(c_rows, V)
 
-    w_pos = _searchsorted_rows(uw, cen).astype(jnp.int32)
-    c_pos = _searchsorted_rows(uc, c_rows).astype(jnp.int32)
+    # hot elements look up the V sentinel → the first pad slot (clamped
+    # to the buffer when a block is entirely cold, in which case no hot
+    # lookups exist and the clamp is a no-op)
+    w_pos = jnp.minimum(_searchsorted_rows(uw, cold(cen)),
+                        uw.shape[1] - 1).astype(jnp.int32)
+    c_pos = jnp.minimum(_searchsorted_rows(uc, c_rows),
+                        uc.shape[1] - 1).astype(jnp.int32)
     cp_pos, cn_pos = c_pos[:, :blk], c_pos[:, blk:]
 
     # With dedup, written(b) == touched(b) per table (every gathered row
-    # receives at least one update), so the look-behind intersection is
+    # receives at least one update), so the look-behind intersections are
     # over the same padded unique sets. W rows only conflict with W
     # writes, C rows with C writes — the tables are separate buffers.
-    def hit(u):
-        idx = _searchsorted_rows(u[:-1], u[1:])
+    # The window covers the S-1 blocks whose write-backs a ring of S
+    # slots can still have in flight when block b's gathers issue.
+    def hit(u, m):
+        idx = _searchsorted_rows(u[:-m], u[m:])
         found = jnp.take_along_axis(
-            u[:-1], jnp.minimum(idx, u.shape[1] - 1), axis=1) == u[1:]
-        return (found & (u[1:] < jnp.int32(V))).any(axis=1)
+            u[:-m], jnp.minimum(idx, u.shape[1] - 1), axis=1) == u[m:]
+        return (found & (u[m:] < jnp.int32(V))).any(axis=1)
 
-    hz = jnp.concatenate(
-        [jnp.zeros((1,), bool), hit(uw) | hit(uc)]).astype(jnp.int32)
+    hz = jnp.zeros((nblocks,), bool)
+    for m in range(1, min(ring_depth, nblocks)):
+        hz = hz.at[m:].set(hz[m:] | hit(uw, m) | hit(uc, m))
 
     mask = (jnp.arange(nblocks * blk, dtype=jnp.int32) < B).astype(
         jnp.float32).reshape(nblocks, blk)
     return PipelinePlan(uw=uw, uc=uc, n_w=n_w, n_c=n_c, w_pos=w_pos,
-                        cp_pos=cp_pos, cn_pos=cn_pos, mask=mask, hazard=hz)
+                        cp_pos=cp_pos, cn_pos=cn_pos, mask=mask,
+                        hazard=hz.astype(jnp.int32),
+                        cen=cen, ctx=ctx, neg=negf)
 
 
 # ---------------------------------------------------------------------------
@@ -207,34 +266,59 @@ def kernel_schedule(nblocks: int, num_slots: int = NUM_SLOTS):
     """The unrolled pipeline as ``(op, block, slot, guard)`` events.
 
     ``op`` ∈ {gather, wait_gather, compute, scatter, wait_scatter};
-    ``guard`` is ``None`` (unconditional) or ``(b, want)`` meaning "only
-    when bool(hazard[b]) == want". Guarded events come in complementary
-    pairs, so each block is gathered/waited/scattered/drained exactly
-    once for every hazard outcome:
+    ``guard`` is ``None`` (unconditional) or a tuple of ``(b, want)``
+    conditions meaning "only when bool(hazard[b]) == want for every
+    condition". For each block, the guards over its wait_scatter sites
+    PARTITION the hazard-outcome space of its look-behind window, so
+    every DMA is started and waited exactly once for every hazard
+    vector (``num_slots = 2`` degenerates to the original
+    complementary single-flag pairs):
 
-    * block b+1's gathers are issued *before* block b's scatters when
-      ``hazard[b+1]`` is clear (the overlap fast path), else after block
-      b's scatters have drained;
-    * block b-1's scatters drain either on block b's hazard path (just
-      shown) or at the top of position b — always before block b+1's
-      gathers recycle block b-1's buffer slot.
+    * block b+1's gathers are issued *before* outstanding scatters when
+      ``hazard[b+1]`` is clear (the overlap fast path), else after
+      every still-in-flight write-back has drained;
+    * block j's scatters drain at the FIRST hazard in its window
+      ``hazard[j+1 .. j+S-1]`` that fires, or — when none fires — at
+      the slot-recycling default (top of position ``j+S-1``, always
+      before block ``j+S``'s gathers reuse block j's buffer slot).
     """
+    S = num_slots
+    if S < 2:
+        raise ValueError(f"ring needs at least 2 slots, got {S}")
+
+    def clear(lo, hi):
+        """'hazard[lo..hi] all clear' conditions (empty → unconditional)."""
+        g = tuple((f, False) for f in range(lo, hi + 1))
+        return g or None
+
     ev = [("gather", 0, 0, None)]
     for b in range(nblocks):
-        s = b % num_slots
-        if b >= 1:
-            ev.append(("wait_scatter", b - 1, (b - 1) % num_slots,
-                       (b, False)))
-        if b + 1 < nblocks:
-            ev.append(("gather", b + 1, (b + 1) % num_slots,
-                       (b + 1, False)))
+        s = b % S
+        g = b + 1
+        j = g - S
+        if j >= 0:
+            # slot-recycling default drain of the block whose buffers
+            # block g is about to gather into — fires iff no hazard in
+            # j's window drained it earlier
+            ev.append(("wait_scatter", j, j % S, clear(j + 1, j + S - 1)))
+        if g < nblocks:
+            ev.append(("gather", g, g % S, ((g, False),)))
         ev.append(("wait_gather", b, s, None))
         ev.append(("compute", b, s, None))
         ev.append(("scatter", b, s, None))
-        if b + 1 < nblocks:
-            ev.append(("wait_scatter", b, s, (b + 1, True)))
-            ev.append(("gather", b + 1, (b + 1) % num_slots, (b + 1, True)))
-    ev.append(("wait_scatter", nblocks - 1, (nblocks - 1) % num_slots, None))
+        if g < nblocks:
+            # hazard path: drain every still-outstanding write-back
+            # (oldest first) before issuing block g's gathers — block
+            # j2 is outstanding here iff no flag in hazard[j2+1 .. b]
+            # fired (which would have drained it already)
+            for j2 in range(max(0, g - S + 1), b + 1):
+                pre = tuple((f, False) for f in range(j2 + 1, b + 1))
+                ev.append(("wait_scatter", j2, j2 % S, pre + ((g, True),)))
+            ev.append(("gather", g, g % S, ((g, True),)))
+    # tail: blocks whose slot-recycling default lies past the last
+    # position drain on "no later hazard fired" (partition remainder)
+    for j in range(max(0, nblocks - S + 1), nblocks):
+        ev.append(("wait_scatter", j, j % S, clear(j + 1, nblocks - 1)))
     return ev
 
 
@@ -243,30 +327,21 @@ def resolve_schedule(hazard, num_slots: int = NUM_SLOTS):
     for a given hazard vector — what the planner property tests check."""
     return [(op, b, s)
             for op, b, s, g in kernel_schedule(len(hazard), num_slots)
-            if g is None or bool(hazard[g[0]]) is g[1]]
+            if g is None or all(bool(hazard[f]) is w for f, w in g)]
 
 
 # ---------------------------------------------------------------------------
-# Kernel body. Operand order:
-#   lr (1,) f32 SMEM | n_w, n_c, hazard (nblocks,) i32 SMEM
-#   uw | uc | w_pos | cp_pos | cn_pos | mask                 [VMEM]
-#   W, C (V, d) HBM (ANY), aliased to the first two outputs
-# outputs: W', C' (ANY) | per-pair masked loss (nblocks, blk) VMEM
-# scratch: bufW (S, R_W, d) | bufC (S, R_C, d) | gather + scatter DMA
-#          semaphore rings (S,)
+# Kernel plumbing shared with the tiered sibling
+# (kernels/sgns_fused_tiered.py): the per-block row-DMA runner and the
+# guarded schedule executor.
 # ---------------------------------------------------------------------------
-def _pipe_kernel(nblocks, K, lr_ref, n_w_ref, n_c_ref, hz_ref,
-                 uw_ref, uc_ref, wpos_ref, cppos_ref, cnpos_ref, mask_ref,
-                 _w_in, _c_in, w_hbm, c_hbm, loss_ref,
-                 buf_w, buf_c, gsem, ssem):
-    blk = wpos_ref.shape[1]
-    d = buf_w.shape[2]
-    lr = lr_ref[0]
-
-    def row_dmas(b, s, gather):
-        """Matched start/wait loops over block b's valid rows: each
-        valid uw/uc slot is one row DMA (HBM→slot buffer for gathers,
-        buffer→HBM for the write-back scatters)."""
+def make_row_dma_runner(uw_ref, uc_ref, n_w_ref, n_c_ref,
+                        w_hbm, c_hbm, buf_w, buf_c, gsem, ssem):
+    """Returns ``run_rows(b, s, gather, wait)``: matched start/wait
+    loops over block b's valid (cold) rows — each valid uw/uc slot is
+    one row DMA (HBM→slot buffer for gathers, buffer→HBM for the
+    write-back scatters)."""
+    def run_rows(b, s, gather, wait):
         def w_dma(j):
             pair = (w_hbm.at[uw_ref[b, j]], buf_w.at[s, j])
             src, dst = pair if gather else pair[::-1]
@@ -279,11 +354,6 @@ def _pipe_kernel(nblocks, K, lr_ref, n_w_ref, n_c_ref, hz_ref,
             return pltpu.make_async_copy(src, dst, (gsem if gather
                                                     else ssem).at[s])
 
-        return w_dma, c_dma
-
-    def run_rows(b, s, gather, wait):
-        w_dma, c_dma = row_dmas(b, s, gather)
-
         def go(dma):
             def body(j, _):
                 d_ = dma(j)
@@ -293,6 +363,51 @@ def _pipe_kernel(nblocks, K, lr_ref, n_w_ref, n_c_ref, hz_ref,
 
         jax.lax.fori_loop(0, n_w_ref[b], go(w_dma), 0)
         jax.lax.fori_loop(0, n_c_ref[b], go(c_dma), 0)
+
+    return run_rows
+
+
+def execute_schedule(nblocks, num_slots, hz_ref, run_rows, compute):
+    """Walk :func:`kernel_schedule`, resolving guards against the SMEM
+    hazard flags with ``pl.when`` (conjunction of the guard conditions).
+    ``run_rows`` is a :func:`make_row_dma_runner` closure; ``compute``
+    is the per-block compute callback ``compute(b, s)``."""
+    ops = {
+        "gather": lambda b, s: run_rows(b, s, gather=True, wait=False),
+        "wait_gather": lambda b, s: run_rows(b, s, gather=True, wait=True),
+        "compute": compute,
+        "scatter": lambda b, s: run_rows(b, s, gather=False, wait=False),
+        "wait_scatter": lambda b, s: run_rows(b, s, gather=False, wait=True),
+    }
+    for op, b, s, guard in kernel_schedule(nblocks, num_slots):
+        if guard is None:
+            ops[op](b, s)
+        else:
+            pred = None
+            for f, want in guard:
+                c = (hz_ref[f] != 0) if want else (hz_ref[f] == 0)
+                pred = c if pred is None else jnp.logical_and(pred, c)
+            pl.when(pred)(functools.partial(ops[op], b, s))
+
+
+# ---------------------------------------------------------------------------
+# Kernel body. Operand order:
+#   lr (1,) f32 SMEM | n_w, n_c, hazard (nblocks,) i32 SMEM
+#   uw | uc | w_pos | cp_pos | cn_pos | mask                 [VMEM]
+#   W, C (V, d) HBM (ANY), aliased to the first two outputs
+# outputs: W', C' (ANY) | per-pair masked loss (nblocks, blk) VMEM
+# scratch: bufW (S, R_W, d) | bufC (S, R_C, d) | gather + scatter DMA
+#          semaphore rings (S,)
+# ---------------------------------------------------------------------------
+def _pipe_kernel(nblocks, K, num_slots, lr_ref, n_w_ref, n_c_ref, hz_ref,
+                 uw_ref, uc_ref, wpos_ref, cppos_ref, cnpos_ref, mask_ref,
+                 _w_in, _c_in, w_hbm, c_hbm, loss_ref,
+                 buf_w, buf_c, gsem, ssem):
+    blk = wpos_ref.shape[1]
+    d = buf_w.shape[2]
+    lr = lr_ref[0]
+    run_rows = make_row_dma_runner(uw_ref, uc_ref, n_w_ref, n_c_ref,
+                                   w_hbm, c_hbm, buf_w, buf_c, gsem, ssem)
 
     def compute(b, s):
         W_blk = buf_w[s]                                    # (R_W, d)
@@ -317,25 +432,12 @@ def _pipe_kernel(nblocks, K, lr_ref, n_w_ref, n_c_ref, hz_ref,
         buf_c[s] = C_blk.at[cp_pos].add(u_cp).at[cn_pos].add(u_cn)
         loss_ref[b] = loss * m
 
-    ops = {
-        "gather": lambda b, s: run_rows(b, s, gather=True, wait=False),
-        "wait_gather": lambda b, s: run_rows(b, s, gather=True, wait=True),
-        "compute": compute,
-        "scatter": lambda b, s: run_rows(b, s, gather=False, wait=False),
-        "wait_scatter": lambda b, s: run_rows(b, s, gather=False, wait=True),
-    }
-    for op, b, s, guard in kernel_schedule(nblocks):
-        if guard is None:
-            ops[op](b, s)
-        else:
-            gb, want = guard
-            pred = (hz_ref[gb] != 0) if want else (hz_ref[gb] == 0)
-            pl.when(pred)(functools.partial(ops[op], b, s))
+    execute_schedule(nblocks, num_slots, hz_ref, run_rows, compute)
 
 
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=(
-    "negatives", "block_pairs", "interpret"))
+    "negatives", "block_pairs", "ring_depth", "interpret"))
 def sgns_fused_pipe_step(
     params: dict,
     centers: jax.Array,
@@ -346,6 +448,7 @@ def sgns_fused_pipe_step(
     *,
     negatives: int = 5,
     block_pairs: int = 256,
+    ring_depth: int = NUM_SLOTS,
     interpret: bool = True,
 ) -> tuple[dict, jax.Array]:
     """One SGNS step through the pipelined HBM engine.
@@ -353,22 +456,25 @@ def sgns_fused_pipe_step(
     Same contract as :func:`repro.kernels.sgns_fused_hbm.sgns_fused_hbm_step`
     with ``sequential=False`` — and bit-identical to it (and therefore
     to the per-block ``train_step_sparse`` reference on the replayed
-    negatives): the planner replays the same counter-PRNG draw, and the
-    schedule's hazard guards preserve the chain's read-after-write
-    semantics exactly. One ``pallas_call`` covers the whole batch.
+    negatives) at every ``ring_depth``: the planner replays the same
+    counter-PRNG draw, and the schedule's hazard guards preserve the
+    chain's read-after-write semantics exactly. One ``pallas_call``
+    covers the whole batch.
     """
     V, d = params["W"].shape
     B = centers.shape[0]
     K = negatives
     seed = _as_seed(key)
     neg_ids = fused_negative_ids(seed, table["prob"], table["alias"], (B, K))
-    plan = plan_blocks(centers, contexts, neg_ids, V, block_pairs)
+    plan = plan_blocks(centers, contexts, neg_ids, V, block_pairs,
+                       ring_depth=ring_depth)
     nblocks, blk = plan.nblocks, plan.block_pairs
+    S = ring_depth
 
     smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
     vmem = functools.partial(pl.BlockSpec, memory_space=pltpu.VMEM)
     out = pl.pallas_call(
-        functools.partial(_pipe_kernel, nblocks, K),
+        functools.partial(_pipe_kernel, nblocks, K, S),
         in_specs=[
             smem(),                                 # lr (1,)
             smem(), smem(), smem(),                 # n_w, n_c, hazard
@@ -391,10 +497,10 @@ def sgns_fused_pipe_step(
         # in-place tables: HBM operands 10, 11 alias outputs 0, 1
         input_output_aliases={10: 0, 11: 1},
         scratch_shapes=[
-            pltpu.VMEM((NUM_SLOTS, blk, d), jnp.float32),            # W rows
-            pltpu.VMEM((NUM_SLOTS, blk * (K + 1), d), jnp.float32),  # C rows
-            pltpu.SemaphoreType.DMA((NUM_SLOTS,)),                   # gathers
-            pltpu.SemaphoreType.DMA((NUM_SLOTS,)),                   # scatters
+            pltpu.VMEM((S, blk, d), jnp.float32),            # W rows
+            pltpu.VMEM((S, blk * (K + 1), d), jnp.float32),  # C rows
+            pltpu.SemaphoreType.DMA((S,)),                   # gathers
+            pltpu.SemaphoreType.DMA((S,)),                   # scatters
         ],
         interpret=interpret,
     )(jnp.reshape(lr, (1,)).astype(jnp.float32),

@@ -30,6 +30,13 @@ Cases:
                    hazard-ordered by the pure-JAX block planner. Same
                    zero-collective assertion (the planner is local
                    sort/searchsorted work, no communication).
+  async_fused_tiered— `pallas_fused_tiered` engine: the pipelined step
+                   with frequency-tiered placement — the hot_rows
+                   hottest rows (the frequency-sorted id prefix) pinned
+                   VMEM-resident for the whole step, cold rows behind
+                   the same DMA ring. Per-worker tables are private, so
+                   the hot tier needs no synchronization: the same
+                   zero-collective assertion holds.
   sync           — the synchronized strawman (Hogwild/MLLib stand-in):
                    data-parallel minibatch SGNS, dense-gradient psum
                    every step (the 600 MB/step the paper eliminates).
@@ -73,6 +80,7 @@ ASYNC_ENGINES = {
     "async_fused": "pallas_fused",
     "async_fused_hbm": "pallas_fused_hbm",
     "async_fused_pipe": "pallas_fused_pipe",
+    "async_fused_tiered": "pallas_fused_tiered",
 }
 
 
@@ -188,7 +196,8 @@ def compare_sampler_paths(rows: list[dict]) -> None:
     by_case = {r["arch"]: r for r in rows}
     base = by_case.get("sgns-async")
     for other in ("sgns-async_alias", "sgns-async_fused",
-                  "sgns-async_fused_hbm", "sgns-async_fused_pipe"):
+                  "sgns-async_fused_hbm", "sgns-async_fused_pipe",
+                  "sgns-async_fused_tiered"):
         r = by_case.get(other)
         if not (base and r):
             continue
@@ -206,7 +215,8 @@ def main(argv=None):
                     default="async,async_alias,sync,local_sgd_8,"
                             "local_sgd_64,merge_alir_iter",
                     help="comma list; also available: async_pallas, "
-                         "async_fused, async_fused_hbm, async_fused_pipe")
+                         "async_fused, async_fused_hbm, async_fused_pipe, "
+                         "async_fused_tiered")
     ap.add_argument("--workers", type=int, default=WORKERS)
     ap.add_argument("--steps", type=int, default=STEPS)
     ap.add_argument("--batch", type=int, default=BATCH)

@@ -7,13 +7,16 @@
 Runs the full pipeline on the synthetic corpus (see DESIGN.md §4) and
 prints paper-style scores + timings. ``--engine`` selects the per-step
 update engine (``sparse``, ``dense``, ``pallas``, ``pallas_fused``,
-``pallas_fused_hbm``, ``pallas_fused_pipe``, optionally with a sampler
-suffix like ``sparse:alias``); Pallas engines run in interpret mode on
-CPU, Mosaic on TPU. ``pallas_fused_hbm`` keeps the parameter tables
-HBM-resident and DMA-streams only the touched rows per pair block —
-the engine family for paper-scale (300k×500) sub-models;
-``pallas_fused_pipe`` is its double-buffered successor (deduped row
-DMAs overlapped with compute behind a hazard-ordering block planner).
+``pallas_fused_hbm``, ``pallas_fused_pipe``, ``pallas_fused_tiered``,
+optionally with a sampler suffix like ``sparse:alias``); Pallas engines
+run in interpret mode on CPU, Mosaic on TPU. ``pallas_fused_hbm`` keeps
+the parameter tables HBM-resident and DMA-streams only the touched rows
+per pair block — the engine family for paper-scale (300k×500)
+sub-models; ``pallas_fused_pipe`` is its double-buffered successor
+(deduped row DMAs overlapped with compute behind a hazard-ordering
+block planner), and ``pallas_fused_tiered`` adds frequency-tiered
+placement on top (``--hot-rows`` hottest rows pinned VMEM-resident,
+cold rows behind a ``--ring-depth``-slot DMA ring).
 """
 
 from __future__ import annotations
@@ -48,11 +51,19 @@ def main(argv=None):
                     default=("concat", "pca", "alir_pca"))
     ap.add_argument("--baseline", action="store_true",
                     help="also train the synchronized baseline")
-    ap.add_argument("--engine", default="sparse", type=get_engine,
+    ap.add_argument("--engine", default="sparse",
                     help="update engine: dense | sparse | pallas | "
                          "pallas_fused | pallas_fused_hbm | "
-                         "pallas_fused_pipe, optionally "
-                         "':cdf'/':alias' (e.g. sparse:alias)")
+                         "pallas_fused_pipe | pallas_fused_tiered, "
+                         "optionally ':cdf'/':alias' (e.g. sparse:alias)")
+    ap.add_argument("--hot-rows", type=int, default=None,
+                    help="pallas_fused_tiered: rows of the frequency-"
+                         "sorted id prefix pinned VMEM-resident per "
+                         "table (default 256; 0 = pure pipeline)")
+    ap.add_argument("--ring-depth", type=int, default=None,
+                    help="pallas_fused_pipe/_tiered: VMEM row-buffer "
+                         "ring slots for the cold-row DMA pipeline "
+                         "(default 2)")
     ap.add_argument("--processes", type=int, default=None,
                     help="ingestion host count (default: "
                          "jax.process_count()); each host extracts only "
@@ -69,6 +80,12 @@ def main(argv=None):
                     help="publish a table version every k folded "
                          "sub-models (default 1: a version per worker)")
     args = ap.parse_args(argv)
+    # engine-dial overrides only when set: passing hot_rows/ring_depth
+    # to an engine without those fields is a clear TypeError
+    overrides = {k: v for k, v in (("hot_rows", args.hot_rows),
+                                   ("ring_depth", args.ring_depth))
+                 if v is not None}
+    args.engine = get_engine(args.engine, **overrides)
     processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
     gen = SemanticCorpusModel.create(vocab_size=args.vocab, seed=0)

@@ -221,6 +221,8 @@ ASYNC_ENGINE_SPECS = (
     "pallas_fused_hbm:alias",        # alias is their only layout
     "pallas_fused_pipe:alias",       # planner replays the same draw —
                                      # sort/searchsorted, no collectives
+    "pallas_fused_tiered:alias",     # hot tier is per-worker-private:
+                                     # no synchronization to add
 )
 
 

@@ -30,10 +30,10 @@ V_BIG, D_BIG = 34_000, 64
 B, K = 64, 4
 
 
-def _plan(centers, contexts, negs, V, blk):
+def _plan(centers, contexts, negs, V, blk, **kw):
     return plan_blocks(jnp.asarray(centers, jnp.int32),
                        jnp.asarray(contexts, jnp.int32),
-                       jnp.asarray(negs, jnp.int32), V, blk)
+                       jnp.asarray(negs, jnp.int32), V, blk, **kw)
 
 
 def _np_plan(plan):
@@ -97,31 +97,51 @@ def test_planner_hazard_is_lookbehind_one_only():
     np.testing.assert_array_equal(p.hazard, [0, 0, 0])
 
 
+def test_planner_hazard_window_grows_with_ring_depth():
+    """A deeper ring leaves block b-2's write-backs in flight when block
+    b gathers, so at ring_depth=3 the same b-2 overlap that slot
+    recycling covered at depth 2 becomes a hazard — the look-behind
+    window is exactly ring_depth - 1 blocks."""
+    V, blk = 100, 2
+    c = np.array([1, 2, 30, 40, 1, 9], np.int32)  # blocks 0 and 2 share row 1
+    x = np.array([11, 12, 13, 14, 15, 16], np.int32)
+    n = np.arange(6, dtype=np.int32).reshape(6, 1) + 50
+    p3 = _np_plan(_plan(c, x, n, V, blk, ring_depth=3))
+    np.testing.assert_array_equal(p3.hazard, [0, 0, 1])
+    # at depth 3 a b-3 overlap is still recycled away, not flagged
+    c4 = np.array([1, 2, 30, 40, 50, 60, 1, 9], np.int32)
+    x4 = np.array([11, 12, 13, 14, 15, 16, 17, 18], np.int32)
+    n4 = np.arange(8, dtype=np.int32).reshape(8, 1) + 50
+    p4 = _np_plan(_plan(c4, x4, n4, V, blk, ring_depth=3))
+    np.testing.assert_array_equal(p4.hazard, [0, 0, 0, 0])
+
+
 # -------------------------------------------------------------- schedule
-def _check_schedule(events, nblocks, row_sets, hazard):
+def _check_schedule(events, nblocks, row_sets, hazard, num_slots=NUM_SLOTS):
     """The three pipeline-safety properties on a concrete event order."""
+    S = num_slots
     pos = {}
     for i, ev in enumerate(events):
         pos[ev] = i
     for b in range(nblocks):
-        s = b % NUM_SLOTS
+        s = b % S
         # basic dataflow per block
         assert pos[("gather", b, s)] < pos[("wait_gather", b, s)]
         assert pos[("wait_gather", b, s)] < pos[("compute", b, s)]
         assert pos[("compute", b, s)] < pos[("scatter", b, s)]
         assert pos[("scatter", b, s)] < pos[("wait_scatter", b, s)]
         # no slot reuse before its semaphore wait: block b's gathers
-        # overwrite block b-2's buffers, whose scatters read from them
-        if b >= NUM_SLOTS:
-            prev = (b - NUM_SLOTS, (b - NUM_SLOTS) % NUM_SLOTS)
+        # overwrite block b-S's buffers, whose scatters read from them
+        if b >= S:
+            prev = (b - S, (b - S) % S)
             assert pos[("wait_scatter", *prev)] < pos[("gather", b, s)], \
-                f"slot of block {b} reused before block {b - NUM_SLOTS}'s " \
+                f"slot of block {b} reused before block {b - S}'s " \
                 f"scatters drained"
         # scatter-before-regather: any earlier block writing a row this
         # block touches must have fully drained before this gather
         for b0 in range(b):
             if row_sets[b0] & row_sets[b]:
-                assert pos[("wait_scatter", b0, b0 % NUM_SLOTS)] < \
+                assert pos[("wait_scatter", b0, b0 % S)] < \
                     pos[("gather", b, s)], \
                     f"block {b} gathers rows block {b0} still scatters"
     # every op happens exactly once per block
@@ -134,47 +154,60 @@ def _check_schedule(events, nblocks, row_sets, hazard):
 
 
 def test_schedule_static_structure():
-    """Every hazard-guarded event appears under BOTH guard outcomes
-    (complementary ``pl.when`` pairs), so each DMA is started and waited
-    exactly once no matter how the hazard flags resolve."""
-    for nblocks in (1, 2, 3, 5):
-        ev = kernel_schedule(nblocks)
-        flags = {}
-        for op, b, s, g in ev:
-            if g is not None:
-                gb, want = g
-                flags.setdefault((op, b, s, gb), set()).add(want)
-        for key, wants in flags.items():
-            assert wants == {True, False}, key
+    """For each per-block event, the guards over its occurrence sites
+    PARTITION the hazard-outcome space: under every hazard vector the
+    event resolves exactly once, so every DMA is started and waited
+    exactly once no matter how the flags come out."""
+    import itertools
+
+    for S in (2, 3, 4):
+        for nblocks in (1, 2, 3, 5):
+            sites = {}
+            for op, b, s, g in kernel_schedule(nblocks, S):
+                sites.setdefault((op, b, s), []).append(g)
+            for bits in itertools.product((False, True), repeat=nblocks):
+                for key, guards in sites.items():
+                    hits = sum(
+                        1 for g in guards
+                        if g is None or all(bits[f] is w for f, w in g))
+                    assert hits == 1, (S, nblocks, key, bits, guards)
+
+
+def test_schedule_rejects_degenerate_ring():
+    with pytest.raises(ValueError, match="2 slots"):
+        kernel_schedule(4, 1)
 
 
 def test_schedule_resolves_safely_for_all_hazard_vectors():
-    """Exhaustive over hazard outcomes at small nblocks: every resolved
-    event order keeps the dataflow/slot/once-each properties (hazard
-    row-set interactions are exercised by the hypothesis test below)."""
+    """Exhaustive over hazard outcomes at small nblocks and ring depths:
+    every resolved event order keeps the dataflow/slot/once-each
+    properties (hazard row-set interactions are exercised by the
+    hypothesis test below)."""
     import itertools
 
-    for nblocks in (1, 2, 4):
-        for bits in itertools.product((0, 1), repeat=nblocks - 1):
-            hz = (0,) + bits
-            ev = resolve_schedule(hz)
-            # row sets consistent with the hazard vector: hazard[b]=1
-            # means block b shares block b-1's own row, else disjoint
-            row_sets = [{(b, 0)} for b in range(nblocks)]
-            for b in range(1, nblocks):
-                if hz[b]:
-                    row_sets[b].add((b - 1, 0))
-            _check_schedule(ev, nblocks, row_sets, hz)
+    for S in (2, 3):
+        for nblocks in (1, 2, 4, 5):
+            for bits in itertools.product((0, 1), repeat=nblocks - 1):
+                hz = (0,) + bits
+                ev = resolve_schedule(hz, S)
+                # row sets consistent with the hazard vector: hazard[b]=1
+                # means block b shares block b-1's own row, else block b
+                # is disjoint from every block in its look-behind window
+                row_sets = [{(b, 0)} for b in range(nblocks)]
+                for b in range(1, nblocks):
+                    if hz[b]:
+                        row_sets[b].add((b - 1, 0))
+                _check_schedule(ev, nblocks, row_sets, hz, S)
 
 
 # ----------------------------------------- invariants on adversarial streams
-def _assert_planner_invariants(c, x, n, V, blk):
+def _assert_planner_invariants(c, x, n, V, blk, ring_depth=NUM_SLOTS):
     """The pipeline-safety contract for one pair stream: dedup (every
-    touched row gathered exactly once per block), exact look-behind-one
-    hazard flags, and a resolved schedule whose event order respects
-    slot recycling and scatter-before-regather for the stream's actual
-    row sets."""
-    p = _np_plan(_plan(c, x, n, V, blk))
+    touched row gathered exactly once per block), exact windowed
+    look-behind hazard flags (ring_depth - 1 blocks), and a resolved
+    schedule whose event order respects slot recycling and
+    scatter-before-regather for the stream's actual row sets."""
+    p = _np_plan(_plan(c, x, n, V, blk, ring_depth=ring_depth))
     blk_eff = p.w_pos.shape[1]
     nblocks = p.uw.shape[0]
 
@@ -204,10 +237,10 @@ def _assert_planner_invariants(c, x, n, V, blk):
         w_sets.append(set(gw.tolist()))
         c_sets.append(set(gc.tolist()))
 
-    # hazard flags are exactly the look-behind-one intersections
+    # hazard flags are exactly the windowed look-behind intersections
     for b in range(nblocks):
-        expect = b > 0 and bool((w_sets[b] & w_sets[b - 1]) or
-                                (c_sets[b] & c_sets[b - 1]))
+        expect = any((w_sets[b] & w_sets[b - m]) or (c_sets[b] & c_sets[b - m])
+                     for m in range(1, min(ring_depth, b + 1)))
         assert bool(p.hazard[b]) == expect, (b, p.hazard)
 
     # the resolved schedule keeps slot/hazard/dataflow safety for the
@@ -215,7 +248,8 @@ def _assert_planner_invariants(c, x, n, V, blk):
     # so the combined per-block "row set" tags rows by table)
     row_sets = [{("w", r) for r in w_sets[b]} | {("c", r) for r in c_sets[b]}
                 for b in range(nblocks)]
-    _check_schedule(resolve_schedule(p.hazard), nblocks, row_sets, p.hazard)
+    _check_schedule(resolve_schedule(p.hazard, ring_depth), nblocks,
+                    row_sets, p.hazard, ring_depth)
 
 
 def test_planner_invariants_on_seeded_adversarial_streams():
@@ -223,14 +257,16 @@ def test_planner_invariants_on_seeded_adversarial_streams():
     tiny vocabularies (maximal row collisions), single-pair blocks,
     non-dividing batches, K=1..4."""
     rng = np.random.default_rng(42)
-    cases = [(5, 7, 1, 1), (5, 17, 2, 3), (7, 40, 3, 16), (60, 33, 4, 8),
-             (11, 24, 2, 5), (31, 1, 1, 4)]
-    for V, Bq, Kq, blk in cases:
+    cases = [(5, 7, 1, 1, 2), (5, 17, 2, 3, 2), (7, 40, 3, 16, 2),
+             (60, 33, 4, 8, 3), (11, 24, 2, 5, 3), (31, 1, 1, 4, 4),
+             (5, 17, 2, 3, 3)]
+    for V, Bq, Kq, blk, rd in cases:
         for _ in range(8):
             _assert_planner_invariants(
                 rng.integers(0, V, Bq).astype(np.int32),
                 rng.integers(0, V, Bq).astype(np.int32),
-                rng.integers(0, V, (Bq, Kq)).astype(np.int32), V, blk)
+                rng.integers(0, V, (Bq, Kq)).astype(np.int32), V, blk,
+                ring_depth=rd)
 
 
 try:
@@ -242,8 +278,10 @@ except ImportError:                                     # pragma: no cover
 if HAS_HYPOTHESIS:
     @settings(max_examples=60, deadline=None)
     @given(data=st.data(), V=st.integers(5, 60), Bq=st.integers(1, 40),
-           Kq=st.integers(1, 4), blk=st.integers(1, 16))
-    def test_planner_invariants_on_adversarial_streams(data, V, Bq, Kq, blk):
+           Kq=st.integers(1, 4), blk=st.integers(1, 16),
+           rd=st.integers(2, 4))
+    def test_planner_invariants_on_adversarial_streams(data, V, Bq, Kq, blk,
+                                                       rd):
         ids = st.integers(0, V - 1)
         c = np.array(data.draw(st.lists(ids, min_size=Bq, max_size=Bq)),
                      np.int32)
@@ -252,7 +290,7 @@ if HAS_HYPOTHESIS:
         n = np.array(data.draw(st.lists(
             st.lists(ids, min_size=Kq, max_size=Kq),
             min_size=Bq, max_size=Bq)), np.int32)
-        _assert_planner_invariants(c, x, n, V, blk)
+        _assert_planner_invariants(c, x, n, V, blk, ring_depth=rd)
 
 
 # ------------------------------------------------------------- equivalence
@@ -289,17 +327,17 @@ def _sparse_blocked(params, c, x, ids, lr, blk):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("blk", [16, 40])   # dividing + tail-padded
-def test_pipe_bit_identical_to_per_block_sparse(cfg, world, blk):
+@pytest.mark.parametrize("blk,ring", [(16, 2), (40, 2), (16, 3)])
+def test_pipe_bit_identical_to_per_block_sparse(cfg, world, blk, ring):
     """Past the VMEM envelope: the pipelined step ≡ the per-block sparse
     reference on the replayed negatives, bit for bit — including when
-    the batch pads to a partial final block."""
+    the batch pads to a partial final block and at a deepened ring."""
     params, c, x, table = world
     key = jax.random.PRNGKey(11)
     lr = jnp.float32(0.025)
     ph, _ = sgns_fused_pipe_step(
         jax.tree.map(jnp.copy, params), c, x, table, key, lr,
-        negatives=K, block_pairs=blk, interpret=True)
+        negatives=K, block_pairs=blk, ring_depth=ring, interpret=True)
     ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
                              table["alias"], (B, K))
     pr = _sparse_blocked(params, c, x, ids, lr, blk)
@@ -349,9 +387,13 @@ def test_engine_fields_and_registry():
     assert isinstance(eng, FusedHBMPallasEngine)    # inherits hbm fields
     assert eng.table_kind == "alias"
     assert eng.block_pairs == 256 and eng.sequential is False
+    assert eng.ring_depth == 2
     assert get_engine("pallas_fused_pipe", block_pairs=64).block_pairs == 64
+    assert get_engine("pallas_fused_pipe", ring_depth=3).ring_depth == 3
     with pytest.raises(ValueError, match="alias"):
         get_engine("pallas_fused_pipe:cdf")
+    with pytest.raises(ValueError, match="ring_depth"):
+        get_engine("pallas_fused_pipe", ring_depth=1)
 
 
 def test_trainer_epoch_trains_with_pipe_engine():

@@ -1,0 +1,352 @@
+"""Frequency-tiered hot/cold fused SGNS engine: tier-routing planner
+invariants (every touched row served by exactly one tier, hot rows never
+in the DMA lists, cold-side dedup/hazard contract intact — unit +
+hypothesis property tests), engine wiring, and interpret-mode
+bit-equivalence of ``pallas_fused_tiered`` against the sparse reference
+and ``pallas_fused_hbm`` at a shape past the VMEM envelope, swept over
+hot fractions {0, small, all} (``slow`` marker).
+
+The planner tests run entirely without Pallas — they are pure functions
+of the pair stream — so they live in the tier-1 gate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sgns
+from repro.core.engine import (
+    FusedPipePallasEngine, FusedTieredPallasEngine, get_engine)
+from repro.core.sgns import SGNSConfig
+from repro.data.pairs import build_noise_table
+from repro.kernels.sgns_fused import fused_negative_ids
+from repro.kernels.sgns_fused_pipe import plan_blocks, resolve_schedule
+from repro.kernels.sgns_fused_tiered import sgns_fused_tiered_step
+
+# Past the VMEM-resident kernel's envelope, like tests/test_fused_pipe.py:
+# 2 tables × 34_000 × 64 × 4 B ≈ 17.4 MB > ~16 MB VMEM.
+V_BIG, D_BIG = 34_000, 64
+B, K = 64, 4
+# hot fractions for the slow sweep: pure-pipe, a small non-aligned hot
+# set, and pure-resident (hot_rows covers the whole vocab)
+HOT_SWEEP = (0, 257, V_BIG)
+
+
+def _plan(centers, contexts, negs, V, blk, **kw):
+    return jax.tree.map(np.asarray, plan_blocks(
+        jnp.asarray(centers, jnp.int32), jnp.asarray(contexts, jnp.int32),
+        jnp.asarray(negs, jnp.int32), V, blk, **kw))
+
+
+# ------------------------------------------------------- tier routing
+def _assert_tier_routing_invariants(c, x, n, V, blk, hot, ring_depth=2):
+    """The tiered-planner contract for one pair stream:
+
+    * every touched row is served by exactly one tier — cold rows appear
+      exactly once in their block's gather list, hot rows never do;
+    * the cold-side dedup / position-map / windowed-hazard invariants of
+      the pure pipeline hold over the cold rows alone;
+    * the blocked id arrays (``cen``/``ctx``/``neg``) recover the input
+      stream, so the kernel's direct hot indices are the true ids.
+    """
+    p = _plan(c, x, n, V, blk, hot_rows=hot, ring_depth=ring_depth)
+    blk_eff = p.w_pos.shape[1]
+    nblocks = p.uw.shape[0]
+    Kq = n.shape[1]
+
+    # blocked ids recover the (padded) stream
+    flat_c = p.cen.reshape(-1)[:len(c)]
+    flat_x = p.ctx.reshape(-1)[:len(x)]
+    flat_n = p.neg.reshape(nblocks, blk_eff, Kq).reshape(-1, Kq)[:len(n)]
+    np.testing.assert_array_equal(flat_c, c)
+    np.testing.assert_array_equal(flat_x, x)
+    np.testing.assert_array_equal(flat_n, n)
+
+    w_sets, c_sets = [], []
+    for b in range(nblocks):
+        valid = p.mask[b].astype(bool)
+        nv = int(valid.sum())
+        cen = c[b * blk_eff:b * blk_eff + nv]
+        ctx = x[b * blk_eff:b * blk_eff + nv]
+        neg = n[b * blk_eff:b * blk_eff + nv]
+        touched_w = set(cen.tolist())
+        touched_c = set(ctx.tolist()) | set(neg.reshape(-1).tolist())
+        cold_w = {r for r in touched_w if r >= hot}
+        cold_c = {r for r in touched_c if r >= hot}
+        gw = p.uw[b, :p.n_w[b]]
+        gc = p.uc[b, :p.n_c[b]]
+        # dedup: strictly sorted ⇒ each cold row exactly once
+        assert (np.diff(gw) > 0).all() and (np.diff(gc) > 0).all()
+        # hot rows NEVER enter the gather/scatter lists
+        assert (gw >= hot).all() and (gc >= hot).all()
+        # padding slots hold the V sentinel
+        assert (p.uw[b, p.n_w[b]:] == V).all()
+        assert (p.uc[b, p.n_c[b]:] == V).all()
+        # exactly-once coverage: the cold gather set covers the block's
+        # cold touched rows (plus at most the pad-source pair's cold
+        # rows when the tail block is padded); hot rows are covered by
+        # the id arrays checked above — (hot ∪ cold) is a partition of
+        # touched because tier membership is a pure id predicate
+        if valid.all():
+            assert set(gw.tolist()) == cold_w
+            assert set(gc.tolist()) == cold_c
+        else:
+            pad_w = {int(c[0])} if int(c[0]) >= hot else set()
+            pad_c = {r for r in ({int(x[0])} | set(n[0].tolist()))
+                     if r >= hot}
+            assert cold_w <= set(gw.tolist()) <= cold_w | pad_w
+            assert cold_c <= set(gc.tolist()) <= cold_c | pad_c
+        # position maps: every pair element resolves either hot (id <
+        # hot, not positioned in the buffer's valid region) or to the
+        # buffer slot holding exactly its row
+        pc = p.cen[b]
+        for j in range(blk_eff):
+            if pc[j] >= hot:
+                assert p.uw[b][p.w_pos[b][j]] == pc[j]
+            else:
+                assert p.w_pos[b][j] >= p.n_w[b]   # masked pad slot
+        px = p.ctx[b]
+        for j in range(blk_eff):
+            if px[j] >= hot:
+                assert p.uc[b][p.cp_pos[b][j]] == px[j]
+            else:
+                assert p.cp_pos[b][j] >= p.n_c[b]
+        pn = p.neg[b]
+        for j in range(blk_eff * Kq):
+            if pn[j] >= hot:
+                assert p.uc[b][p.cn_pos[b][j]] == pn[j]
+            else:
+                assert p.cn_pos[b][j] >= p.n_c[b]
+        w_sets.append(set(gw.tolist()))
+        c_sets.append(set(gc.tolist()))
+
+    # hazards are exactly the windowed intersections of COLD rows — a
+    # hot row shared between adjacent blocks must not flag (it never
+    # moves over DMA)
+    for b in range(nblocks):
+        expect = any((w_sets[b] & w_sets[b - m]) or (c_sets[b] & c_sets[b - m])
+                     for m in range(1, min(ring_depth, b + 1)))
+        assert bool(p.hazard[b]) == expect, (b, p.hazard)
+
+    # the resolved schedule stays safe for the actual cold row sets
+    # (tests/ is on sys.path under pytest's prepend import mode)
+    from test_fused_pipe import _check_schedule
+    row_sets = [{("w", r) for r in w_sets[b]} | {("c", r) for r in c_sets[b]}
+                for b in range(nblocks)]
+    _check_schedule(resolve_schedule(p.hazard, ring_depth), nblocks,
+                    row_sets, p.hazard, ring_depth)
+
+
+def test_tier_routing_drops_hot_rows_from_dma_lists():
+    V, blk, hot = 50, 4, 10
+    rng = np.random.default_rng(0)
+    c = rng.integers(0, V, 16).astype(np.int32)
+    x = rng.integers(0, V, 16).astype(np.int32)
+    n = rng.integers(0, V, (16, 3)).astype(np.int32)
+    _assert_tier_routing_invariants(c, x, n, V, blk, hot)
+
+
+def test_tier_routing_hot_overlap_is_not_a_hazard():
+    """Adjacent blocks sharing only a HOT row must not set the hazard
+    flag: the row lives in VMEM for the whole step, no DMA to order."""
+    V, blk, hot = 100, 2, 5
+    c = np.array([1, 2, 1, 9], np.int32)      # blocks share hot row 1
+    x = np.array([50, 51, 52, 53], np.int32)
+    n = np.arange(4, dtype=np.int32).reshape(4, 1) + 60
+    p = _plan(c, x, n, V, blk, hot_rows=hot)
+    np.testing.assert_array_equal(p.hazard, [0, 0])
+    # the same stream with the shared row COLD does flag
+    p0 = _plan(c, x, n, V, blk, hot_rows=0)
+    np.testing.assert_array_equal(p0.hazard, [0, 1])
+
+
+def test_tier_routing_extremes_match_pipe_and_empty():
+    """hot_rows=0 reproduces the pure-pipe plan exactly; hot_rows=V
+    empties every gather list and clears every hazard."""
+    V, blk = 30, 4
+    rng = np.random.default_rng(3)
+    c = rng.integers(0, V, 21).astype(np.int32)
+    x = rng.integers(0, V, 21).astype(np.int32)
+    n = rng.integers(0, V, (21, 2)).astype(np.int32)
+    p0 = _plan(c, x, n, V, blk, hot_rows=0)
+    pp = _plan(c, x, n, V, blk)
+    for a, b in zip(p0, pp):
+        np.testing.assert_array_equal(a, b)
+    pv = _plan(c, x, n, V, blk, hot_rows=V)
+    assert (pv.n_w == 0).all() and (pv.n_c == 0).all()
+    assert (pv.uw == V).all() and (pv.uc == V).all()
+    assert (pv.hazard == 0).all()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data(), V=st.integers(5, 60), Bq=st.integers(1, 40),
+           Kq=st.integers(1, 4), blk=st.integers(1, 16),
+           rd=st.integers(2, 4))
+    def test_tier_routing_invariants_on_adversarial_streams(
+            data, V, Bq, Kq, blk, rd):
+        """For ANY pair stream and ANY hot set size: (hot ∪ cold)
+        routing covers every touched row exactly once, the cold-side
+        dedup/hazard invariants hold, hot rows never appear in the
+        gather/scatter lists."""
+        hot = data.draw(st.integers(0, V))
+        ids = st.integers(0, V - 1)
+        c = np.array(data.draw(st.lists(ids, min_size=Bq, max_size=Bq)),
+                     np.int32)
+        x = np.array(data.draw(st.lists(ids, min_size=Bq, max_size=Bq)),
+                     np.int32)
+        n = np.array(data.draw(st.lists(
+            st.lists(ids, min_size=Kq, max_size=Kq),
+            min_size=Bq, max_size=Bq)), np.int32)
+        _assert_tier_routing_invariants(c, x, n, V, blk, hot, ring_depth=rd)
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.fixture(scope="module")
+def cfg():
+    return SGNSConfig(vocab_size=V_BIG, dim=D_BIG, negatives=K)
+
+
+@pytest.fixture(scope="module")
+def world(cfg):
+    rng = np.random.default_rng(0)
+    params = {
+        "W": jnp.asarray(0.01 * rng.normal(size=(V_BIG, D_BIG)), jnp.float32),
+        "C": jnp.asarray(0.01 * rng.normal(size=(V_BIG, D_BIG)), jnp.float32),
+    }
+    # Zipfian center/context stream: the hot prefix is genuinely hot,
+    # and duplicates within and across blocks exercise both tiers'
+    # accumulation order
+    c = jnp.asarray(np.minimum(rng.zipf(1.2, B) - 1, V_BIG - 1)
+                    .astype(np.int32))
+    x = jnp.asarray(np.minimum(rng.zipf(1.2, B) - 1, V_BIG - 1)
+                    .astype(np.int32))
+    c = c.at[1].set(c[0])
+    x = x.at[3].set(x[2])
+    counts = rng.zipf(1.3, V_BIG).astype(np.float64)
+    table = build_noise_table(counts, kind="alias")
+    return params, c, x, table
+
+
+def _sparse_blocked(params, c, x, ids, lr, blk):
+    step = jax.jit(sgns.train_step_sparse)
+    params = jax.tree.map(jnp.copy, params)
+    for b0 in range(0, c.shape[0], blk):
+        params, _ = step(params, c[b0:b0 + blk], x[b0:b0 + blk],
+                         ids[b0:b0 + blk], lr)
+    return params
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hot", HOT_SWEEP)
+def test_tiered_bit_identical_to_per_block_sparse(cfg, world, hot):
+    """Past the VMEM envelope: the tiered step ≡ the per-block sparse
+    reference on the replayed negatives, bit for bit, at every hot
+    fraction from pure-pipe to pure-resident."""
+    params, c, x, table = world
+    key = jax.random.PRNGKey(11)
+    lr = jnp.float32(0.025)
+    blk = 40                                   # non-dividing: padded tail
+    pt, _ = sgns_fused_tiered_step(
+        jax.tree.map(jnp.copy, params), c, x, table, key, lr,
+        negatives=K, block_pairs=blk, hot_rows=hot, interpret=True)
+    ids = fused_negative_ids(key.astype(jnp.uint32), table["prob"],
+                             table["alias"], (B, K))
+    pr = _sparse_blocked(params, c, x, ids, lr, blk)
+    np.testing.assert_array_equal(np.asarray(pt["W"]), np.asarray(pr["W"]))
+    np.testing.assert_array_equal(np.asarray(pt["C"]), np.asarray(pr["C"]))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hot,ring", [(0, 2), (257, 2), (257, 3),
+                                      (V_BIG, 2)])
+def test_tiered_bit_identical_to_unpipelined_hbm_engine(cfg, world, hot,
+                                                        ring):
+    """pallas_fused_tiered ≡ pallas_fused_hbm at the engine level: tier
+    routing and ring depth must not move a single bit relative to the
+    serial chain, at every hot fraction."""
+    params, c, x, table = world
+    key = jax.random.PRNGKey(5)
+    st_t = get_engine("pallas_fused_tiered", block_pairs=16, hot_rows=hot,
+                      ring_depth=ring, interpret=True).make_step(cfg, 1000)
+    st_h = get_engine("pallas_fused_hbm", block_pairs=16,
+                      interpret=True).make_step(cfg, 1000)
+    pt, lt = st_t(jax.tree.map(jnp.copy, params), c, x, table, key,
+                  jnp.int32(2))
+    ph, lh = st_h(jax.tree.map(jnp.copy, params), c, x, table, key,
+                  jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(pt["W"]), np.asarray(ph["W"]))
+    np.testing.assert_array_equal(np.asarray(pt["C"]), np.asarray(ph["C"]))
+    assert float(lt) == pytest.approx(float(lh), rel=1e-6)
+
+
+# ------------------------------------------------------------ engine wiring
+def test_engine_fields_and_registry():
+    eng = get_engine("pallas_fused_tiered")
+    assert isinstance(eng, FusedTieredPallasEngine)
+    assert isinstance(eng, FusedPipePallasEngine)   # inherits the pipeline
+    assert eng.table_kind == "alias"
+    assert eng.hot_rows == 256 and eng.ring_depth == 2
+    assert get_engine("pallas_fused_tiered", hot_rows=1024).hot_rows == 1024
+    assert get_engine("pallas_fused_tiered", ring_depth=4).ring_depth == 4
+    with pytest.raises(ValueError, match="alias"):
+        get_engine("pallas_fused_tiered:cdf")
+    with pytest.raises(ValueError, match="hot_rows"):
+        get_engine("pallas_fused_tiered", hot_rows=-1)
+    with pytest.raises(ValueError, match="ring_depth"):
+        get_engine("pallas_fused_tiered", ring_depth=1)
+
+
+def test_tiered_sequential_falls_back_to_per_pair_oracle():
+    """sequential=True on the tiered engine runs the unpipelined
+    per-pair kernel — bit-identical to the hbm engine's sequential
+    path (tiers don't apply: per-pair order is inherently serial)."""
+    cfg = SGNSConfig(vocab_size=120, dim=16, negatives=3)
+    rng = np.random.default_rng(2)
+    params = {"W": jnp.asarray(0.01 * rng.normal(size=(120, 16)), jnp.float32),
+              "C": jnp.asarray(0.01 * rng.normal(size=(120, 16)), jnp.float32)}
+    c = jnp.asarray(rng.integers(0, 120, 16, dtype=np.int32))
+    x = jnp.asarray(rng.integers(0, 120, 16, dtype=np.int32))
+    table = build_noise_table(rng.zipf(1.3, 120).astype(np.float64),
+                              kind="alias")
+    key = jax.random.PRNGKey(23)
+    te = get_engine("pallas_fused_tiered", block_pairs=8, sequential=True,
+                    interpret=True)
+    he = get_engine("pallas_fused_hbm", block_pairs=8, sequential=True,
+                    interpret=True)
+    pt, _ = te.make_step(cfg, 1000)(jax.tree.map(jnp.copy, params),
+                                    c, x, table, key, jnp.int32(0))
+    ph, _ = he.make_step(cfg, 1000)(jax.tree.map(jnp.copy, params),
+                                    c, x, table, key, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(pt["W"]), np.asarray(ph["W"]))
+    np.testing.assert_array_equal(np.asarray(pt["C"]), np.asarray(ph["C"]))
+
+
+def test_trainer_epoch_trains_with_tiered_engine():
+    """AsyncShardTrainer (vmap backend, scan over steps) runs the tiered
+    engine end to end and the loss drops below the init plateau — the
+    wiring the driver and CLIs sit on."""
+    from repro.core.async_trainer import AsyncShardTrainer
+
+    cfg = SGNSConfig(vocab_size=150, dim=32, negatives=4)
+    rng = np.random.default_rng(0)
+    n, S, Bt = 2, 12, 64
+    c = jnp.asarray(rng.integers(0, 30, (n, S, Bt)), jnp.int32)
+    x = jnp.asarray((np.asarray(c) + 1) % 30, jnp.int32)
+    counts = rng.zipf(1.3, cfg.vocab_size).astype(np.float64)
+    table = jax.tree.map(lambda a: jnp.stack([a, a]),
+                         build_noise_table(counts, kind="alias"))
+    tr = AsyncShardTrainer(cfg=cfg, num_workers=n, total_steps=S,
+                           engine=get_engine("pallas_fused_tiered",
+                                             block_pairs=16, hot_rows=8))
+    p = tr.init(jax.random.PRNGKey(0))
+    p, losses = tr.epoch(p, c, x, table, jax.random.PRNGKey(4))
+    assert np.isfinite(np.asarray(losses)).all()
+    assert float(losses[:, -1].mean()) < (cfg.negatives + 1) * np.log(2)
