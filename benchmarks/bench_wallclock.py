@@ -139,43 +139,30 @@ def zipf_kernel_rows(quick=False):
     cross-block recurrence, ~1.5x less HBM row traffic (a 35% cut) at
     this skew and batch — which is the term real DMA latency converts
     into step time on hardware. Rows land in the same gated JSON as
-    ``<engine>@zipf50k``."""
+    ``<engine>@zipf50k``.
+
+    The workload itself (seeds, id streams, planner traffic) lives in
+    ``repro.analysis.workloads`` — the single definition this bench
+    measures and ``repro.analysis.contracts`` certifies the committed
+    baseline numbers against."""
     import jax
     import jax.numpy as jnp
 
+    from repro.analysis.workloads import ZIPF50K, zipf50k_ids
     from repro.core import sgns
     from repro.core.engine import get_engine
-    from repro.data.pairs import build_noise_table
-    from repro.kernels.sgns_fused import _as_seed, fused_negative_ids
-    from repro.kernels.sgns_fused_pipe import plan_blocks
+    from repro.kernels.sgns_fused_pipe import plan_blocks, plan_row_traffic
 
-    V, D, B, K = 50_000, 512, 8192, 5
-    # small blocks maximize cross-block hot-row recurrence; the large
-    # batch amortizes the per-step hot-prefix DMA over 64 blocks
-    BLK, HOT = 128, 2048
+    V, D, B, K = ZIPF50K["V"], ZIPF50K["D"], ZIPF50K["B"], ZIPF50K["K"]
+    BLK, HOT = ZIPF50K["BLK"], ZIPF50K["HOT"]
     steps = 2 if quick else 4
     cfg = sgns.SGNSConfig(vocab_size=V, dim=D, negatives=K)
     params = sgns.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(11)
-    # power-law ids over the frequency-sorted vocab (choice keeps the
-    # mid-frequency strata populated, unlike a raw Zipf draw whose mass
-    # all lands on a handful of head ids)
-    p = 1.0 / np.arange(1, V + 1) ** 1.05
-    p /= p.sum()
-    c = jnp.asarray(rng.choice(V, size=B, p=p).astype(np.int32))
-    x = jnp.asarray(rng.choice(V, size=B, p=p).astype(np.int32))
-    table = build_noise_table((p * 1e6).astype(np.float32), kind="alias")
-
-    key = jax.random.PRNGKey(3)
-    neg = fused_negative_ids(_as_seed(key), table["prob"], table["alias"],
-                             (B, K))
+    c, x, neg, table, key = zipf50k_ids()
 
     def hbm_rows(hot):
-        """Rows DMA'd per step: each unique cold row is one gather +
-        one write-back; the hot prefix moves in and out once per step
-        for both tables."""
         plan = plan_blocks(c, x, neg, V, BLK, hot_rows=hot)
-        return 2 * int(plan.n_w.sum() + plan.n_c.sum()) + 4 * hot
+        return plan_row_traffic(plan, hot_rows=hot)
 
     rows = []
     for name, kw in (("pallas_fused_pipe", {}),

@@ -1,0 +1,38 @@
+"""Static verification layer for the zero-collective training stack.
+
+Four passes, each runnable standalone and all wired into the CI
+``static-analysis`` job (``python -m repro.analysis`` runs every pass
+over every registered engine):
+
+``analysis.dma_model``
+    Bounded-exhaustive model checker for the DMA schedule both
+    pipelined kernels share (``kernel_schedule``/``resolve_schedule``):
+    for every ``ring_depth`` in {2, 3, 4} × every hazard vector up to a
+    bounded block count × padded-tail shapes, proves every
+    ``make_async_copy`` start has exactly one matching wait, no VMEM
+    ring slot is rewritten before its in-flight DMA completes, and no
+    scatter-before-regather WAR hazard escapes the look-behind window.
+``analysis.contracts``
+    Structured-op certifier over lowered StableHLO / compiled HLO:
+    the zero-collective contract (replacing the text regex, which was
+    vacuous on MLIR spellings), ``(V, d)``-table donation aliasing (no
+    silent full-table copies), and planner-predicted DMA row traffic
+    matching the committed ``@zipf50k`` bench baselines.
+``analysis.vmem``
+    Static VMEM footprint from ``(block_pairs, ring_depth, hot_rows,
+    d, K)``; rejects over-budget configs at plan time (trainer + CLIs)
+    instead of at Mosaic compile time on TPU.
+``analysis.lint_rules``
+    Repo-specific AST lint encoding past bug classes from CHANGES.md:
+    arithmetic PRNG seed construction, ``searchsorted`` without
+    ``side='right'`` in sampling code, unseeded/wall-clock randomness
+    in ``core/``/``kernels/``, and collective primitives in the
+    zero-collective train path.
+
+Submodules import lazily where they need jax so the lint pass stays
+usable as a lightweight standalone tool.
+"""
+
+from __future__ import annotations
+
+__all__ = ["contracts", "dma_model", "lint_rules", "vmem", "workloads"]

@@ -1,0 +1,227 @@
+"""Repo-specific AST lint for reproducibility hazards.
+
+Generic linters can't know this repo's invariants. Four rules encode
+the classes of bug the project has actually hit or designed against:
+
+* **RL001 arithmetic-seed** — a PRNG seed built by arithmetic
+  (``PRNGKey(seed + worker)``, ``default_rng(seed * 31 + i)``).
+  Arithmetic seed derivation collides across (worker, epoch) lattices;
+  the repo's convention is ``jax.random.fold_in`` / tuple-fed
+  ``np.random.SeedSequence`` (see ``core/driver._epoch_rng``).
+* **RL002 searchsorted-side** — ``searchsorted`` without an explicit
+  ``side=``. For CDF inversion the side decides whether a u exactly on
+  a boundary lands in the open or closed bucket; the default silently
+  changes sampling semantics. Inside ``data/`` the side must be
+  ``"right"`` (inverse-CDF convention of ``pairs.cdf_draw``).
+* **RL003 unseeded-randomness** — legacy global-state NumPy RNG
+  (``np.random.rand`` etc.), stdlib ``random.*``, argless
+  ``default_rng()``, or wall-clock time fed to a seed constructor,
+  inside ``core/`` or ``kernels/``. Everything in the training core
+  must be replayable from explicit seeds.
+* **RL004 collective-in-train-path** — ``lax.psum``-family collectives
+  in ``kernels/``, ``data/``, ``core/engine.py`` or ``core/sgns.py``.
+  The paper's zero-synchronization claim lives or dies here; only
+  ``core/async_trainer.py`` (which hosts the *synchronous baseline*
+  backends) may name collectives.
+
+Suppression: end the offending line with ``# repro-lint:
+ignore[RL002]`` (comma-separate several rules) plus a justification —
+the pragma is a reviewed exception, not an off switch.
+
+Standalone: ``python -m repro.analysis.lint_rules [root ...]``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+# Seed sinks: calls whose argument IS a seed.
+_SEED_SINKS = {"PRNGKey", "SeedSequence", "default_rng", "fold_in", "key"}
+# Legacy global-state numpy RNG entry points (np.random.<name>(...)).
+_NP_LEGACY = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "seed", "choice", "shuffle", "permutation", "uniform",
+    "normal", "standard_normal", "binomial", "poisson", "exponential",
+}
+_WALLCLOCK = {"time", "time_ns", "monotonic", "monotonic_ns",
+              "perf_counter", "perf_counter_ns"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                "all_to_all", "ppermute", "pshuffle", "psum_scatter"}
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _call_name(node: ast.AST) -> str:
+    """Rightmost identifier of a call target: ``a.b.c(...)`` → ``c``."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name: ``np.random.rand`` → ``np.random.rand``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _has_name_operand(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Name) for n in ast.walk(node))
+
+
+def _in_scope(rel: str, scopes: tuple[str, ...]) -> bool:
+    return any(rel == s or rel.startswith(s) for s in scopes)
+
+
+def _check_tree(tree: ast.AST, rel: str) -> list[LintFinding]:
+    found: list[LintFinding] = []
+
+    def add(rule: str, node: ast.AST, msg: str) -> None:
+        found.append(LintFinding(rule, rel, node.lineno, msg))
+
+    in_core = _in_scope(rel, ("core/", "kernels/"))
+    in_train_path = _in_scope(
+        rel, ("kernels/", "data/", "core/engine.py", "core/sgns.py"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fname = _call_name(node.func)
+            dotted = _dotted(node.func)
+
+            # RL001: arithmetic seed construction fed to a seed sink.
+            if fname in _SEED_SINKS:
+                for arg in node.args:
+                    if isinstance(arg, ast.BinOp) and _has_name_operand(arg):
+                        add("RL001", arg,
+                            f"arithmetic seed passed to {fname}() — derive "
+                            f"streams with jax.random.fold_in or a "
+                            f"tuple-fed np.random.SeedSequence instead")
+                # RL003 (seed-sink flavour): wall-clock seeding.
+                if in_core:
+                    for sub in ast.walk(node):
+                        if (isinstance(sub, ast.Call)
+                                and sub is not node
+                                and _dotted(sub.func).startswith("time.")
+                                and _call_name(sub.func) in _WALLCLOCK):
+                            add("RL003", sub,
+                                f"wall-clock {_dotted(sub.func)}() used as "
+                                f"a seed for {fname}() — runs become "
+                                f"unreplayable")
+
+            # RL002: searchsorted side.
+            if fname == "searchsorted":
+                side = next((kw for kw in node.keywords
+                             if kw.arg == "side"), None)
+                if side is None:
+                    add("RL002", node,
+                        "searchsorted without explicit side= — boundary "
+                        "semantics of CDF inversion must be spelled out")
+                elif (rel.startswith("data/")
+                      and isinstance(side.value, ast.Constant)
+                      and side.value.value != "right"):
+                    add("RL002", node,
+                        f"searchsorted side={side.value.value!r} in data/ — "
+                        f"inverse-CDF sampling requires side='right'")
+
+            if in_core:
+                # RL003: legacy global-state numpy RNG.
+                if (dotted.startswith(("np.random.", "numpy.random."))
+                        and fname in _NP_LEGACY):
+                    add("RL003", node,
+                        f"legacy global-state RNG {dotted}() — use an "
+                        f"explicit np.random.Generator")
+                # RL003: stdlib random module.
+                if dotted.startswith("random.") and dotted.count(".") == 1:
+                    add("RL003", node,
+                        f"stdlib {dotted}() draws from hidden global "
+                        f"state — use an explicit seeded Generator")
+                # RL003: unseeded default_rng().
+                if (fname == "default_rng" and not node.args
+                        and not node.keywords):
+                    add("RL003", node,
+                        "default_rng() without a seed — entropy-seeded, "
+                        "unreplayable")
+
+            # RL004: collectives in the zero-collective train path.
+            if in_train_path and fname in _COLLECTIVES:
+                add("RL004", node,
+                    f"collective {dotted or fname}() in the "
+                    f"zero-collective train path — synchronization "
+                    f"belongs to the baseline backends in "
+                    f"core/async_trainer.py only")
+    return found
+
+
+def _suppressed(finding: LintFinding, lines: list[str]) -> bool:
+    if not (1 <= finding.line <= len(lines)):
+        return False
+    m = PRAGMA_RE.search(lines[finding.line - 1])
+    if not m:
+        return False
+    rules = {r.strip() for r in m.group(1).split(",")}
+    return finding.rule in rules
+
+
+def lint_file(path: Path, root: Path) -> list[LintFinding]:
+    rel = path.relative_to(root).as_posix()
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [LintFinding("RL000", rel, e.lineno or 0,
+                            f"syntax error: {e.msg}")]
+    lines = src.splitlines()
+    return [f for f in _check_tree(tree, rel) if not _suppressed(f, lines)]
+
+
+def run_lint(root) -> list[LintFinding]:
+    """Lint every ``*.py`` under ``root`` (a ``src/repro``-like tree:
+    rule path-scoping is relative to it). Returns surviving findings."""
+    root = Path(root)
+    found: list[LintFinding] = []
+    for path in sorted(root.rglob("*.py")):
+        found.extend(lint_file(path, root))
+    return found
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("roots", nargs="*", default=["src/repro"],
+                    help="package roots to lint (default: src/repro)")
+    args = ap.parse_args(argv)
+    findings: list[LintFinding] = []
+    for root in args.roots:
+        findings.extend(run_lint(root))
+    for f in findings:
+        print(f"lint: {f}")
+    n = len(findings)
+    print(f"lint: {n} finding{'s' if n != 1 else ''} in "
+          f"{', '.join(args.roots)}" + (": OK" if not n else ""))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,199 @@
+"""Static VMEM footprint estimation and budget enforcement.
+
+Every Pallas engine config implies a VMEM-resident working set the
+Mosaic compiler will demand at lowering time: scratch rings, pinned
+table prefixes, whole resident tables, plan operands. On CI (interpret
+mode) an over-budget config runs fine and only fails weeks later on
+real TPU hardware — the ROADMAP's open Mosaic item. This pass computes
+the footprint *statically* from the engine dials
+``(block_pairs, ring_depth, hot_rows)`` and the model shape
+``(V, d, K, B)``, so bad configs are rejected at plan time:
+
+* :class:`repro.core.async_trainer.AsyncShardTrainer` checks dial
+  consistency at construction (``engine.validate``);
+* ``train_sgns`` / ``dryrun_sgns`` run :func:`check_vmem_budget`
+  before training/lowering (``--vmem-budget-mb``);
+* ``python -m repro.analysis`` certifies each engine's reference
+  operating shape fits the default budget.
+
+The estimate models the terms the kernels actually allocate (scratch
+shapes + VMEM-spec operands), not XLA's transient buffers — it is a
+lower bound designed to catch the catastrophic misconfigurations
+(VMEM-resident tables past the cliff, a deep ring × huge blocks, a hot
+prefix larger than the budget), with headroom left to the real
+compiler.
+
+Standalone: ``python -m repro.analysis.vmem --engine pallas_fused_pipe
+--vocab 300000 --dim 500``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+F32 = 4     # bytes; every table/scratch buffer in the stack is f32/i32
+
+# One core's VMEM order (TPU v4/v5e ≈ 16 MiB). A deliberate, documented
+# default — override per call/CLI for other parts.
+DEFAULT_VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+
+class VmemBudgetError(ValueError):
+    """An engine config's static VMEM footprint exceeds the budget."""
+
+
+@dataclass(frozen=True)
+class VmemEstimate:
+    """Static VMEM working set of one engine config at one shape."""
+
+    engine: str
+    shape: dict = field(default_factory=dict)   # V, d, K, B + dials
+    terms: dict = field(default_factory=dict)   # name -> bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.terms.values())
+
+    def summary(self) -> str:
+        mb = self.total_bytes / 2 ** 20
+        parts = ", ".join(f"{k}={v / 2 ** 20:.2f}MiB"
+                          for k, v in sorted(self.terms.items(),
+                                             key=lambda kv: -kv[1]))
+        return (f"{self.engine}: {mb:.2f} MiB VMEM "
+                f"({parts or 'no VMEM-resident requirement'})")
+
+
+def _nblocks(B: int, blk: int) -> int:
+    return -(-B // blk)
+
+
+def estimate_vmem(engine, *, vocab_size: int, dim: int, negatives: int,
+                  batch: int) -> VmemEstimate:
+    """Static VMEM footprint of one step of ``engine`` at this shape.
+
+    ``engine`` is an :class:`repro.core.engine.UpdateEngine` instance or
+    spec string. Dense/sparse engines have no VMEM-resident requirement
+    (XLA manages placement) and estimate to zero.
+    """
+    from repro.core.engine import get_engine
+    from repro.kernels.sgns_fused_hbm import _pick_block_pairs
+
+    eng = get_engine(engine)
+    V, d, K, B = vocab_size, dim, negatives, batch
+    shape = {"V": V, "d": d, "K": K, "B": B}
+    terms: dict[str, int] = {}
+    name = eng.name
+
+    if name in ("dense", "sparse"):
+        pass
+    elif name == "pallas":
+        # VMEM-tile row-grad kernel: (blk_b, d) w/cp + (blk_b, K, d) cn
+        # tiles in and the same three gradient tiles out; ops.py pads B
+        # up to a power of two before picking the tile
+        from repro.kernels.sgns_update import _pick_block_b
+        Bp = 1 << (max(B, 8) - 1).bit_length()
+        bt = eng.block_b or _pick_block_b(Bp, K, d)
+        shape["block_b"] = bt
+        terms["grad_tiles"] = 2 * bt * (K + 2) * d * F32
+    elif name == "pallas_fused":
+        # whole tables + noise tables resident, plus the gathered rows
+        # and their updates for the full batch
+        terms["resident_tables"] = 2 * V * d * F32
+        terms["noise_tables"] = 2 * V * F32
+        terms["batch_rows"] = 2 * B * (K + 2) * d * F32
+    elif name == "pallas_fused_hbm":
+        blk = _pick_block_pairs(B, eng.block_pairs)
+        shape["block_pairs"] = blk
+        terms["row_scratch"] = (blk * (K + 2) + 1) * d * F32
+        terms["noise_tables"] = 2 * V * F32
+    elif name in ("pallas_fused_pipe", "pallas_fused_tiered"):
+        blk = _pick_block_pairs(B, eng.block_pairs)
+        S = eng.ring_depth
+        nb = _nblocks(B, blk)
+        shape.update(block_pairs=blk, ring_depth=S)
+        terms["ring_w"] = S * blk * d * F32
+        terms["ring_c"] = S * blk * (K + 1) * d * F32
+        # VMEM plan operands: uw, uc, w_pos, cp_pos, cn_pos, mask
+        terms["plan_operands"] = nb * blk * (2 * K + 5) * F32
+        if name == "pallas_fused_tiered":
+            hot = max(0, min(int(eng.hot_rows), V))
+            shape["hot_rows"] = hot
+            terms["hot_prefix"] = 2 * (hot + 1) * d * F32
+            terms["block_ids"] = nb * blk * (K + 2) * F32
+    else:   # future engines: unknown ⇒ no static claim
+        pass
+    return VmemEstimate(eng.describe(), shape, terms)
+
+
+def check_vmem_budget(engine, *, vocab_size: int, dim: int, negatives: int,
+                      batch: int,
+                      budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+                      ) -> VmemEstimate:
+    """Estimate and enforce: raises :class:`VmemBudgetError` with the
+    per-term breakdown and dial advice when the footprint exceeds the
+    budget; returns the estimate otherwise."""
+    est = estimate_vmem(engine, vocab_size=vocab_size, dim=dim,
+                        negatives=negatives, batch=batch)
+    if est.total_bytes > budget_bytes:
+        advice = {
+            "pallas_fused": "use the HBM-resident family "
+                            "(pallas_fused_hbm/_pipe/_tiered) past the "
+                            "VMEM cliff",
+            "pallas_fused_hbm": "reduce block_pairs",
+            "pallas_fused_pipe": "reduce block_pairs or ring_depth",
+            "pallas_fused_tiered": "reduce hot_rows, block_pairs or "
+                                   "ring_depth",
+        }.get(est.engine.split(":")[0], "reduce the blocking dials")
+        raise VmemBudgetError(
+            f"VMEM budget exceeded: {est.summary()} > "
+            f"{budget_bytes / 2 ** 20:.1f} MiB budget — {advice}")
+    return est
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.core.engine import ENGINE_NAMES, get_engine
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--engine", default=None,
+                    help="one engine spec (default: every registered "
+                         "engine)")
+    ap.add_argument("--vocab", type=int, default=300_000)
+    ap.add_argument("--dim", type=int, default=500)
+    ap.add_argument("--negatives", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--hot-rows", type=int, default=None)
+    ap.add_argument("--ring-depth", type=int, default=None)
+    ap.add_argument("--block-pairs", type=int, default=None)
+    ap.add_argument("--budget-mb", type=float, default=16.0,
+                    help="0 disables enforcement (report only)")
+    args = ap.parse_args(argv)
+    overrides = {k: v for k, v in (("hot_rows", args.hot_rows),
+                                   ("ring_depth", args.ring_depth),
+                                   ("block_pairs", args.block_pairs))
+                 if v is not None}
+    names = [args.engine] if args.engine else list(ENGINE_NAMES)
+    ok = True
+    for name in names:
+        eng = get_engine(name, **{k: v for k, v in overrides.items()
+                                  if hasattr(get_engine(name), k)})
+        try:
+            if args.budget_mb:
+                est = check_vmem_budget(
+                    eng, vocab_size=args.vocab, dim=args.dim,
+                    negatives=args.negatives, batch=args.batch,
+                    budget_bytes=int(args.budget_mb * 2 ** 20))
+            else:
+                est = estimate_vmem(eng, vocab_size=args.vocab,
+                                    dim=args.dim, negatives=args.negatives,
+                                    batch=args.batch)
+            print(f"vmem: {est.summary()}")
+        except VmemBudgetError as e:
+            ok = False
+            print(f"vmem: REJECTED {e}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,7 +26,6 @@ production mesh for the dry-run (``shard_map`` backend).
 from __future__ import annotations
 
 import inspect
-import re
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -37,10 +36,6 @@ from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
 from repro.core import sgns
 from repro.core.engine import get_engine
 from repro.core.sgns import SGNSConfig
-
-COLLECTIVE_RE = re.compile(
-    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
-)
 
 # --- shard_map compat: jax >= 0.6 exposes jax.shard_map(check_vma=...);
 # jax 0.4.x has jax.experimental.shard_map.shard_map(check_rep=...).
@@ -127,6 +122,7 @@ class AsyncShardTrainer:
 
     def __post_init__(self):
         self.engine = get_engine(self.engine)
+        self.engine.validate(vocab_size=self.cfg.vocab_size)
         if self.plan is not None:
             if self.plan.num_workers != self.num_workers:
                 raise ValueError(
@@ -335,17 +331,21 @@ def make_periodic_sync_epoch(cfg: SGNSConfig, neg_table,
 
 # ---------------------------------------------------------------------------
 def assert_no_collectives(lowered) -> str:
-    """Raises if the lowered/compiled HLO contains any cross-device
-    collective — the paper's headline property for the train phase."""
-    txt = lowered.as_text()
-    hits = sorted(set(COLLECTIVE_RE.findall(txt)))
-    if hits:
-        raise AssertionError(f"async step unexpectedly contains collectives: {hits}")
-    return txt
+    """Raises if the lowered/compiled program contains any cross-device
+    collective — the paper's headline property for the train phase.
+    Delegates to the structured op-walk in
+    :mod:`repro.analysis.contracts`, which understands both StableHLO
+    MLIR (``stablehlo.all_reduce`` — what ``.as_text()`` yields on a
+    ``Lowered``) and post-compile HLO (``all-reduce``); the old
+    hyphen-spelling regex was vacuous on the MLIR form."""
+    from repro.analysis.contracts import certify_zero_collective
+
+    return certify_zero_collective(lowered)
 
 
 def count_collective_ops(hlo_text: str) -> dict[str, int]:
-    out: dict[str, int] = {}
-    for m in COLLECTIVE_RE.finditer(hlo_text):
-        out[m.group(1)] = out.get(m.group(1), 0) + 1
-    return out
+    """Collective ops by name in either program format (structured
+    parse via :mod:`repro.analysis.contracts`)."""
+    from repro.analysis import contracts
+
+    return contracts.count_collective_ops(hlo_text)

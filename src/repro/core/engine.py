@@ -116,6 +116,12 @@ class UpdateEngine:
         step_idx) -> (params, mean_loss)``."""
         raise NotImplementedError
 
+    def validate(self, *, vocab_size: int | None = None) -> None:
+        """Check dials that only make sense against a model shape
+        (``__post_init__`` covers the shape-free ones). Called by
+        :class:`~repro.core.async_trainer.AsyncShardTrainer` at
+        construction; raises ``ValueError`` on a bad combination."""
+
     def describe(self) -> str:
         """Human-readable ``"name:sampler"`` tag (log/bench labels)."""
         return f"{self.name}:{self.sampler}"
@@ -245,6 +251,13 @@ class FusedHBMPallasEngine(FusedPallasEngine):
     sequential: bool = False
     name = "pallas_fused_hbm"
 
+    def __post_init__(self):
+        super().__post_init__()
+        if self.block_pairs < 1:
+            raise ValueError(
+                f"{self.name} needs block_pairs >= 1 (pairs per kernel "
+                f"block), got {self.block_pairs}")
+
     def make_step(self, cfg: SGNSConfig, total_steps: int):
         """Per-block kernel-chain step against HBM-resident tables
         (DMA gather/RMW-scatter of touched rows only)."""
@@ -333,7 +346,11 @@ class FusedTieredPallasEngine(FusedPipePallasEngine):
     pure-resident (``hot_rows ≥ V``, zero per-block row DMAs).
     Bit-identical to ``pallas_fused_hbm`` at every setting.
 
-    ``hot_rows`` — rows pinned per table (clamped to ``[0, V]``).
+    ``hot_rows`` — rows pinned per table. Must be ≥ 0; the trainer
+    rejects ``hot_rows > V`` at construction (:meth:`validate`) — a
+    hot tier larger than the vocabulary is a misconfiguration, not a
+    request for pure-resident placement (use ``hot_rows = V`` for
+    that; direct kernel calls still clamp).
     ``block_pairs`` / ``ring_depth`` / ``sequential`` — as inherited
     (``sequential=True`` falls back to the unpipelined oracle, which is
     tier-free but bit-identical anyway).
@@ -347,6 +364,16 @@ class FusedTieredPallasEngine(FusedPipePallasEngine):
         if self.hot_rows < 0:
             raise ValueError(
                 f"{self.name} needs hot_rows >= 0, got {self.hot_rows}")
+
+    def validate(self, *, vocab_size: int | None = None) -> None:
+        """Reject a hot tier larger than the table it is a prefix of."""
+        super().validate(vocab_size=vocab_size)
+        if vocab_size and self.hot_rows > vocab_size:
+            raise ValueError(
+                f"{self.name} hot_rows={self.hot_rows} exceeds "
+                f"vocab_size={vocab_size}; the hot tier is a prefix of "
+                f"the (V, d) table — use hot_rows <= V (hot_rows=V is "
+                f"fully VMEM-resident)")
 
     def make_step(self, cfg: SGNSConfig, total_steps: int):
         """One tiered-kernel step (VMEM hot prefix + cold DMA ring);

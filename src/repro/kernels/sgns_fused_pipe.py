@@ -100,6 +100,12 @@ from repro.kernels.sgns_fused_hbm import _pick_block_pairs
 
 NUM_SLOTS = 2   # default ring depth: gathers of b+1 overlap scatters of b
 
+# DMA semantics of the schedule ops: each start op and the wait op that
+# retires it, both on the same per-slot semaphore ring. The static
+# analysis layer (repro.analysis.dma_model) checks matched start/wait
+# structure against exactly this mapping.
+DMA_WAIT_FOR_START = {"gather": "wait_gather", "scatter": "wait_scatter"}
+
 
 # ---------------------------------------------------------------------------
 # Block planner — pure JAX, unit-testable without Pallas.
@@ -328,6 +334,17 @@ def resolve_schedule(hazard, num_slots: int = NUM_SLOTS):
     return [(op, b, s)
             for op, b, s, g in kernel_schedule(len(hazard), num_slots)
             if g is None or all(bool(hazard[f]) is w for f, w in g)]
+
+
+def plan_row_traffic(plan: PipelinePlan, hot_rows: int = 0) -> int:
+    """HBM row transfers one step under this plan actually moves: each
+    valid cold row is exactly one gather plus one write-back, and a hot
+    prefix of ``hot_rows`` rows moves in and out once per step for both
+    tables (the tiered kernel's ``HOT_PREFIX_DMA_OPS`` bulk copies).
+    This is the ``hbm_rows_per_step`` quantity the ``@zipf50k`` BENCH
+    rows gate on and ``repro.analysis.contracts`` certifies against the
+    committed baseline."""
+    return 2 * int(plan.n_w.sum() + plan.n_c.sum()) + 4 * int(hot_rows)
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,12 @@ from repro.kernels.sgns_fused_pipe import (
     sgns_fused_pipe_step,
 )
 
+# Bulk hot-prefix DMAs per step beyond the cold pipeline's schedule: two
+# prefix loads at step start (W, C) + two write-backs at step end — the
+# ``4 * hot_rows`` row term in
+# :func:`repro.kernels.sgns_fused_pipe.plan_row_traffic`.
+HOT_PREFIX_DMA_OPS = 4
+
 
 # ---------------------------------------------------------------------------
 # Kernel body. Operand order:

@@ -70,6 +70,11 @@ def main(argv=None):
                          "its HostShardPlan block of worker streams")
     ap.add_argument("--process-index", type=int, default=None,
                     help="this host's index (default: jax.process_index())")
+    ap.add_argument("--vmem-budget-mb", type=float, default=16.0,
+                    help="reject engine configs whose static VMEM "
+                         "estimate (repro.analysis.vmem) exceeds this "
+                         "budget before training starts (0 = report "
+                         "only; default one TPU core's 16 MiB)")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--publish", default=None, metavar="DIR",
                     help="incrementally ALiR-fold the sub-models and "
@@ -86,6 +91,19 @@ def main(argv=None):
                                    ("ring_depth", args.ring_depth))
                  if v is not None}
     args.engine = get_engine(args.engine, **overrides)
+    # fail fast on a config that would blow the VMEM budget at this
+    # run's shape, before any corpus generation or training happens
+    from repro.analysis.vmem import check_vmem_budget, estimate_vmem
+    if args.vmem_budget_mb:
+        est = check_vmem_budget(
+            args.engine, vocab_size=args.vocab, dim=args.dim,
+            negatives=args.negatives, batch=args.batch,
+            budget_bytes=int(args.vmem_budget_mb * 2 ** 20))
+    else:
+        est = estimate_vmem(args.engine, vocab_size=args.vocab,
+                            dim=args.dim, negatives=args.negatives,
+                            batch=args.batch)
+    print(f"vmem: {est.summary()}")
     processes, train_kw = multihost_train_kwargs(args.workers, args.processes)
 
     gen = SemanticCorpusModel.create(vocab_size=args.vocab, seed=0)
