@@ -1,0 +1,111 @@
+"""Elastic resume overhead: what does a mid-epoch resume actually cost?
+
+Resuming a worker from a :class:`repro.elastic.WorkerCursor` pays three
+things on top of the tail it still has to train: loading the checkpoint,
+fast-forwarding the chunk stream to the cursor (the first ``cut`` chunks
+are extracted and discarded through the normal fill path — the price of
+bit-exact replay without persisting raw chunks), and re-jitting the
+single-worker epoch. This bench cuts one worker at the midpoint of a
+one-epoch run, resumes it, and reports:
+
+* ``train_s`` — wall-clock of the resumed run (load + fast-forward +
+  tail training); the number the CI bench-gate regression-tracks as the
+  ``elastic_resume`` row of ``BENCH_wallclock.json``;
+* ``fast_forward_s`` — the stream fast-forward in isolation (build the
+  epoch iterator at ``start_chunk=cut`` and pull the first chunk);
+* ``full_run_s`` — the same worker trained uninterrupted, for the
+  overhead ratio.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import fixture, timer
+from benchmarks.bench_sampling import _cfg, WINDOW, BATCH
+from repro.core.driver import prepare_training
+from repro.elastic import ElasticRunner, WorkerCursor, WorkerStateStore
+
+WORKERS = 4
+
+
+def elastic_resume_row(quick=False, steps=None) -> dict:
+    """One ``BENCH_wallclock.json`` row (keys ``engine``/``train_s`` as
+    the regression gate requires) measuring mid-epoch resume."""
+    gen, corpus, _ = fixture()
+    steps = steps if steps is not None else (6 if quick else 24)
+    setup = prepare_training(
+        corpus, gen.vocab_size, "shuffle", WORKERS, _cfg(),
+        epochs=1, batch_size=BATCH, rate=1.0 / WORKERS, window=WINDOW,
+        max_vocab=None, base_min_count=20, max_steps_per_epoch=steps,
+        steps_per_chunk=max(1, steps // 4),
+        process_index=0, process_count=1)
+    sched = setup.sched
+    cut = max(1, sched.num_chunks // 2)
+
+    with tempfile.TemporaryDirectory() as d_full, \
+            tempfile.TemporaryDirectory() as d_cut:
+        # Uninterrupted reference run of worker 0.
+        full_runner = ElasticRunner(setup, WorkerStateStore(d_full),
+                                    ckpt_every=1)
+        with timer() as t_full:
+            full_runner.run_worker(0, resume=False)
+
+        # Train `cut` chunks, then "die" (drop the runner mid-epoch).
+        r1 = ElasticRunner(setup, WorkerStateStore(d_cut), ckpt_every=1)
+        params, cursor = r1.load_worker(0, resume=False)
+        it = None
+        for _ in range(cut):
+            if it is None:
+                it = r1.chunk_iter(0, cursor)
+            params = r1.train_chunk(params, cursor, next(it))
+            cursor = cursor.advanced(sched)
+            if cursor.chunk == 0:
+                it = None
+            r1._maybe_save(params, cursor, done=cursor.done(1))
+        del r1, params, it
+
+        # The measured quantity: a cold process resumes and finishes.
+        r2 = ElasticRunner(setup, WorkerStateStore(d_cut), ckpt_every=1)
+        with timer() as t_resume:
+            r2.run_worker(0, resume=True)
+
+        # Fast-forward in isolation: iterator built at the cut, first
+        # chunk pulled (extracts+discards the first `cut` chunks).
+        cur = WorkerCursor(worker=0, epoch=0, chunk=cut,
+                           step0=sched.step0(0, cut))
+        with timer() as t_ff:
+            next(r2.chunk_iter(0, cur))
+
+    return {
+        "engine": "elastic_resume",
+        "workers": 1,
+        "steps_per_epoch": int(sched.steps_per_epoch),
+        "batch": BATCH,
+        "cut_chunk": cut,
+        "num_chunks": int(sched.num_chunks),
+        "train_s": t_resume.s,
+        "projected_parallel_s": t_resume.s,
+        "total_s": t_full.s + t_resume.s,
+        "fast_forward_s": t_ff.s,
+        "full_run_s": t_full.s,
+        "resume_over_full": t_resume.s / max(t_full.s, 1e-9),
+    }
+
+
+def main(quick=False):
+    row = elastic_resume_row(quick=quick)
+    print(f"[elastic] resume-at-chunk-{row['cut_chunk']}/"
+          f"{row['num_chunks']}: {row['train_s']:.2f}s "
+          f"(fast-forward {row['fast_forward_s']:.2f}s, uninterrupted "
+          f"run {row['full_run_s']:.2f}s, ratio "
+          f"{row['resume_over_full']:.2f})")
+    return row
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -110,16 +110,21 @@ def run(rate=0.1, epochs=3, quick=False):
     rows["scaling"] = scaling
 
     # Per-engine wall-clock (the bench trajectory CI tracks as JSON),
-    # plus the DMA-bound Zipfian kernel rows and the serving-workload
-    # row the same gate covers
+    # plus the DMA-bound Zipfian kernel rows, the serving-workload row
+    # and the elastic mid-epoch-resume row the same gate covers
     rows["engines"] = (engine_rows(quick=quick) + zipf_kernel_rows(quick=quick)
-                       + [_serve_row(quick=quick)])
+                       + [_serve_row(quick=quick), _elastic_row(quick=quick)])
     return rows
 
 
 def _serve_row(quick=False):
     from benchmarks.bench_serve import serve_row
     return serve_row(quick=quick)
+
+
+def _elastic_row(quick=False, steps=None):
+    from benchmarks.bench_elastic import elastic_resume_row
+    return elastic_resume_row(quick=quick, steps=steps)
 
 
 def zipf_kernel_rows(quick=False):
@@ -209,6 +214,12 @@ def print_engine_rows(rows) -> None:
                   f"{r['mean_batch']:.1f}, cache hit "
                   f"{r['cache_hit_rate']:.2f})")
             continue
+        if r["engine"] == "elastic_resume":
+            print(f"  {r['engine']:18s} {r['train_s']:7.2f}s resume at "
+                  f"chunk {r['cut_chunk']}/{r['num_chunks']} "
+                  f"(fast-forward {r['fast_forward_s']:.2f}s, "
+                  f"uninterrupted {r['full_run_s']:.2f}s)")
+            continue
         extra = ""
         if "hbm_mb_per_step" in r:
             extra = (f", {r['hbm_rows_per_step']} HBM row DMAs "
@@ -265,7 +276,8 @@ if __name__ == "__main__":
         with timer() as t:
             rows = {"engines": engine_rows(quick=a.quick, steps=a.steps)
                     + zipf_kernel_rows(quick=a.quick)
-                    + [_serve_row(quick=a.quick)]}
+                    + [_serve_row(quick=a.quick),
+                       _elastic_row(quick=a.quick, steps=a.steps)]}
         print_engine_rows(rows)
         path = write_engine_json(rows, path=a.out)
         print(f"engine rows ({t.s:.1f}s) → {path}")

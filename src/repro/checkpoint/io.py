@@ -241,11 +241,109 @@ def next_version(artifact_dir: str) -> int:
     """The next free (monotonic) version number: past the manifest's
     latest AND past any orphan table file a crash-between-renames left
     behind — an orphan's number is never reused, so a version string
-    uniquely names one byte-content forever."""
+    uniquely names one byte-content forever. :func:`gc_orphans` removes
+    orphan *files* but records their high-water mark in the manifest
+    (``gc_floor``), so collection does not reopen their numbers."""
     manifest = load_manifest(artifact_dir)
     latest = manifest["latest"] if manifest else 0
+    floor = (manifest or {}).get("gc_floor", 0)
     orphans = _scan_table_versions(artifact_dir)
-    return max([latest] + orphans) + 1
+    return max([latest, floor] + orphans) + 1
+
+
+def gc_orphans(artifact_dir: str) -> list[str]:
+    """Remove crash debris from an artifact directory; returns the
+    removed file names.
+
+    Two kinds of debris can exist, both invisible to readers:
+
+    * ``.tmp-``-prefixed partial writes (a crash mid-:func:`_atomic_write_bytes`);
+    * complete-but-unmanifested table files — a crash landed the table
+      rename but died before the manifest rename ever pointed at it.
+
+    Collection never touches a manifested version, and it records the
+    highest collected orphan version as the manifest's ``gc_floor`` so
+    :func:`next_version` still never reuses a collected number (a
+    version string names one byte-content forever even across a gc).
+    Like publishing itself, gc assumes a single writer per directory —
+    do not run it concurrently with a publisher.
+    """
+    if not os.path.isdir(artifact_dir):
+        return []
+    manifest = load_manifest(artifact_dir)
+    manifested = {e["version"] for e in (manifest or {}).get("versions", [])}
+    removed: list[str] = []
+    orphan_hi = 0
+    for f in sorted(os.listdir(artifact_dir)):
+        path = os.path.join(artifact_dir, f)
+        if f.startswith(_TMP_PREFIX):
+            os.remove(path)
+            removed.append(f)
+        elif f.startswith("table_v") and f.endswith(".npz"):
+            try:
+                v = int(f[len("table_v"):-4])
+            except ValueError:
+                continue
+            if v not in manifested:
+                os.remove(path)
+                removed.append(f)
+                orphan_hi = max(orphan_hi, v)
+    if orphan_hi:
+        manifest = manifest or {"latest": 0, "versions": []}
+        manifest["gc_floor"] = max(manifest.get("gc_floor", 0), orphan_hi)
+        _atomic_write_bytes(
+            os.path.join(artifact_dir, MANIFEST_NAME),
+            lambda tmp: _write_json(tmp, manifest))
+    return removed
+
+
+def publish_arrays(artifact_dir: str, arrays: dict, *,
+                   meta: dict | None = None) -> int:
+    """Atomically publish one version of an arbitrary dict of arrays —
+    the generic core :func:`publish_table` (and the elastic layer's
+    per-worker state checkpoints) build on. Same crash-safety argument:
+    the .npz lands under a temp name and is renamed into place *before*
+    the manifest rename points at it, so a reader (or a crash at any
+    instant) only ever observes the previous complete version. Returns
+    the new version number."""
+    os.makedirs(artifact_dir, exist_ok=True)
+    version = next_version(artifact_dir)
+    arrays = {k: np.asarray(v) for k, v in arrays.items()}
+    table_path = _table_path(artifact_dir, version)
+    _atomic_write_bytes(table_path, lambda tmp: _savez_to(tmp, arrays))
+
+    manifest = load_manifest(artifact_dir) or {"latest": 0, "versions": []}
+    entry = {"version": version, "file": os.path.basename(table_path),
+             "created_unix": time.time(), **(meta or {})}
+    manifest["versions"].append(entry)
+    manifest["latest"] = version
+    _atomic_write_bytes(
+        os.path.join(artifact_dir, MANIFEST_NAME),
+        lambda tmp: _write_json(tmp, manifest))
+    return version
+
+
+def load_arrays(artifact_dir: str, version: int | None = None
+                ) -> tuple[dict, dict, int]:
+    """Load a :func:`publish_arrays` version (``None`` = manifest's
+    latest). Returns ``(arrays, entry_meta, version)``; raises
+    ``FileNotFoundError`` when nothing is published — orphan files are
+    not loadable state."""
+    manifest = load_manifest(artifact_dir)
+    if manifest is None or not manifest["versions"]:
+        raise FileNotFoundError(
+            f"no published version in {artifact_dir!r} (no {MANIFEST_NAME})")
+    by_version = {e["version"]: e for e in manifest["versions"]}
+    version = manifest["latest"] if version is None else version
+    if version not in by_version:
+        raise FileNotFoundError(
+            f"version {version} not in manifest (has {sorted(by_version)})")
+    entry = by_version[version]
+    with np.load(os.path.join(artifact_dir, entry["file"]),
+                 allow_pickle=False) as data:
+        arrays = {k: data[k] for k in data.files}
+    meta = {k: v for k, v in entry.items() if k not in ("version", "file")}
+    return arrays, meta, version
 
 
 def publish_table(
@@ -271,31 +369,19 @@ def publish_table(
     supported (single merge process per artifact dir, by design — the
     merge is the system's one synchronization point).
     """
-    os.makedirs(artifact_dir, exist_ok=True)
-    version = next_version(artifact_dir)
     arrays = {"emb": np.asarray(emb), "valid": np.asarray(valid)}
     for k, v in (("word_ids", word_ids), ("worker_ids", worker_ids),
                  ("mask", mask), ("transforms", transforms),
                  ("models", models)):
         if v is not None:
             arrays[k] = np.asarray(v)
-    table_path = _table_path(artifact_dir, version)
-    _atomic_write_bytes(table_path, lambda tmp: _savez_to(tmp, arrays))
-
-    manifest = load_manifest(artifact_dir) or {"latest": 0, "versions": []}
-    entry = {"version": version, "file": os.path.basename(table_path),
-             "created_unix": time.time(),
-             "rows": int(arrays["emb"].shape[0]),
-             "dim": int(arrays["emb"].shape[1]),
-             "n_models": int(arrays["mask"].shape[0]) if mask is not None
-             else None,
-             **(meta or {})}
-    manifest["versions"].append(entry)
-    manifest["latest"] = version
-    _atomic_write_bytes(
-        os.path.join(artifact_dir, MANIFEST_NAME),
-        lambda tmp: _write_json(tmp, manifest))
-    return version
+    return publish_arrays(
+        artifact_dir, arrays,
+        meta={"rows": int(arrays["emb"].shape[0]),
+              "dim": int(arrays["emb"].shape[1]),
+              "n_models": int(arrays["mask"].shape[0]) if mask is not None
+              else None,
+              **(meta or {})})
 
 
 def _savez_to(path: str, arrays: dict) -> None:
@@ -317,22 +403,52 @@ def load_table(artifact_dir: str, version: int | None = None) -> ServableTable:
     ``FileNotFoundError`` if nothing has been published (or the named
     version was never *manifested* — orphan files are not loadable
     state)."""
-    manifest = load_manifest(artifact_dir)
-    if manifest is None or not manifest["versions"]:
-        raise FileNotFoundError(
-            f"no published table in {artifact_dir!r} (no {MANIFEST_NAME})")
-    by_version = {e["version"]: e for e in manifest["versions"]}
-    version = manifest["latest"] if version is None else version
-    if version not in by_version:
-        raise FileNotFoundError(
-            f"version {version} not in manifest (has "
-            f"{sorted(by_version)})")
-    entry = by_version[version]
-    with np.load(os.path.join(artifact_dir, entry["file"]),
-                 allow_pickle=False) as data:
-        arrays = {k: data[k] for k in data.files}
-    meta = {k: v for k, v in entry.items() if k not in ("version", "file")}
+    arrays, meta, version = load_arrays(artifact_dir, version)
     return ServableTable(
         emb=arrays["emb"], valid=arrays["valid"].astype(bool),
         version=version, meta=meta,
         **{k: arrays.get(k) for k in _OPTIONAL_KEYS})
+
+
+# ---------------------------------------------------------------------------
+# Per-worker elastic training state (table shards + cursor).
+# ---------------------------------------------------------------------------
+_WORKER_DIR_FMT = "worker_{:04d}"
+
+
+def worker_state_dir(state_dir: str, worker: int) -> str:
+    """The per-worker artifact directory under an elastic state root —
+    each worker gets its own versioned manifest, so workers checkpoint
+    concurrently without sharing a writer."""
+    return os.path.join(state_dir, _WORKER_DIR_FMT.format(worker))
+
+
+def publish_worker_state(state_dir: str, worker: int, params: dict,
+                         cursor: dict) -> int:
+    """Atomically checkpoint one worker's training state: its table
+    shards (``params`` — a flat dict of arrays, typically ``{"W", "C"}``)
+    plus its :class:`~repro.elastic.cursor.WorkerCursor` as manifest
+    metadata. Same publish-then-manifest crash ordering as
+    :func:`publish_table`: a kill at any instant leaves the previous
+    complete state loadable and never a torn one. Returns the state
+    version number."""
+    return publish_arrays(
+        worker_state_dir(state_dir, worker),
+        {k: np.asarray(v) for k, v in params.items()},
+        meta={"worker": int(worker),
+              "cursor": {k: int(v) for k, v in cursor.items()}})
+
+
+def load_worker_state(state_dir: str, worker: int,
+                      version: int | None = None
+                      ) -> tuple[dict, dict, int] | None:
+    """Load a worker's last complete checkpoint: ``(params, cursor,
+    version)``, or ``None`` when the worker has never checkpointed (a
+    fresh start). Readers only ever see manifested versions — a crash
+    mid-checkpoint is invisible."""
+    wdir = worker_state_dir(state_dir, worker)
+    try:
+        arrays, meta, version = load_arrays(wdir, version)
+    except FileNotFoundError:
+        return None
+    return arrays, dict(meta["cursor"]), version

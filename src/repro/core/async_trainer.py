@@ -119,6 +119,8 @@ class AsyncShardTrainer:
     engine: object = "sparse"
     plan: object = None
     _jitted: object = field(default=None, init=False, repr=False, compare=False)
+    _jitted_single: object = field(default=None, init=False, repr=False,
+                                   compare=False)
 
     def __post_init__(self):
         self.engine = get_engine(self.engine)
@@ -205,6 +207,26 @@ class AsyncShardTrainer:
         keys = jax.random.split(key, self.num_workers)
         step0 = jnp.full((self.num_workers,), step0, dtype=jnp.int32)
         return self._jit_epoch()(params, centers, contexts, neg_table, keys, step0)
+
+    def worker_epoch(self, params, centers, contexts, neg_table, key, step0=0):
+        """One worker's chunk, un-vmapped: params (V,d) pytree;
+        centers/contexts (S,B); neg_table the worker's own (V,) CDF or
+        {'prob','alias'} pair; ``key`` the exact per-(worker, chunk) key
+        the stacked epoch would have split out for it
+        (:func:`repro.core.driver.worker_chunk_key`).
+
+        This is the elastic-training path: because every worker runs the
+        same single-worker jit regardless of which host executes it or
+        how many peers are alive, kill/resume/steal schedules are
+        bit-identical to the uninterrupted elastic run by construction
+        (vmapped and un-vmapped executions of the same program are *not*
+        guaranteed bit-identical, so elasticity equivalence is defined
+        against this path, not against :meth:`epoch`)."""
+        if self._jitted_single is None:
+            object.__setattr__(self, "_jitted_single",
+                               jax.jit(self._epoch_fn()))
+        return self._jitted_single(params, centers, contexts, neg_table,
+                                   key, jnp.int32(step0))
 
     def lower_epoch(self, steps: int, batch: int):
         """Lower the sharded epoch for the dry-run, ShapeDtypeStruct only."""

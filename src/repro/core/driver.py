@@ -65,6 +65,19 @@ def _epoch_key(seed: int, stream: int, epoch: int) -> jax.Array:
         jax.random.fold_in(jax.random.PRNGKey(seed), stream), epoch)
 
 
+def worker_chunk_key(seed: int, epoch: int, chunk: int, num_workers: int,
+                     worker: int) -> jax.Array:
+    """The exact PRNG key worker ``worker`` consumes for chunk ``chunk``
+    of ``epoch`` inside :func:`train_submodels`'s loop (epoch-stream key
+    folded with the chunk index, then split over workers). The elastic
+    runner replays this derivation so a worker resumed from a
+    :class:`repro.elastic.WorkerCursor` — possibly on a different host —
+    draws bit-identical negatives and step keys."""
+    ep_key = _epoch_key(seed, _STREAM_ASYNC_DATA, epoch)
+    return jax.random.split(
+        jax.random.fold_in(ep_key, chunk), num_workers)[worker]
+
+
 def _epoch_rng(seed: int, stream: int, epoch: int) -> np.random.Generator:
     """numpy counterpart of :func:`_epoch_key` (a domain-tagged
     SeedSequence: distinct (seed, stream, epoch) → distinct streams,
@@ -154,6 +167,105 @@ def _neg_tables(worker_vocabs: list[Vocab], kind: str = "cdf",
 
 # ---------------------------------------------------------------------------
 @dataclass
+class TrainingSetup:
+    """Everything the train loop needs, derived once from the corpus.
+
+    A pure function of (corpus, strategy, seed, …) — see
+    :func:`prepare_training` — so the stacked trainer
+    (:func:`train_submodels`) and the per-worker elastic runner
+    (:mod:`repro.elastic`) start from identical vocabularies, noise
+    tables, pair streams and step schedules."""
+
+    cfg: SGNSConfig              # vocab_size bound to the union vocab
+    plan: HostShardPlan
+    engine: object               # resolved UpdateEngine
+    streams: list                # per-worker WorkerStream, union id space
+    union_vocab: Vocab
+    mask: np.ndarray             # (n, V_union) presence mask
+    neg_table: object            # stacked per-worker noise tables
+    sched: object                # EpochSchedule
+    batch_size: int
+    sentences_per_block: int
+    seed: int
+    epochs: int
+    vocab_s: float               # wall-clock of the vocab/noise build
+
+
+def prepare_training(
+    corpus: Corpus,
+    raw_vocab_size: int,
+    strategy: str,
+    num_workers: int,
+    cfg: SGNSConfig,
+    *,
+    epochs: int = 3,
+    batch_size: int = 512,
+    rate: float | None = None,
+    window: int | None = None,
+    subsample_t: float | None = 1e-4,
+    max_vocab: int | None = 300_000,
+    base_min_count: int = 100,
+    seed: int = 0,
+    max_steps_per_epoch: int | None = None,
+    engine="sparse",
+    steps_per_chunk: int = 128,
+    sentences_per_block: int = 1024,
+    process_index: int | None = None,
+    process_count: int | None = None,
+) -> TrainingSetup:
+    """Divide-phase setup shared by the stacked and elastic trainers:
+    worker vocabularies (projected into the union id space), stacked
+    noise tables in the engine's layout, per-worker pair streams, and
+    the epoch schedule sized from a streamed epoch-0 pair count."""
+    rate = rate if rate is not None else 1.0 / num_workers
+    window = window if window is not None else cfg.window
+    engine = get_engine(engine)
+    plan = HostShardPlan.for_runtime(num_workers, process_index=process_index,
+                                     process_count=process_count)
+
+    t0 = time.perf_counter()
+    worker_vocabs, union, mask = build_worker_vocabs(
+        corpus, raw_vocab_size, strategy, num_workers, rate,
+        max_vocab=max_vocab, base_min_count=base_min_count, seed=seed)
+    cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": union.size})
+    neg_table = _neg_tables(worker_vocabs, kind=engine.table_kind)
+    vocab_s = time.perf_counter() - t0
+
+    # Pair streams per worker (worker vocab projected into union ids).
+    streams = []
+    for w in range(num_workers):
+        s = make_worker_streams(
+            corpus, worker_vocabs[w], num_workers=num_workers, strategy=strategy,
+            rate=rate, window=window, subsample_t=subsample_t, seed=seed)[w]
+        streams.append(s)
+
+    # Size steps/epoch from a streamed epoch-0 count (O(block) memory —
+    # no epoch of pairs is ever materialized; kept equal across workers,
+    # shorter streams wrap, as word2vec re-iterates its shard). The count
+    # stops as soon as the step cap is known to be reached. Counted over
+    # ALL workers on every host: the one-time O(epoch) count is
+    # replicated so the schedule is a pure function of (corpus, seed) —
+    # no inter-host min-reduction, and every host derives the identical
+    # step plan independently.
+    count_cap = (None if max_steps_per_epoch is None
+                 else max_steps_per_epoch * batch_size)
+    min_pairs = min(s.count_pairs(0, sentences_per_block, max_pairs=count_cap)
+                    for s in streams)
+    if min_pairs == 0:
+        raise ValueError("a worker drew an empty sample")
+    # One consistent steps/chunks/total_steps derivation (core.schedule):
+    # the LR horizon and the chunk loop can't drift apart.
+    sched = plan_epoch(min_pairs, batch_size, epochs, steps_per_chunk,
+                       max_steps_per_epoch=max_steps_per_epoch)
+
+    return TrainingSetup(
+        cfg=cfg, plan=plan, engine=engine, streams=streams,
+        union_vocab=union, mask=mask, neg_table=neg_table, sched=sched,
+        batch_size=batch_size, sentences_per_block=sentences_per_block,
+        seed=seed, epochs=epochs, vocab_s=vocab_s)
+
+
+@dataclass
 class PipelineResult:
     strategy: str
     num_workers: int
@@ -196,9 +308,6 @@ def train_submodels(
     count can be simulated in one process (``tests/test_multihost.py``);
     with ``process_count == 1`` the path is bit-identical to the
     single-host stream."""
-    rate = rate if rate is not None else 1.0 / num_workers
-    window = window if window is not None else cfg.window
-    engine = get_engine(engine)
     plan = HostShardPlan.for_runtime(num_workers, process_index=process_index,
                                      process_count=process_count)
     multihost = plan.process_count > 1
@@ -209,40 +318,18 @@ def train_submodels(
                 "backend='shard_map' and a mesh")
         plan.validate_for_mesh(mesh)
 
-    t0 = time.perf_counter()
-    worker_vocabs, union, mask = build_worker_vocabs(
-        corpus, raw_vocab_size, strategy, num_workers, rate,
-        max_vocab=max_vocab, base_min_count=base_min_count, seed=seed)
-    cfg = SGNSConfig(**{**cfg.__dict__, "vocab_size": union.size})
-    neg_table = _neg_tables(worker_vocabs, kind=engine.table_kind)
-    t_vocab = time.perf_counter() - t0
-
-    # Pair streams per worker (worker vocab projected into union ids).
-    streams = []
-    for w in range(num_workers):
-        s = make_worker_streams(
-            corpus, worker_vocabs[w], num_workers=num_workers, strategy=strategy,
-            rate=rate, window=window, subsample_t=subsample_t, seed=seed)[w]
-        streams.append(s)
-
-    # Size steps/epoch from a streamed epoch-0 count (O(block) memory —
-    # no epoch of pairs is ever materialized; kept equal across workers,
-    # shorter streams wrap, as word2vec re-iterates its shard). The count
-    # stops as soon as the step cap is known to be reached. Counted over
-    # ALL workers on every host: the one-time O(epoch) count is
-    # replicated so the schedule is a pure function of (corpus, seed) —
-    # no inter-host min-reduction, and every host derives the identical
-    # step plan independently.
-    count_cap = (None if max_steps_per_epoch is None
-                 else max_steps_per_epoch * batch_size)
-    min_pairs = min(s.count_pairs(0, sentences_per_block, max_pairs=count_cap)
-                    for s in streams)
-    if min_pairs == 0:
-        raise ValueError("a worker drew an empty sample")
-    # One consistent steps/chunks/total_steps derivation (core.schedule):
-    # the LR horizon and the chunk loop can't drift apart.
-    sched = plan_epoch(min_pairs, batch_size, epochs, steps_per_chunk,
-                       max_steps_per_epoch=max_steps_per_epoch)
+    setup = prepare_training(
+        corpus, raw_vocab_size, strategy, num_workers, cfg,
+        epochs=epochs, batch_size=batch_size, rate=rate, window=window,
+        subsample_t=subsample_t, max_vocab=max_vocab,
+        base_min_count=base_min_count, seed=seed,
+        max_steps_per_epoch=max_steps_per_epoch, engine=engine,
+        steps_per_chunk=steps_per_chunk,
+        sentences_per_block=sentences_per_block,
+        process_index=process_index, process_count=process_count)
+    cfg, engine, sched = setup.cfg, setup.engine, setup.sched
+    streams, union, mask = setup.streams, setup.union_vocab, setup.mask
+    neg_table, t_vocab = setup.neg_table, setup.vocab_s
 
     trainer = AsyncShardTrainer(
         cfg=cfg, num_workers=num_workers, total_steps=sched.total_steps,
@@ -305,9 +392,16 @@ def run_pipeline(
 ) -> PipelineResult:
     cfg = cfg or SGNSConfig(vocab_size=0, dim=64)
     res = train_submodels(corpus, raw_vocab_size, strategy, num_workers, cfg, **kw)
+    return apply_merges(res, merge_methods, out_dim=cfg.dim)
+
+
+def apply_merges(res: PipelineResult, merge_methods, out_dim: int) -> PipelineResult:
+    """Merge-phase tail shared by :func:`run_pipeline` and the elastic
+    launcher: fold the stacked sub-models with each requested method,
+    recording wall-clock per method in ``res.timings``."""
     for method in merge_methods:
         t0 = time.perf_counter()
-        emb, valid = merge_models(res.stacked, method, out_dim=cfg.dim,
+        emb, valid = merge_models(res.stacked, method, out_dim=out_dim,
                                   key=jax.random.PRNGKey(42))
         jax.block_until_ready(emb)
         res.merged[method] = (np.asarray(emb), np.asarray(valid))

@@ -329,16 +329,42 @@ class IncrementalAlirMerger:
     * ``valid`` only covers words present in some *arrived* sub-model:
       an early fold is a complete, servable table for its coverage, and
       coverage grows monotonically with arrivals.
+
+    **Merge-from-whatever-finished** (elastic training): workers on
+    preempted hosts may never arrive at all. ``quorum`` names the
+    minimum number of arrived sub-models a :meth:`final` merge requires;
+    ``deadline`` (seconds on ``clock``, measured from construction)
+    closes the arrival window — an :meth:`add` after the deadline is
+    recorded in :attr:`late_workers` and **not folded**, so the final
+    table is a pure function of the on-time subset. A quorum merge over
+    the survivors is bit-identical to the batch :func:`merge_alir` over
+    that subset's stack (``tests/test_elastic.py``), and the presence
+    masks already say which words the missing workers would have
+    covered — serving falls back to :func:`reconstruct_missing` /
+    OOV exactly as for any absent row.
     """
 
     def __init__(self, *, init: str = "pca", max_iters: int = 10,
                  tol: float = 1e-4, key: jax.Array | None = None,
-                 warm_start: bool = True):
+                 warm_start: bool = True, quorum: int | None = None,
+                 deadline: float | None = None, clock=None):
+        if quorum is not None and quorum < 1:
+            raise ValueError(f"quorum must be >= 1, got {quorum}")
+        if deadline is not None and deadline < 0:
+            raise ValueError(f"deadline must be >= 0, got {deadline}")
         self.init = init
         self.max_iters = max_iters
         self.tol = tol
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.warm_start = warm_start
+        self.quorum = quorum
+        self.deadline = deadline
+        # injectable clock so deadline behaviour is deterministic in
+        # tests (default: monotonic seconds since construction)
+        import time as _time
+        self._clock = clock if clock is not None else _time.monotonic
+        self._t0 = self._clock()
+        self.late_workers: list[int] = []
         self._models: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._Y: jax.Array | None = None
 
@@ -351,6 +377,19 @@ class IncrementalAlirMerger:
     def n_folded(self) -> int:
         """Number of sub-models that have arrived so far."""
         return len(self._models)
+
+    @property
+    def quorum_met(self) -> bool:
+        """Whether enough sub-models have arrived for a :meth:`final`
+        merge (always ``True`` without a quorum)."""
+        return self.quorum is None or self.n_folded >= self.quorum
+
+    @property
+    def deadline_passed(self) -> bool:
+        """Whether the arrival window has closed (``False`` without a
+        deadline)."""
+        return (self.deadline is not None
+                and self._clock() - self._t0 > self.deadline)
 
     def stacked(self) -> StackedModels:
         """The arrived sub-models restacked in canonical worker order."""
@@ -373,7 +412,14 @@ class IncrementalAlirMerger:
             fold: re-fold now and return the :class:`FoldResult`;
                 ``fold=False`` just registers (batch several arrivals
                 into one fold with a later :meth:`fold` call).
+
+        Returns ``None`` without folding when the merger's ``deadline``
+        has passed — the straggler is recorded in :attr:`late_workers`
+        and the consensus stays a function of the on-time subset.
         """
+        if self.deadline_passed:
+            self.late_workers.append(int(worker_id))
+            return None
         if worker_id in self._models:
             raise ValueError(f"worker {worker_id} already folded in")
         model = np.asarray(model)
@@ -406,6 +452,22 @@ class IncrementalAlirMerger:
         self._Y = Y
         return FoldResult(worker_ids=self.worker_ids, Y=Y, valid=valid,
                           disps=disps)
+
+    def final(self, *, require_quorum: bool = True) -> FoldResult:
+        """The merge-from-whatever-finished endpoint: the canonical cold
+        fold over every sub-model that arrived (on time) — bit-identical
+        to batch :func:`merge_alir` over that subset's stack, in
+        canonical worker order, regardless of arrival order.
+
+        Raises ``RuntimeError`` when a ``quorum`` is configured and
+        unmet (pass ``require_quorum=False`` to fold a below-quorum
+        subset anyway, e.g. for a best-effort table while paging the
+        operator)."""
+        if require_quorum and not self.quorum_met:
+            raise RuntimeError(
+                f"quorum not met: {self.n_folded} sub-model(s) arrived, "
+                f"quorum is {self.quorum}")
+        return self.fold(warm=False)
 
 
 # ---------------------------------------------------------------------------

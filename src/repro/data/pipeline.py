@@ -201,10 +201,30 @@ class PairChunkStream:
         return self.batch_size * self.steps_per_chunk
 
     def chunks(
-        self, epoch: int, num_chunks: int | None = None
+        self, epoch: int, num_chunks: int | None = None,
+        start_chunk: int = 0,
     ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
-        """Yield ``num_chunks`` (centers, contexts) arrays of shape
-        (n_workers, steps_per_chunk, batch); infinite when ``None``."""
+        """Yield (centers, contexts) arrays of shape
+        (n_workers, steps_per_chunk, batch) for chunk indices
+        ``[start_chunk, num_chunks)`` of this epoch's stream (infinite
+        tail when ``num_chunks`` is ``None``).
+
+        ``start_chunk`` is the elastic-resume fast-forward: the first
+        ``start_chunk`` chunks are *extracted and discarded* through
+        exactly the buffer-fill path a yielded chunk takes (same
+        generators, same wrap-arounds, same slicing), so the yielded
+        tail is bit-identical to the corresponding suffix of the
+        uninterrupted ``chunks(epoch, num_chunks)`` stream — a resumed
+        worker replays its stream exactly. The fast-forward costs pair
+        *extraction* only (no output assembly, no device transfer);
+        ``benchmarks/bench_elastic.py`` tracks that overhead.
+        """
+        if start_chunk < 0:
+            raise ValueError(f"start_chunk must be >= 0, got {start_chunk}")
+        if num_chunks is not None and start_chunk > num_chunks:
+            raise ValueError(
+                f"start_chunk {start_chunk} past the stream's "
+                f"num_chunks {num_chunks}")
         n, need = self.num_workers, self.chunk_pairs
         gens = [s.pair_blocks(epoch, self.sentences_per_block)
                 for s in self.streams]
@@ -213,33 +233,45 @@ class PairChunkStream:
         have = [0] * n
         pass_pairs = [0] * n   # pairs seen since this worker's last wrap
 
+        def fill_and_cut(w: int, centers=None, contexts=None) -> None:
+            # Advance worker w's buffers by exactly one chunk's worth of
+            # pairs; write the chunk rows out only when asked. Skipped
+            # (fast-forward) and yielded chunks share this path, which
+            # is what makes the resume replay bit-exact.
+            while have[w] < need:
+                try:
+                    c, x = next(gens[w])
+                except StopIteration:
+                    if pass_pairs[w] == 0:
+                        raise ValueError(
+                            f"worker {w} epoch {epoch}: empty sample")
+                    pass_pairs[w] = 0
+                    gens[w] = self.streams[w].pair_blocks(
+                        epoch, self.sentences_per_block)
+                    continue
+                bufs[w].append(c)
+                xufs[w].append(x)
+                have[w] += len(c)
+                pass_pairs[w] += len(c)
+            flat_c = np.concatenate(bufs[w])
+            flat_x = np.concatenate(xufs[w])
+            if centers is not None:
+                centers[w] = flat_c[:need]
+                contexts[w] = flat_x[:need]
+            bufs[w] = [flat_c[need:]]
+            xufs[w] = [flat_x[need:]]
+            have[w] -= need
+
         done = 0
+        while done < start_chunk:
+            for w in range(n):
+                fill_and_cut(w)
+            done += 1
         while num_chunks is None or done < num_chunks:
             centers = np.empty((n, need), dtype=np.int32)
             contexts = np.empty((n, need), dtype=np.int32)
             for w in range(n):
-                while have[w] < need:
-                    try:
-                        c, x = next(gens[w])
-                    except StopIteration:
-                        if pass_pairs[w] == 0:
-                            raise ValueError(
-                                f"worker {w} epoch {epoch}: empty sample")
-                        pass_pairs[w] = 0
-                        gens[w] = self.streams[w].pair_blocks(
-                            epoch, self.sentences_per_block)
-                        continue
-                    bufs[w].append(c)
-                    xufs[w].append(x)
-                    have[w] += len(c)
-                    pass_pairs[w] += len(c)
-                flat_c = np.concatenate(bufs[w])
-                flat_x = np.concatenate(xufs[w])
-                centers[w] = flat_c[:need]
-                contexts[w] = flat_x[:need]
-                bufs[w] = [flat_c[need:]]
-                xufs[w] = [flat_x[need:]]
-                have[w] -= need
+                fill_and_cut(w, centers, contexts)
             shape = (n, self.steps_per_chunk, self.batch_size)
             yield centers.reshape(shape), contexts.reshape(shape)
             done += 1
@@ -392,9 +424,28 @@ def prefetch_chunks(iterator, depth: int = 2, to_device: bool = True):
 
     ``depth`` bounds the queue, so at most ``depth`` chunks are ever
     resident beyond the one being consumed.
+
+    Producer-thread lifecycle guarantees (regression-tested in
+    ``tests/test_streaming.py``):
+
+    * an exception anywhere in the producer (extraction or the device
+      transfer) is delivered to the consumer and re-raised — including
+      when the queue is full at the time it is raised;
+    * abandoning the generator (``close()`` / ``break`` / consumer
+      exception) releases and **joins** the producer thread — it never
+      outlives the generator blocked on the bounded queue;
+    * a producer thread that dies without delivering its sentinel or
+      exception surfaces as ``RuntimeError`` instead of hanging the
+      consumer's blocking ``get`` forever.
     """
     if depth < 1:
         raise ValueError("prefetch depth must be >= 1")
+    # validation above is eager (plain function); the lazy generator
+    # below owns the thread lifecycle
+    return _prefetch_gen(iterator, depth, to_device)
+
+
+def _prefetch_gen(iterator, depth: int, to_device: bool):
     import jax.numpy as jnp
 
     q: queue.Queue = queue.Queue(maxsize=depth)
@@ -423,11 +474,23 @@ def prefetch_chunks(iterator, depth: int = 2, to_device: bool = True):
         except BaseException as e:  # surface extraction errors to the consumer
             put(e)
 
-    threading.Thread(target=produce, daemon=True,
-                     name="prefetch_chunks").start()
+    thread = threading.Thread(target=produce, daemon=True,
+                              name="prefetch_chunks")
+    thread.start()
     try:
         while True:
-            item = q.get()
+            # Bounded get + liveness check: if the producer thread dies
+            # without enqueuing its sentinel/exception (interpreter
+            # teardown, thread killed), the consumer must error out, not
+            # block forever on an empty queue.
+            try:
+                item = q.get(timeout=0.5)
+            except queue.Empty:
+                if not thread.is_alive():
+                    raise RuntimeError(
+                        "prefetch_chunks producer thread died without "
+                        "delivering a chunk, sentinel or exception")
+                continue
             if item is _SENTINEL:
                 return
             if isinstance(item, BaseException):
@@ -435,6 +498,16 @@ def prefetch_chunks(iterator, depth: int = 2, to_device: bool = True):
             yield item
     finally:
         stop.set()
+        # Unblock a producer waiting on the full queue, then reap the
+        # thread: at most one more item can land after the drain (put()
+        # re-checks `stop` before each attempt), so join cannot block on
+        # queue capacity.
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        thread.join(timeout=5.0)
 
 
 def stacked_pair_batches(

@@ -1,0 +1,22 @@
+"""Elastic, preemption-tolerant training (ROADMAP: elasticity).
+
+Deterministic mid-epoch checkpoint/resume (:mod:`~repro.elastic.cursor`,
+:mod:`~repro.elastic.store`), seeded fault injection over the in-process
+multi-host simulation (:mod:`~repro.elastic.faults`), per-worker elastic
+training with work-stealing (:mod:`~repro.elastic.runner`), and — via
+:class:`repro.core.merge.IncrementalAlirMerger`'s quorum/deadline mode —
+merge-from-whatever-finished.
+"""
+
+from repro.elastic.cursor import WorkerCursor
+from repro.elastic.faults import FaultEvent, FaultSchedule
+from repro.elastic.runner import (
+    ElasticRunner, SimulationResult, simulate_elastic,
+    train_submodels_elastic)
+from repro.elastic.store import WorkerStateStore
+
+__all__ = [
+    "WorkerCursor", "WorkerStateStore", "FaultEvent", "FaultSchedule",
+    "ElasticRunner", "SimulationResult", "simulate_elastic",
+    "train_submodels_elastic",
+]

@@ -75,6 +75,20 @@ def main(argv=None):
                          "estimate (repro.analysis.vmem) exceeds this "
                          "budget before training starts (0 = report "
                          "only; default one TPU core's 16 MiB)")
+    ap.add_argument("--elastic-state", default=None, metavar="DIR",
+                    help="train preemption-tolerantly: each worker "
+                         "checkpoints (tables + cursor) to DIR and a "
+                         "re-run of the same command resumes every "
+                         "worker from its last checkpoint, bit-identical "
+                         "to the uninterrupted elastic run "
+                         "(single-process; see docs/ARCHITECTURE.md "
+                         "§Elasticity)")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="elastic checkpoint cadence in chunks, anchored "
+                         "to stream position (default 1)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="with --elastic-state: ignore existing "
+                         "checkpoints and train from scratch")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--publish", default=None, metavar="DIR",
                     help="incrementally ALiR-fold the sub-models and "
@@ -112,13 +126,26 @@ def main(argv=None):
     cfg = SGNSConfig(vocab_size=0, dim=args.dim, window=args.window,
                      negatives=args.negatives)
 
-    res = run_pipeline(
-        corpus, args.vocab, strategy=args.strategy, num_workers=args.workers,
-        cfg=cfg, epochs=args.epochs, batch_size=args.batch, rate=args.rate,
-        window=args.window, max_vocab=None, base_min_count=20,
-        merge_methods=tuple(args.merge), engine=args.engine,
-        process_index=args.process_index, process_count=processes,
-        **train_kw)
+    if args.elastic_state:
+        from repro.core.driver import apply_merges
+        from repro.elastic import train_submodels_elastic
+
+        res = train_submodels_elastic(
+            corpus, args.vocab, args.strategy, args.workers, cfg,
+            state_dir=args.elastic_state, resume=not args.no_resume,
+            ckpt_every=args.ckpt_every, epochs=args.epochs,
+            batch_size=args.batch, rate=args.rate, window=args.window,
+            max_vocab=None, base_min_count=20, engine=args.engine)
+        res = apply_merges(res, tuple(args.merge), out_dim=cfg.dim)
+    else:
+        res = run_pipeline(
+            corpus, args.vocab, strategy=args.strategy,
+            num_workers=args.workers, cfg=cfg, epochs=args.epochs,
+            batch_size=args.batch, rate=args.rate,
+            window=args.window, max_vocab=None, base_min_count=20,
+            merge_methods=tuple(args.merge), engine=args.engine,
+            process_index=args.process_index, process_count=processes,
+            **train_kw)
     print(f"strategy={args.strategy} workers={args.workers} "
           f"engine={args.engine.describe()} "
           f"train={res.timings['train_s']:.1f}s "

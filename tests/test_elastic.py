@@ -1,0 +1,550 @@
+"""Elastic preemption-tolerant training.
+
+Four claims under test (docs/ARCHITECTURE.md §Elasticity):
+
+1. **Cursor determinism** — a worker resumed from a
+   :class:`WorkerCursor` at any chunk boundary replays its pair chunks
+   and negative-draw keys bit-exactly (deterministic suffix tests here;
+   arbitrary cut points under hypothesis in the property section).
+2. **Crash safety** — a kill between the table rename and the manifest
+   rename leaves readers on the previous version, never a torn one, and
+   ``gc_orphans`` sweeps the debris without reopening version numbers.
+3. **Quorum merge** — ``IncrementalAlirMerger.final()`` over whatever
+   arrived is bit-identical to batch ``merge_alir`` over that subset.
+4. **Fault equivalence** — seeded kill/restart/delay/steal schedules over
+   the in-process multi-host simulation produce final tables
+   bit-identical to the uninterrupted elastic run (quick fixed schedules
+   in tier 1; the seeded matrix under ``-m chaos``).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckio
+from repro.core import merge as mg
+from repro.core.driver import prepare_training, worker_chunk_key
+from repro.core.schedule import plan_epoch
+from repro.core.sgns import SGNSConfig
+from repro.data.corpus import SemanticCorpusModel
+from repro.data.pipeline import PairChunkStream, make_worker_streams
+from repro.data.vocab import build_vocab
+from repro.elastic import (
+    ElasticRunner, FaultEvent, FaultSchedule, WorkerCursor,
+    WorkerStateStore, simulate_elastic)
+
+N_WORKERS = 4
+EPOCHS = 2
+
+
+@pytest.fixture(scope="module")
+def world():
+    gen = SemanticCorpusModel.create(vocab_size=150, seed=0)
+    return gen.generate(num_sentences=500, seed=1)
+
+
+@pytest.fixture(scope="module")
+def setup(world):
+    cfg = SGNSConfig(vocab_size=0, dim=8, negatives=2)
+    s = prepare_training(world, 150, "random", N_WORKERS, cfg,
+                         epochs=EPOCHS, batch_size=16,
+                         max_steps_per_epoch=8, steps_per_chunk=2,
+                         seed=3, subsample_t=None,
+                         process_index=0, process_count=1)
+    assert s.sched.num_chunks >= 3, s.sched   # mid-epoch cuts must exist
+    return s
+
+
+@pytest.fixture(scope="module")
+def baseline(setup, tmp_path_factory):
+    """The uninterrupted elastic run — the bit-identity reference."""
+    store = WorkerStateStore(str(tmp_path_factory.mktemp("baseline")))
+    return ElasticRunner(setup, store, ckpt_every=1).run_all()
+
+
+def assert_tables_equal(a: dict, b: dict, ctx=""):
+    for k in ("W", "C"):
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{ctx} key={k}")
+
+
+# ======================================================================
+# 1. Cursors
+# ======================================================================
+def test_cursor_progression_wraps_epochs():
+    sched = plan_epoch(min_pairs=64, batch_size=4, epochs=2,
+                       steps_per_chunk=4)          # 4 chunks/epoch
+    cur = WorkerCursor.start(worker=2)
+    seen = []
+    while not cur.done(2):
+        seen.append((cur.epoch, cur.chunk, cur.step0))
+        cur.validate(sched)
+        cur = cur.advanced(sched)
+    assert seen == [(e, c, e * sched.steps_per_epoch + c * sched.chunk_steps)
+                    for e in range(2) for c in range(sched.num_chunks)]
+    assert cur.done(2) and cur.worker == 2
+
+
+def test_cursor_meta_roundtrip_and_validation():
+    sched = plan_epoch(64, 4, 2, 4)
+    cur = WorkerCursor(worker=1, epoch=1, chunk=2,
+                       step0=sched.step0(1, 2))
+    assert WorkerCursor.from_meta(cur.to_meta()) == cur
+    cur.validate(sched)
+    with pytest.raises(ValueError, match="different schedule"):
+        WorkerCursor(worker=1, epoch=1, chunk=2, step0=5).validate(sched)
+    with pytest.raises(ValueError, match="out of range"):
+        WorkerCursor(worker=1, epoch=0, chunk=99, step0=0).validate(sched)
+    with pytest.raises(ValueError, match="non-negative"):
+        WorkerCursor(worker=-1, epoch=0, chunk=0, step0=0)
+
+
+# ======================================================================
+# 1b. Stream fast-forward + key replay (deterministic suffix checks)
+# ======================================================================
+def test_start_chunk_suffix_bit_exact(setup):
+    """chunks(epoch, N, start_chunk=c) must equal the suffix of the
+    uninterrupted stream for every chunk boundary c — the stream half of
+    mid-epoch resume."""
+    sched = setup.sched
+    for w in (0, N_WORKERS - 1):
+        stream = PairChunkStream(
+            [setup.streams[w]], batch_size=setup.batch_size,
+            steps_per_chunk=sched.chunk_steps,
+            sentences_per_block=setup.sentences_per_block)
+        for epoch in range(EPOCHS):
+            full = list(stream.chunks(epoch, sched.num_chunks))
+            for cut in range(sched.num_chunks + 1):
+                tail = list(stream.chunks(epoch, sched.num_chunks,
+                                          start_chunk=cut))
+                assert len(tail) == sched.num_chunks - cut
+                for (fc, fx), (tc, tx) in zip(full[cut:], tail):
+                    np.testing.assert_array_equal(fc, tc)
+                    np.testing.assert_array_equal(fx, tx)
+
+
+def test_chunk_keys_and_step0_are_position_pure(setup):
+    """The per-chunk PRNG key and LR offset depend only on the cursor's
+    coordinates — not on how training reached them — so the negative
+    draws of a resumed worker are bit-identical by construction."""
+    sched = setup.sched
+    for epoch in range(EPOCHS):
+        for chunk in range(sched.num_chunks):
+            k1 = worker_chunk_key(setup.seed, epoch, chunk, N_WORKERS, 1)
+            k2 = worker_chunk_key(setup.seed, epoch, chunk, N_WORKERS, 1)
+            np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+            cur = WorkerCursor(worker=1, epoch=epoch, chunk=chunk,
+                               step0=sched.step0(epoch, chunk))
+            cur.validate(sched)
+    # distinct coordinates → distinct keys (no stream aliasing)
+    keys = {tuple(np.asarray(worker_chunk_key(
+        setup.seed, e, c, N_WORKERS, w)).ravel().tolist())
+        for e in range(EPOCHS) for c in range(sched.num_chunks)
+        for w in range(N_WORKERS)}
+    assert len(keys) == EPOCHS * sched.num_chunks * N_WORKERS
+
+
+# ======================================================================
+# 2. Mid-epoch kill → resume, same process (store round-trip)
+# ======================================================================
+def test_resume_from_any_checkpoint_is_bit_identical(setup, baseline,
+                                                     tmp_path):
+    """Train worker 0 for k chunks, throw the runner away (the "kill"),
+    resume from the store with a fresh runner, finish — final tables
+    must equal the uninterrupted run for several mid-epoch k."""
+    sched = setup.sched
+    total = sched.num_chunks * EPOCHS
+    for k in (1, sched.num_chunks - 1, sched.num_chunks + 1, total - 1):
+        store = WorkerStateStore(str(tmp_path / f"cut{k}"))
+        r1 = ElasticRunner(setup, store, ckpt_every=1)
+        params, cursor = r1.load_worker(0)
+        it = None
+        for _ in range(k):
+            if it is None:
+                it = r1.chunk_iter(0, cursor)
+            params = r1.train_chunk(params, cursor, next(it))
+            cursor = cursor.advanced(sched)
+            if cursor.chunk == 0:
+                it = None
+            r1._maybe_save(params, cursor, done=cursor.done(EPOCHS))
+        del r1, params, cursor, it                  # the kill
+        r2 = ElasticRunner(setup, store, ckpt_every=1)
+        final = r2.run_worker(0, resume=True)
+        assert_tables_equal(final, baseline[0], ctx=f"cut after {k} chunks")
+
+
+def test_sparse_checkpoint_cadence_still_bit_identical(setup, baseline,
+                                                       tmp_path):
+    """ckpt_every > 1: a kill loses the chunks since the last checkpoint
+    but the replay regenerates them bit-exactly."""
+    store = WorkerStateStore(str(tmp_path / "sparse"))
+    r1 = ElasticRunner(setup, store, ckpt_every=3)
+    sched = setup.sched
+    params, cursor = r1.load_worker(1)
+    it = None
+    for _ in range(sched.num_chunks + 2):          # dies mid-epoch 1
+        if it is None:
+            it = r1.chunk_iter(1, cursor)
+        params = r1.train_chunk(params, cursor, next(it))
+        cursor = cursor.advanced(sched)
+        if cursor.chunk == 0:
+            it = None
+        r1._maybe_save(params, cursor, done=cursor.done(EPOCHS))
+    stored = store.cursor(1)
+    assert stored is not None
+    assert stored.global_chunk_index(sched) <= sched.num_chunks + 2
+    final = ElasticRunner(setup, store, ckpt_every=3).run_worker(1)
+    assert_tables_equal(final, baseline[1], ctx="sparse cadence")
+
+
+def test_schedule_drift_rejected_on_resume(setup, tmp_path):
+    store = WorkerStateStore(str(tmp_path))
+    wrong = WorkerCursor(worker=0, epoch=0, chunk=1, step0=999)
+    store.save(wrong, {"W": np.zeros((4, 2), np.float32)})
+    with pytest.raises(ValueError, match="different schedule"):
+        ElasticRunner(setup, store).load_worker(0)
+
+
+# ======================================================================
+# 3. Crash window in checkpoint/io
+# ======================================================================
+class _DieOnManifest:
+    """os.replace stand-in that kills the process (raises) the moment
+    the manifest rename is attempted — after the table npz landed."""
+
+    def __init__(self, real):
+        self.real = real
+
+    def __call__(self, src, dst):
+        if os.path.basename(dst) == ckio.MANIFEST_NAME:
+            raise RuntimeError("killed between table and manifest rename")
+        return self.real(src, dst)
+
+
+def test_crash_between_table_and_manifest_is_invisible(tmp_path,
+                                                       monkeypatch):
+    d = str(tmp_path)
+    v1 = ckio.publish_arrays(d, {"a": np.arange(3)}, meta={"tag": "one"})
+    real = os.replace
+    monkeypatch.setattr(os, "replace", _DieOnManifest(real))
+    with pytest.raises(RuntimeError, match="killed between"):
+        ckio.publish_arrays(d, {"a": np.arange(9)}, meta={"tag": "two"})
+    monkeypatch.setattr(os, "replace", real)
+
+    # The orphan npz exists on disk but no reader can ever see it.
+    orphans = [f for f in os.listdir(d)
+               if f.startswith("table_v") and f.endswith(".npz")]
+    assert len(orphans) == 2                       # v1 + the orphan v2
+    arrays, meta, version = ckio.load_arrays(d)
+    assert version == v1 and meta["tag"] == "one"
+    np.testing.assert_array_equal(arrays["a"], np.arange(3))
+
+    # The orphan's number is burned: the next publish skips it.
+    v3 = ckio.publish_arrays(d, {"a": np.arange(5)}, meta={"tag": "three"})
+    assert v3 == v1 + 2
+    arrays, meta, _ = ckio.load_arrays(d)
+    assert meta["tag"] == "three"
+
+
+def test_gc_orphans_sweeps_debris_without_reusing_versions(tmp_path,
+                                                           monkeypatch):
+    d = str(tmp_path)
+    v1 = ckio.publish_arrays(d, {"a": np.arange(3)})
+    real = os.replace
+    monkeypatch.setattr(os, "replace", _DieOnManifest(real))
+    with pytest.raises(RuntimeError):
+        ckio.publish_arrays(d, {"a": np.arange(4)})
+    monkeypatch.setattr(os, "replace", real)
+    # a partial tmp write (crash mid-npz) is debris too
+    open(os.path.join(d, ".tmp-deadbeef"), "wb").write(b"partial")
+
+    removed = ckio.gc_orphans(d)
+    assert sorted(removed) == sorted(
+        [".tmp-deadbeef", os.path.basename(ckio._table_path(d, v1 + 1))])
+    # reader still on v1; collected number still never reused
+    _, _, version = ckio.load_arrays(d)
+    assert version == v1
+    assert ckio.next_version(d) == v1 + 2
+    v3 = ckio.publish_arrays(d, {"a": np.arange(5)})
+    assert v3 == v1 + 2
+    assert ckio.gc_orphans(d) == []                # idempotent
+
+
+def test_worker_store_crash_window(tmp_path, monkeypatch):
+    """The same invisibility guarantee through the WorkerStateStore:
+    a kill mid-checkpoint leaves the previous (params, cursor) pair
+    loadable — never a torn one."""
+    sched = plan_epoch(64, 4, 2, 4)
+    store = WorkerStateStore(str(tmp_path))
+    c0 = WorkerCursor(worker=0, epoch=0, chunk=1, step0=sched.step0(0, 1))
+    store.save(c0, {"W": np.ones((4, 2), np.float32)})
+    real = os.replace
+    monkeypatch.setattr(os, "replace", _DieOnManifest(real))
+    c1 = WorkerCursor(worker=0, epoch=0, chunk=2, step0=sched.step0(0, 2))
+    with pytest.raises(RuntimeError):
+        store.save(c1, {"W": np.full((4, 2), 2.0, np.float32)})
+    monkeypatch.setattr(os, "replace", real)
+    params, cursor, _ = store.load(0)
+    assert cursor == c0
+    np.testing.assert_array_equal(params["W"], np.ones((4, 2), np.float32))
+    assert store.gc(num_workers=1)                 # debris existed
+
+
+# ======================================================================
+# 4. Quorum / deadline merge
+# ======================================================================
+def _rotated_world(V=90, d=8, n=4, seed=5, exclusive_block=0):
+    """n rotated copies of one truth table; optionally a block of words
+    seen ONLY by the last worker (the elastic dead-worker scenario)."""
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = rng.random(V) >= 0.25
+        mask[: d + 2] = True                       # shared anchor rows
+        if exclusive_block:
+            sl = slice(V - exclusive_block, V)
+            mask[sl] = i == n - 1                  # only worker n-1 sees
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 9.9                             # garbage where absent
+        models.append(M)
+        masks.append(mask.copy())
+    return Y, models, masks
+
+
+@pytest.mark.parametrize("n_missing", [1, 2, 3])
+def test_quorum_final_matches_batch_over_survivors(n_missing):
+    _, models, masks = _rotated_world(n=4, seed=100 + n_missing)
+    rng = np.random.default_rng(n_missing)
+    survivors = sorted(rng.choice(4, size=4 - n_missing, replace=False))
+    batch = mg.merge_alir(mg.stack_models(
+        [models[w] for w in survivors], [masks[w] for w in survivors]))
+    m = mg.IncrementalAlirMerger(quorum=len(survivors))
+    assert not m.quorum_met
+    for w in rng.permutation(survivors):           # any arrival order
+        m.add(int(w), models[w], masks[w])
+    assert m.quorum_met
+    final = m.final()
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+    np.testing.assert_array_equal(np.asarray(final.valid),
+                                  np.asarray(batch[1]))
+
+
+def test_quorum_unmet_raises_but_can_be_overridden():
+    _, models, masks = _rotated_world(n=4, seed=7)
+    m = mg.IncrementalAlirMerger(quorum=3)
+    m.add(0, models[0], masks[0])
+    with pytest.raises(RuntimeError, match="quorum"):
+        m.final()
+    fold = m.final(require_quorum=False)           # explicit best-effort
+    assert fold.worker_ids == (0,)
+
+
+def test_deadline_excludes_late_arrivals():
+    _, models, masks = _rotated_world(n=4, seed=9)
+    now = [0.0]
+    m = mg.IncrementalAlirMerger(quorum=2, deadline=10.0,
+                                 clock=lambda: now[0])
+    m.add(0, models[0], masks[0])
+    now[0] = 5.0
+    m.add(2, models[2], masks[2])
+    now[0] = 11.0                                  # window closed
+    assert m.deadline_passed
+    assert m.add(3, models[3], masks[3]) is None
+    assert m.late_workers == [3]
+    final = m.final()
+    assert final.worker_ids == (0, 2)              # pure on-time subset
+    batch = mg.merge_alir(mg.stack_models([models[0], models[2]],
+                                          [masks[0], masks[2]]))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+
+
+def test_dead_worker_checkpoint_round_trips_its_exclusive_words():
+    """Words only the dead worker ever saw: a quorum merge over the
+    survivors cannot cover them (they are OOV there), but folding the
+    dead worker's *last checkpoint* in lets reconstruct_missing
+    round-trip those rows into every survivor's space — coverage is
+    rescued by a partial checkpoint, the elastic serving story."""
+    B = 10
+    Y, models, masks = _rotated_world(V=90, d=8, n=4, seed=13,
+                                      exclusive_block=B)
+    sl = slice(90 - B, 90)
+    survivors = [0, 1, 2]
+    m = mg.IncrementalAlirMerger(quorum=3)
+    for w in survivors:
+        m.add(w, models[w], masks[w])
+    fold = m.final()
+    assert not np.asarray(fold.valid)[sl].any()    # exclusive words OOV
+
+    # Fold the dead worker's checkpointed table in (it saw the block):
+    stacked = mg.stack_models(models, masks)
+    Yall, valid_all, _ = mg.merge_alir(stacked, max_iters=60, tol=1e-12)
+    assert np.asarray(valid_all)[sl].all()         # coverage rescued
+    Ws = np.asarray(mg.alir_transforms(stacked, Yall))
+    # At the ALiR fixed point, an exclusively-dead-worker consensus row
+    # is exactly the dead checkpoint's row carried through its map:
+    np.testing.assert_allclose(np.asarray(Yall)[sl],
+                               models[3][sl] @ Ws[3], atol=1e-5)
+    rec = np.asarray(mg.reconstruct_missing(stacked, Yall))
+    for w in survivors:
+        # round-trip: the survivor-space reconstruction maps back onto
+        # the consensus bit-tightly (W_i orthogonal), so the exclusive
+        # words' representations really did come from the dead worker.
+        np.testing.assert_allclose(rec[w][sl] @ Ws[w],
+                                   np.asarray(Yall)[sl], atol=1e-4)
+        assert np.abs(rec[w][sl]).max() > 0.1      # not zero-filled OOV
+
+
+# ======================================================================
+# 5. Fault simulation — quick fixed schedules (tier 1)
+# ======================================================================
+def test_kill_restart_resume_bit_identical(setup, baseline, tmp_path):
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    faults = FaultSchedule((FaultEvent("kill", 1, 2),
+                            FaultEvent("restart", 1, 4),
+                            FaultEvent("delay", 0, 3, duration=2)))
+    sim = simulate_elastic(r, 2, faults)
+    assert sim.unfinished == []
+    for w in range(N_WORKERS):
+        assert_tables_equal(sim.params[w], baseline[w], ctx=f"worker {w}")
+
+
+def test_kill_steal_bit_identical(setup, baseline, tmp_path):
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    sim = simulate_elastic(r, 2, FaultSchedule((FaultEvent("kill", 1, 1),)),
+                           steal_after=2)
+    assert sim.unfinished == []
+    assert sim.stolen                              # work moved hosts
+    assert all(dst == 0 for _, dst in sim.stolen.values())
+    for w in range(N_WORKERS):
+        assert_tables_equal(sim.params[w], baseline[w], ctx=f"worker {w}")
+
+
+def test_unrecovered_kill_leaves_workers_unfinished(setup, tmp_path):
+    """No restart, no stealing: the dead host's workers never finish —
+    the input to the quorum merge path — and the sim terminates instead
+    of spinning."""
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    sim = simulate_elastic(r, 2, FaultSchedule((FaultEvent("kill", 1, 1),)))
+    dead_block = list(range(2, N_WORKERS))         # host 1's block
+    assert sim.unfinished == dead_block
+    assert sorted(sim.params) == [0, 1]
+    assert sim.ticks < 100
+
+
+# ======================================================================
+# 6. The chaos matrix (CI job: pytest -m chaos)
+# ======================================================================
+CHAOS_SEEDS = range(4)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_resume(setup, baseline, tmp_path, seed):
+    """Seeded kill+restart (+straggler delay) schedules: every worker
+    finishes and every table is bit-identical to the uninterrupted run."""
+    faults = FaultSchedule.seeded(seed, hosts=3, horizon=6, kills=2,
+                                  restarts=2, delays=1)
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    sim = simulate_elastic(r, 3, faults)
+    assert sim.unfinished == []
+    for w in range(N_WORKERS):
+        assert_tables_equal(sim.params[w], baseline[w],
+                            ctx=f"seed {seed} worker {w}")
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_steal(setup, baseline, tmp_path, seed):
+    """Seeded unrecovered kills + work-stealing: survivors adopt the
+    victims' workers mid-stream; results still bit-identical."""
+    faults = FaultSchedule.seeded(seed + 1000, hosts=3, horizon=6,
+                                  kills=2, restarts=0)
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=2)
+    sim = simulate_elastic(r, 3, faults, steal_after=1)
+    assert sim.unfinished == []
+    for w in range(N_WORKERS):
+        assert_tables_equal(sim.params[w], baseline[w],
+                            ctx=f"seed {seed} worker {w}")
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_quorum_merge(setup, baseline, tmp_path, seed):
+    """Seeded unrecovered kills, no stealing: merge whatever finished.
+    The quorum fold must be bit-identical to batch merge_alir over the
+    surviving subset, and every survivor's table bit-identical to the
+    uninterrupted run."""
+    faults = FaultSchedule.seeded(seed + 2000, hosts=4, horizon=5,
+                                  kills=2, restarts=0)
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    sim = simulate_elastic(r, 4, faults)
+    survivors = sim.finished
+    assert survivors                                # ≥1 host survived
+    for w in survivors:
+        assert_tables_equal(sim.params[w], baseline[w],
+                            ctx=f"seed {seed} worker {w}")
+    if not sim.unfinished:
+        return                                      # lucky seed: all done
+    mask = np.asarray(setup.mask)
+    models = [sim.params[w]["W"] for w in survivors]
+    masks = [mask[w] for w in survivors]
+    batch = mg.merge_alir(mg.stack_models(models, masks))
+    m = mg.IncrementalAlirMerger(quorum=len(survivors))
+    order = np.random.default_rng(seed).permutation(survivors)
+    for w in order:
+        m.add(int(w), sim.params[int(w)]["W"], mask[int(w)])
+    final = m.final()
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+    np.testing.assert_array_equal(np.asarray(final.valid),
+                                  np.asarray(batch[1]))
+
+
+# ======================================================================
+# 7. Hypothesis: arbitrary cut points (skips when hypothesis missing)
+# ======================================================================
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 50), worker=st.integers(0, N_WORKERS - 1),
+           epoch=st.integers(0, 3), cut=st.integers(0, 6))
+    def test_stream_resumable_at_arbitrary_cut_points(seed, worker, epoch,
+                                                      cut):
+        """For arbitrary (seed, worker, epoch, chunk-boundary) cut
+        points: the fast-forwarded chunk stream is the exact suffix of
+        the uninterrupted stream, and the per-chunk negative-draw keys
+        agree — the full resumability property."""
+        gen = SemanticCorpusModel.create(vocab_size=80, seed=0)
+        corpus = gen.generate(num_sentences=120, seed=2)
+        vocab = build_vocab(corpus, 80, min_count=1, max_size=None)
+        stream = make_worker_streams(
+            corpus, vocab, num_workers=N_WORKERS, strategy="equal",
+            rate=1.0 / N_WORKERS, window=3, subsample_t=None,
+            seed=seed)[worker]
+        cs = PairChunkStream([stream], batch_size=8, steps_per_chunk=2,
+                             sentences_per_block=64)
+        num_chunks = 6
+        cut = min(cut, num_chunks)
+        full = list(cs.chunks(epoch, num_chunks))
+        tail = list(cs.chunks(epoch, num_chunks, start_chunk=cut))
+        assert len(tail) == num_chunks - cut
+        for (fc, fx), (tc, tx) in zip(full[cut:], tail):
+            np.testing.assert_array_equal(fc, tc)
+            np.testing.assert_array_equal(fx, tx)
+        for chunk in range(cut, num_chunks):
+            np.testing.assert_array_equal(
+                np.asarray(worker_chunk_key(seed, epoch, chunk,
+                                            N_WORKERS, worker)),
+                np.asarray(worker_chunk_key(seed, epoch, chunk,
+                                            N_WORKERS, worker)))

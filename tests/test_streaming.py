@@ -156,6 +156,57 @@ def test_prefetch_rejects_bad_depth():
         next(prefetch_chunks(iter([]), depth=0))
 
 
+def test_prefetch_rejects_bad_depth_eagerly():
+    """Depth validation happens at call time, not first-next() time —
+    a misconfigured pipeline fails where it was built, and no producer
+    thread is ever spawned for it."""
+    with pytest.raises(ValueError, match="depth"):
+        prefetch_chunks(iter([]), depth=0)
+
+
+def test_prefetch_error_delivered_even_when_queue_full():
+    """Producer raises while the bounded queue is full and the consumer
+    is slow: the exception must still arrive after the buffered chunks
+    (the old failure mode was a producer blocked on put() forever)."""
+
+    def source():
+        for i in range(3):
+            yield (np.full((1, 1, 1), i, np.int32),) * 2
+        raise ValueError("died with a full queue")
+
+    it = prefetch_chunks(source(), depth=1, to_device=False)
+    got = []
+    with pytest.raises(ValueError, match="died with a full queue"):
+        for c, _ in it:
+            time.sleep(0.1)            # let the producer hit the bound
+            got.append(int(np.asarray(c).ravel()[0]))
+    assert got == [0, 1, 2]            # no buffered chunk lost
+
+
+def test_prefetch_consumer_exception_joins_producer():
+    """A consumer that raises out of the loop (not just close()) must
+    also reap the producer thread."""
+    import threading
+
+    def source():
+        while True:
+            yield (np.zeros((1, 1, 1), np.int32),) * 2
+
+    def consume():
+        for _ in prefetch_chunks(source(), depth=2, to_device=False):
+            raise RuntimeError("consumer bug")
+
+    with pytest.raises(RuntimeError, match="consumer bug"):
+        consume()
+    deadline = time.time() + 5.0
+    while (any(t.name == "prefetch_chunks" and t.is_alive()
+               for t in threading.enumerate())
+           and time.time() < deadline):
+        time.sleep(0.02)
+    assert not any(t.name == "prefetch_chunks" and t.is_alive()
+                   for t in threading.enumerate())
+
+
 def test_prefetch_overlaps_producer_with_consumer():
     """Smoke test for the double buffering: while the consumer sits on the
     first chunk, the producer runs ahead and fills the queue."""
