@@ -1,5 +1,9 @@
 """Paper Table 3: merging methods (Concat / PCA / ALiR-rand / ALiR-PCA /
-single sub-model / naive average) at fixed Shuffle sampling."""
+log-depth ALiR tree / single sub-model / naive average) at fixed Shuffle
+sampling — plus the worker-count sweep comparing the flat batch ALiR
+solve against the reduction tree (``tree_sweep``): serial wallclock,
+critical-path wallclock (what a cluster pays when a tree level's nodes
+run concurrently), and the peak solve working set."""
 
 from __future__ import annotations
 
@@ -10,7 +14,8 @@ from benchmarks.bench_sampling import _cfg, WINDOW, EPOCHS, BATCH
 from repro.core.driver import run_pipeline
 from repro.eval.benchmarks import evaluate_all
 
-METHODS = ("concat", "pca", "alir_rand", "alir_pca", "average", "single")
+METHODS = ("concat", "pca", "alir_rand", "alir_pca", "alir_tree",
+           "average", "single")
 
 
 def run(rate=0.1, quick=False):
@@ -46,6 +51,98 @@ def fmt(rows):
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# Worker-count sweep: flat batch ALiR vs the log-depth reduction tree.
+# ---------------------------------------------------------------------------
+def _synthetic_stack(n, V, d, seed=0):
+    """n rotated copies of one truth table with ~25% missing rows — the
+    exact data model ALiR assumes, at a controllable worker count."""
+    from repro.core import merge as mg
+
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) >= 0.25
+        mask[: d + 2] = True
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 0.0
+        models.append(M)
+        masks.append(mask)
+    return mg.stack_models(models, masks)
+
+
+def tree_sweep(worker_counts=(8, 32, 128), fan_in=2, V=1024, dim=32,
+               max_iters=8, quick=False):
+    """Sweep sub-model count: flat batch solve vs reduction tree.
+
+    Columns per count: ``flat_s`` (the O(W) batch solve), ``tree_s``
+    (tree, all nodes solved serially — the single-host cost),
+    ``tree_critical_s`` (sum over levels of the slowest node — the
+    cluster cost when each level's nodes run concurrently), ``depth``,
+    and the peak **solve working set** in MB: the flat solve stacks all
+    W tables (W·V·d·4 bytes); a tree node only ever holds its fan_in
+    children (fan_in·V·d·4) — the memory term that lets production-vocab
+    merges fit at all."""
+    from repro.core import merge as mg
+    from repro.core.merge_tree import build_tree, tree_depth
+
+    if quick:
+        worker_counts = tuple(w for w in worker_counts if w <= 32)
+    rows = []
+    for n in worker_counts:
+        stacked = _synthetic_stack(n, V, dim)
+        flat = mg.get_merger("alir", max_iters=max_iters)
+        with timer() as t_flat:
+            flat.merge(stacked)
+        tree = mg.get_merger("alir_tree", fan_in=fan_in,
+                             max_iters=max_iters)
+        with timer() as t_tree:
+            tree.merge(stacked)
+        rows.append({
+            "workers": n, "fan_in": fan_in, "V": V, "dim": dim,
+            "flat_s": t_flat.s,
+            "tree_s": t_tree.s,
+            "tree_critical_s": tree.critical_path_s(),
+            "depth": tree_depth(build_tree(range(n), fan_in)),
+            "nodes_solved": tree.stats["solved"],
+            "flat_peak_mb": n * V * dim * 4 / 1e6,
+            "tree_peak_mb": fan_in * V * dim * 4 / 1e6,
+        })
+    return rows
+
+
+def fmt_sweep(rows):
+    out = [f"{'workers':>7s} {'depth':>5s} {'flat_s':>8s} {'tree_s':>8s}"
+           f" {'critical_s':>10s} {'flat_MB':>8s} {'tree_MB':>8s}"]
+    for r in rows:
+        out.append(
+            f"{r['workers']:7d} {r['depth']:5d} {r['flat_s']:8.2f} "
+            f"{r['tree_s']:8.2f} {r['tree_critical_s']:10.2f} "
+            f"{r['flat_peak_mb']:8.1f} {r['tree_peak_mb']:8.1f}")
+    return "\n".join(out)
+
+
+def merge_tree_row(quick=False):
+    """The gated BENCH_wallclock.json row: the reduction tree's
+    critical-path wallclock at a fixed 32-sub-model shape (vs the flat
+    solve's, carried alongside for the trajectory)."""
+    n = 16 if quick else 32
+    r = tree_sweep(worker_counts=(n,), quick=False)[0]
+    return {
+        "engine": "merge_tree",
+        "workers": r["workers"],
+        "fan_in": r["fan_in"],
+        "depth": r["depth"],
+        "train_s": r["tree_critical_s"],
+        "tree_serial_s": r["tree_s"],
+        "flat_s": r["flat_s"],
+        "tree_peak_mb": r["tree_peak_mb"],
+        "flat_peak_mb": r["flat_peak_mb"],
+    }
+
+
 def main(quick=False):
     rows, secs = run(quick=quick)
     print(f"\n[Table 3] merge methods at shuffle/10% ({secs:.1f}s)")
@@ -59,6 +156,16 @@ def main(quick=False):
     print(f"merged vs single sub-model (sim): {alir:.3f} vs "
           f"{by['single']['similarity']:.3f} "
           f"{'CONFIRMED' if alir > by['single']['similarity'] else 'REFUTED'}")
+
+    sweep = tree_sweep(quick=quick)
+    print("\nflat batch ALiR vs reduction tree (synthetic rotated "
+          "sub-models):")
+    print(fmt_sweep(sweep))
+    last = sweep[-1]
+    print(f"tree critical path at {last['workers']} workers: "
+          f"{last['tree_critical_s']:.2f}s vs flat {last['flat_s']:.2f}s; "
+          f"peak solve working set {last['tree_peak_mb']:.1f} MB vs "
+          f"{last['flat_peak_mb']:.1f} MB")
     return rows
 
 

@@ -14,8 +14,10 @@ On one CPU device we measure real compute and report:
     direct-step rows (V=50k×512, Zipfian ids) carrying the
     planner-derived HBM row-traffic columns the tiered engine
     optimizes (see ``zipf_kernel_rows``), plus one ``serve`` row for
-    the read path
-    (``benchmarks.bench_serve``) — written to ``BENCH_wallclock.json``
+    the read path (``benchmarks.bench_serve``), one ``elastic_resume``
+    row and one ``merge_tree`` row (the reduction-tree merge's
+    critical-path wallclock, ``benchmarks.bench_merge.merge_tree_row``)
+    — written to ``BENCH_wallclock.json``
     (CI uploads
     it as an artifact next to the CSV summary; override the path with
     ``REPRO_BENCH_WALLCLOCK_JSON``). The committed repo-root
@@ -113,13 +115,19 @@ def run(rate=0.1, epochs=3, quick=False):
     # plus the DMA-bound Zipfian kernel rows, the serving-workload row
     # and the elastic mid-epoch-resume row the same gate covers
     rows["engines"] = (engine_rows(quick=quick) + zipf_kernel_rows(quick=quick)
-                       + [_serve_row(quick=quick), _elastic_row(quick=quick)])
+                       + [_serve_row(quick=quick), _elastic_row(quick=quick),
+                          _merge_tree_row(quick=quick)])
     return rows
 
 
 def _serve_row(quick=False):
     from benchmarks.bench_serve import serve_row
     return serve_row(quick=quick)
+
+
+def _merge_tree_row(quick=False):
+    from benchmarks.bench_merge import merge_tree_row
+    return merge_tree_row(quick=quick)
 
 
 def _elastic_row(quick=False, steps=None):
@@ -214,6 +222,14 @@ def print_engine_rows(rows) -> None:
                   f"{r['mean_batch']:.1f}, cache hit "
                   f"{r['cache_hit_rate']:.2f})")
             continue
+        if r["engine"] == "merge_tree":
+            print(f"  {r['engine']:18s} {r['train_s']:7.2f}s critical "
+                  f"path ({r['workers']} sub-models, fan-in "
+                  f"{r['fan_in']}, depth {r['depth']}; serial "
+                  f"{r['tree_serial_s']:.2f}s, flat {r['flat_s']:.2f}s, "
+                  f"peak {r['tree_peak_mb']:.1f} vs "
+                  f"{r['flat_peak_mb']:.1f} MB)")
+            continue
         if r["engine"] == "elastic_resume":
             print(f"  {r['engine']:18s} {r['train_s']:7.2f}s resume at "
                   f"chunk {r['cut_chunk']}/{r['num_chunks']} "
@@ -277,7 +293,8 @@ if __name__ == "__main__":
             rows = {"engines": engine_rows(quick=a.quick, steps=a.steps)
                     + zipf_kernel_rows(quick=a.quick)
                     + [_serve_row(quick=a.quick),
-                       _elastic_row(quick=a.quick, steps=a.steps)]}
+                       _elastic_row(quick=a.quick, steps=a.steps),
+                       _merge_tree_row(quick=a.quick)]}
         print_engine_rows(rows)
         path = write_engine_json(rows, path=a.out)
         print(f"engine rows ({t.s:.1f}s) → {path}")

@@ -22,7 +22,12 @@ the classes of bug the project has actually hit or designed against:
   in ``kernels/``, ``data/``, ``core/engine.py`` or ``core/sgns.py``.
   The paper's zero-synchronization claim lives or dies here; only
   ``core/async_trainer.py`` (which hosts the *synchronous baseline*
-  backends) may name collectives.
+  backends) may name collectives. The **merge phase** is intentionally
+  outside this scope: merging happens after training ends, so the one
+  sanctioned collective — the fixed-order sharded Gram reduction in
+  ``sharding/merge.py`` (``core/merge*.py`` consumes it) — does not
+  threaten the claim; its lowering is pinned to exactly one
+  ``all_gather`` by ``tests/test_analysis.py`` instead.
 
 Suppression: end the offending line with ``# repro-lint:
 ignore[RL002]`` (comma-separate several rules) plus a justification —

@@ -452,3 +452,58 @@ def load_worker_state(state_dir: str, worker: int,
     except FileNotFoundError:
         return None
     return arrays, dict(meta["cursor"]), version
+
+
+# ---------------------------------------------------------------------------
+# Reduction-tree merge state (restartable hierarchical merges).
+# ---------------------------------------------------------------------------
+_TREE_NODE_DIR_FMT = "tree_L{:02d}_N{:05d}"
+
+
+def tree_node_dir(state_dir: str, level: int, index: int) -> str:
+    """The per-node artifact directory for a reduction-tree merge
+    (:class:`repro.core.merge_tree.TreeAlirMerger`) under a merge state
+    root. Level 0 holds arrived leaves (``index`` = worker id); higher
+    levels hold solved interior nodes (``index`` = node index at that
+    level). Each node versions independently, like worker state."""
+    return os.path.join(state_dir, _TREE_NODE_DIR_FMT.format(level, index))
+
+
+def publish_tree_node(state_dir: str, level: int, index: int,
+                      arrays: dict, *, meta: dict | None = None) -> int:
+    """Atomically persist one tree node's arrays (leaf sub-model or
+    solved interior consensus) with the same publish-then-manifest
+    crash ordering as every other artifact: a restart mid-merge only
+    ever reloads complete nodes. Returns the node's version number."""
+    return publish_arrays(
+        tree_node_dir(state_dir, level, index),
+        {k: np.asarray(v) for k, v in arrays.items()},
+        meta={"level": int(level), "index": int(index), **(meta or {})})
+
+
+def load_tree_node(state_dir: str, level: int, index: int,
+                   version: int | None = None
+                   ) -> tuple[dict, dict, int] | None:
+    """Load a persisted tree node: ``(arrays, meta, version)``, or
+    ``None`` when the node was never published."""
+    try:
+        return load_arrays(tree_node_dir(state_dir, level, index), version)
+    except FileNotFoundError:
+        return None
+
+
+def list_tree_nodes(state_dir: str) -> list[tuple[int, int]]:
+    """All persisted ``(level, index)`` tree nodes under ``state_dir``,
+    leaves first (ascending level, then index)."""
+    if not os.path.isdir(state_dir):
+        return []
+    out = []
+    for name in os.listdir(state_dir):
+        if not name.startswith("tree_L"):
+            continue
+        try:
+            level, index = name[len("tree_L"):].split("_N")
+            out.append((int(level), int(index)))
+        except ValueError:
+            continue
+    return sorted(out)

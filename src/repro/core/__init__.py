@@ -23,7 +23,12 @@ from repro.core.merge import (
     StackedModels,
     stack_models,
     merge as merge_embeddings,  # `repro.core.merge` stays the submodule
-    merge_alir,
+    Merger,
+    MergeConfig,
+    MergeResult,
+    get_merger,
+    MERGER_NAMES,
+    merge_alir,      # deprecated shims — the registry is the surface
     merge_concat,
     merge_pca,
     merge_average,
@@ -39,7 +44,9 @@ __all__ = [
     "EpochSchedule", "plan_epoch",
     "AsyncShardTrainer", "make_sync_epoch", "assert_no_collectives",
     "count_collective_ops",
-    "StackedModels", "stack_models", "merge_embeddings", "merge_alir", "merge_concat",
+    "StackedModels", "stack_models", "merge_embeddings",
+    "Merger", "MergeConfig", "MergeResult", "get_merger", "MERGER_NAMES",
+    "merge_alir", "merge_concat",
     "merge_pca", "merge_average", "orthogonal_procrustes",
     "reconstruct_missing", "MERGE_METHODS",
 ]

@@ -388,21 +388,28 @@ def run_pipeline(
     num_workers: int = 10,
     cfg: SGNSConfig | None = None,
     merge_methods: tuple[str, ...] = ("concat", "pca", "alir_pca"),
+    merge_fan_in: int = 2,
+    merge_shard: int = 1,
     **kw,
 ) -> PipelineResult:
     cfg = cfg or SGNSConfig(vocab_size=0, dim=64)
     res = train_submodels(corpus, raw_vocab_size, strategy, num_workers, cfg, **kw)
-    return apply_merges(res, merge_methods, out_dim=cfg.dim)
+    return apply_merges(res, merge_methods, out_dim=cfg.dim,
+                        fan_in=merge_fan_in, shard=merge_shard)
 
 
-def apply_merges(res: PipelineResult, merge_methods, out_dim: int) -> PipelineResult:
+def apply_merges(res: PipelineResult, merge_methods, out_dim: int, *,
+                 fan_in: int = 2, shard: int = 1) -> PipelineResult:
     """Merge-phase tail shared by :func:`run_pipeline` and the elastic
     launcher: fold the stacked sub-models with each requested method,
-    recording wall-clock per method in ``res.timings``."""
+    recording wall-clock per method in ``res.timings``. ``fan_in``
+    sizes the ``alir_tree`` reduction tree; ``shard`` the ALiR Gram
+    accumulation (both static dials, see :mod:`repro.core.merge`)."""
     for method in merge_methods:
         t0 = time.perf_counter()
         emb, valid = merge_models(res.stacked, method, out_dim=out_dim,
-                                  key=jax.random.PRNGKey(42))
+                                  key=jax.random.PRNGKey(42),
+                                  fan_in=fan_in, shard=shard)
         jax.block_until_ready(emb)
         res.merged[method] = (np.asarray(emb), np.asarray(valid))
         res.timings[f"merge_{method}_s"] = time.perf_counter() - t0

@@ -1,4 +1,5 @@
-"""The Merge phase — Concat, PCA, and ALiR (the paper's contribution).
+"""The Merge phase — a unified :class:`Merger` API over Concat, PCA,
+averaging, and ALiR (the paper's contribution).
 
 All merges operate on *stacked* sub-models: ``models (n, V, d)`` over the
 **union** vocabulary, plus a presence ``mask (n, V)`` marking which words
@@ -22,23 +23,47 @@ Stops when the change in the average normalized Frobenius displacement
 Everything is vmapped over the model axis and jittable (SVDs are d×d —
 tiny next to training).
 
-Two merge schedules share this math:
+**The Merger API.** Every merge strategy is one object implementing the
+same protocol (mirroring the ``UpdateEngine`` registry in
+:mod:`repro.core.engine`)::
 
-* **batch** (:func:`merge_alir`) — all sub-models at once, the paper's
-  "few minutes at the end" synchronization point;
-* **incremental** (:class:`IncrementalAlirMerger`) — sub-models fold
-  into the running consensus *as workers finish*, so a versioned,
-  servable table exists after the first arrival and improves
-  monotonically. There is no wait-for-all barrier; the final fold
-  restacks in canonical worker order and is therefore **bit-identical**
-  to the batch merge no matter the arrival order
-  (``tests/test_merge.py`` property-tests the permutation invariance).
+    merger = get_merger("alir", quorum=3, deadline=60.0)   # MergeConfig dials
+    out = merger.merge(stacked)                  # batch: all at once
+    for worker_id, (model, mask) in arrivals:    # incremental: any order
+        res = merger.add(worker_id, model, mask) # servable consensus now
+    final = merger.final()                       # canonical cold solve
+
+Registered mergers (:data:`MERGER_NAMES`): ``"alir"`` (the batch +
+incremental ALiR solver), ``"alir_tree"`` (the log-depth pairwise
+reduction tree in :mod:`repro.core.merge_tree` — merge wallclock O(log W)
+instead of O(W)), ``"average"``, ``"concat"``, ``"pca"``. One frozen
+:class:`MergeConfig` carries every dial (``quorum`` / ``deadline`` /
+``fan_in`` / ``shard`` / the ALiR solver knobs).
+
+**Sharded Gram accumulation.** The only O(V) dense products in the ALiR
+iteration are the per-model Grams ``(M_i·m_i)ᵀ(Y·m_i)`` — embarrassingly
+data-parallel over row-blocks of ``(V, d)``. ``shard > 1`` computes them
+as a **fixed-order** reduction over ``shard`` row-block partials
+(:func:`sharded_gram`): the per-block partials are bit-identical no
+matter which host computes which block, and the ascending-block-order
+summation makes the reduced Gram a pure function of the static ``shard``
+dial — never of the host/device partition. The worker-mesh execution of
+the same reduction (one ``all_gather``, the system's single intentional
+collective) lives in :mod:`repro.sharding.merge` and is bit-identical to
+the local path. ``shard=1`` (default) is the plain dense matmul.
+
+The legacy free functions ``merge_alir`` / ``merge_concat`` /
+``merge_pca`` / ``merge_average`` remain as thin deprecated shims over
+the registry and will be removed; :class:`IncrementalAlirMerger` is the
+backward-compatible name for ``AlirMerger`` with keyword dials.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +77,7 @@ import numpy as np
 class StackedModels:
     """``n`` sub-models on the union vocabulary: ``(n, V, d)`` rows plus
     a ``(n, V)`` presence mask (rows are garbage where the mask is
-    False). The input type every ``merge_*`` consumes."""
+    False). The input type every merger consumes."""
 
     models: jax.Array   # (n, V, d) union-vocab rows; garbage where absent
     mask: jax.Array     # (n, V) bool presence
@@ -80,24 +105,20 @@ def stack_models(models: list[np.ndarray], masks: list[np.ndarray]) -> StackedMo
 
 
 # ---------------------------------------------------------------------------
-# Concat / PCA (baselines from the paper)
+# Concat / PCA / averaging — internal impls (public surface is the
+# Merger registry; the legacy free functions below are deprecated shims).
 # ---------------------------------------------------------------------------
-def merge_concat(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
-    """(V, n*d) concatenation over intersection rows; rows outside the
-    intersection are zero (OOV for this merge). Returns (emb, valid)."""
+def _merge_concat(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
     n, V, d = stacked.models.shape
     emb = jnp.transpose(stacked.models, (1, 0, 2)).reshape(V, n * d)
     valid = stacked.intersection()
     return emb * valid[:, None], valid
 
 
-def merge_pca(stacked: StackedModels, out_dim: int) -> tuple[jax.Array, jax.Array]:
-    """PCA of the concatenated matrix down to ``out_dim`` (paper's Pca).
-
-    Economy form: eigendecomposition of the (nd × nd) covariance over
-    intersection rows — never materializes a V×V anything.
-    """
-    emb, valid = merge_concat(stacked)
+def _merge_pca(stacked: StackedModels, out_dim: int) -> tuple[jax.Array, jax.Array]:
+    # Economy form: eigendecomposition of the (nd × nd) covariance over
+    # intersection rows — never materializes a V×V anything.
+    emb, valid = _merge_concat(stacked)
     cnt = jnp.maximum(valid.sum(), 1)
     mean = jnp.sum(emb * valid[:, None], axis=0) / cnt
     X = (emb - mean) * valid[:, None]
@@ -105,6 +126,13 @@ def merge_pca(stacked: StackedModels, out_dim: int) -> tuple[jax.Array, jax.Arra
     eigval, eigvec = jnp.linalg.eigh(cov)          # ascending
     comps = eigvec[:, -out_dim:][:, ::-1]          # (nd, out_dim)
     return (X @ comps) * valid[:, None], valid
+
+
+def _merge_average(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    maskf = stacked.mask.astype(stacked.models.dtype)
+    num = jnp.sum(stacked.models * maskf[..., None], axis=0)
+    den = jnp.maximum(jnp.sum(maskf, axis=0), 1.0)
+    return num / den[:, None], stacked.union_present()
 
 
 # ---------------------------------------------------------------------------
@@ -124,17 +152,70 @@ def orthogonal_procrustes(A: jax.Array, B: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Sharded Gram accumulation — the distributable core of the ALiR solve.
+#
+# ``AᵀB`` over ``(V, d)`` tables is the only O(V) dense product in the
+# iteration. Split V into ``num_shards`` row blocks: each block's
+# partial Gram is computed independently (any host can own any block —
+# the partials are bit-identical regardless of placement), then summed
+# in ascending block order. Floating-point addition is not associative,
+# so the blocked sum differs from the flat matmul in the last ulp —
+# therefore the *fixed-order reduction itself* is the canonical
+# definition of the Gram at a given ``shard`` setting: bits are a pure
+# function of the static shard count, never of the partition.
+# ---------------------------------------------------------------------------
+def gram_block_partials(A: jax.Array, B: jax.Array, num_shards: int) -> jax.Array:
+    """Per-row-block partial Grams: ``(num_shards, d_A, d_B)`` where
+    block ``s`` is ``A[s·blk:(s+1)·blk].T @ B[s·blk:(s+1)·blk]`` (rows
+    zero-padded at the end to a multiple of ``num_shards``). Each block
+    is independent — this is the piece a host computes for the row
+    slice it owns."""
+    V = A.shape[0]
+    S = int(num_shards)
+    pad = (-V) % S
+    if pad:
+        A = jnp.concatenate([A, jnp.zeros((pad, A.shape[1]), A.dtype)])
+        B = jnp.concatenate([B, jnp.zeros((pad, B.shape[1]), B.dtype)])
+    blk = (V + pad) // S
+    Ab = A.reshape(S, blk, A.shape[1])
+    Bb = B.reshape(S, blk, B.shape[1])
+    return jax.vmap(lambda a, b: a.T @ b)(Ab, Bb)
+
+
+def reduce_gram_partials(parts: jax.Array) -> jax.Array:
+    """Sum ``(S, d, e)`` partials in **ascending block order** (a
+    sequential ``lax.scan``, not a tree/psum reduction) — the fixed
+    order that makes the result independent of who computed which
+    block."""
+    def step(acc, p):
+        return acc + p, None
+    out, _ = jax.lax.scan(step, jnp.zeros_like(parts[0]), parts)
+    return out
+
+
+def sharded_gram(A: jax.Array, B: jax.Array, num_shards: int = 1) -> jax.Array:
+    """``AᵀB`` as the canonical fixed-order ``num_shards``-block
+    reduction (``num_shards <= 1``: the plain dense matmul)."""
+    if num_shards <= 1:
+        return A.T @ B
+    return reduce_gram_partials(gram_block_partials(A, B, num_shards))
+
+
+# ---------------------------------------------------------------------------
 # ALiR
 # ---------------------------------------------------------------------------
-def _alir_iteration(Y: jax.Array, models: jax.Array, mask: jax.Array):
+def _alir_iteration(Y: jax.Array, models: jax.Array, mask: jax.Array,
+                    gram_shards: int = 1):
     """One ALiR round. Returns (Y_new, displacement, W (n,d,d))."""
     maskf = mask.astype(Y.dtype)                       # (n, V)
 
     def per_model(M_i, m_i):
-        # Step 1: Procrustes on present rows.
+        # Step 1: Procrustes on present rows. The Gram is the sharded
+        # fixed-order reduction — the distributable part of the solve.
         A = M_i * m_i[:, None]
         Byy = Y * m_i[:, None]
-        U, _, Vt = jnp.linalg.svd(A.T @ Byy, full_matrices=False)
+        U, _, Vt = jnp.linalg.svd(sharded_gram(A, Byy, gram_shards),
+                                  full_matrices=False)
         W = U @ Vt                                     # (d, d)
         aligned_present = M_i @ W                      # valid on present rows
         # Step 2: reconstruct missing rows: M_i* = Y* W_iᵀ ⇒ aligned = Y*.
@@ -152,8 +233,9 @@ def _alir_iteration(Y: jax.Array, models: jax.Array, mask: jax.Array):
     return Y_new, jnp.mean(disps), Ws
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
-def _alir_loop(Y0, models, mask, max_iters: int, tol: float):
+@partial(jax.jit, static_argnames=("max_iters", "gram_shards"))
+def _alir_loop(Y0, models, mask, max_iters: int, tol: float,
+               gram_shards: int = 1):
     """Fixed-length scan with an early-converged fast path: once the
     displacement change drops below ``tol``, Y *and* the reported
     displacement freeze (the remaining iterations skip the per-model
@@ -168,7 +250,7 @@ def _alir_loop(Y0, models, mask, max_iters: int, tol: float):
             return Y, prev_disp
 
         def iterate(_):
-            Y_new, disp, _ = _alir_iteration(Y, models, mask)
+            Y_new, disp, _ = _alir_iteration(Y, models, mask, gram_shards)
             return Y_new, disp
 
         Y_out, disp = jax.lax.cond(done, converged, iterate, None)
@@ -187,14 +269,14 @@ def alir_init(stacked: StackedModels, out_dim: int, init: str, key: jax.Array):
     if init == "random":
         return 0.1 * jax.random.normal(key, (V, out_dim), dtype=jnp.float32)
     if init == "pca":
-        pca_emb, valid = merge_pca(stacked, out_dim)
+        pca_emb, valid = _merge_pca(stacked, out_dim)
         rnd = 0.1 * jax.random.normal(key, (V, out_dim), dtype=jnp.float32)
         # intersection rows from PCA; other union rows random (paper init ii)
         return jnp.where(valid[:, None], pca_emb, rnd)
     raise ValueError(f"unknown init {init!r}")
 
 
-def merge_alir(
+def _alir_solve(
     stacked: StackedModels,
     out_dim: int | None = None,
     init: str = "pca",
@@ -202,14 +284,16 @@ def merge_alir(
     tol: float = 1e-4,
     key: jax.Array | None = None,
     Y0: jax.Array | None = None,
+    shard: int = 1,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """ALiR-merge a stack of sub-models into one consensus table.
+    """ALiR-merge a stack of sub-models into one consensus table (the
+    internal batch solver behind :class:`AlirMerger`).
 
     Args:
         stacked: ``(n, V, d)`` sub-models over the union vocabulary plus
             their ``(n, V)`` presence mask.
         out_dim: output dimension — must equal ``d`` (ALiR aligns, it
-            does not project; use :func:`merge_pca` to change dims).
+            does not project; use the ``"pca"`` merger to change dims).
         init: ``"pca"`` (paper init ii — intersection rows from the PCA
             merge, the rest random) or ``"random"``.
         max_iters / tol: fixed iteration budget and the displacement-
@@ -219,9 +303,12 @@ def merge_alir(
         key: PRNG key for the random part of the init.
         Y0: optional **warm start** — an explicit initial consensus
             table that overrides ``init``/``key``. Used by
-            :class:`IncrementalAlirMerger` to re-fold from the previous
-            consensus when one more sub-model arrives (typically 1–2
-            iterations to re-converge instead of a cold solve).
+            :class:`AlirMerger` to re-fold from the previous consensus
+            when one more sub-model arrives (typically 1–2 iterations
+            to re-converge instead of a cold solve).
+        shard: Gram accumulation blocks (see :func:`sharded_gram`) —
+            a **static** dial: results at a given ``shard`` are
+            bit-identical no matter which host computes which block.
 
     Returns:
         ``(Y (V, d), valid (V,), disps (max_iters,))`` where ``valid``
@@ -239,12 +326,13 @@ def merge_alir(
     elif Y0.shape != (V, d):
         raise ValueError(f"warm-start Y0 has shape {Y0.shape}, expected {(V, d)}")
     models = stacked.models * stacked.mask[..., None]
-    Y, disps = _alir_loop(Y0, models, stacked.mask, max_iters, tol)
+    Y, disps = _alir_loop(Y0, models, stacked.mask, max_iters, tol, shard)
     valid = stacked.union_present()
     return Y * valid[:, None], valid, disps
 
 
-def alir_transforms(stacked: StackedModels, Y: jax.Array) -> jax.Array:
+def alir_transforms(stacked: StackedModels, Y: jax.Array,
+                    shard: int = 1) -> jax.Array:
     """Per-sub-model orthogonal alignment maps ``W_i`` onto consensus ``Y``.
 
     Solves Orthogonal Procrustes on each sub-model's **present** rows
@@ -255,7 +343,7 @@ def alir_transforms(stacked: StackedModels, Y: jax.Array) -> jax.Array:
     :func:`reconstruct_missing` formula, as a per-query operation.
     """
     _, _, Ws = _alir_iteration(Y, stacked.models * stacked.mask[..., None],
-                               stacked.mask)
+                               stacked.mask, shard)
     return Ws
 
 
@@ -280,85 +368,111 @@ def reconstruct_missing(stacked: StackedModels, Y: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Incremental merge — fold sub-models in as workers finish.
+# The unified Merger API: one config, one result type, one protocol.
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
-class FoldResult:
-    """One incremental-merge fold: the consensus over sub-models so far.
+class MergeConfig:
+    """Every merge dial in one frozen config (the merge counterpart of
+    the engine dataclasses in :mod:`repro.core.engine`).
 
-    ``worker_ids`` is the canonical (ascending) order of the arrived
-    workers — also the sub-model axis order of every array here and of
-    the published artifact's ``mask``/``transforms``/``models``.
+    Solver knobs (ALiR mergers): ``init`` / ``max_iters`` / ``tol`` /
+    ``seed`` / ``warm_start``; ``out_dim`` is only consumed by the
+    ``"pca"`` merger (ALiR aligns in the sub-model dimension).
+
+    Arrival-policy knobs (any merger used incrementally): ``quorum`` is
+    the minimum number of arrived sub-models a :meth:`Merger.final`
+    requires; ``deadline`` (seconds on the merger's clock, from
+    construction) closes the arrival window — late arrivals are recorded,
+    not folded.
+
+    Scale knobs: ``fan_in`` is the reduction-tree arity
+    (:mod:`repro.core.merge_tree`); ``shard`` is the Gram-accumulation
+    block count (:func:`sharded_gram`) — both static dials that define
+    the canonical bits, not runtime hints.
+    """
+
+    out_dim: int | None = None
+    init: str = "pca"
+    max_iters: int = 10
+    tol: float = 1e-4
+    seed: int = 0
+    warm_start: bool = True
+    quorum: int | None = None
+    deadline: float | None = None
+    fan_in: int = 2
+    shard: int = 1
+
+    def validated(self) -> "MergeConfig":
+        """Raise on out-of-range dials; returns self for chaining."""
+        if self.quorum is not None and self.quorum < 1:
+            raise ValueError(f"quorum must be >= 1, got {self.quorum}")
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError(f"deadline must be >= 0, got {self.deadline}")
+        if self.fan_in < 2:
+            raise ValueError(f"fan_in must be >= 2, got {self.fan_in}")
+        if self.shard < 1:
+            raise ValueError(f"shard must be >= 1, got {self.shard}")
+        return self
+
+    def prng_key(self) -> jax.Array:
+        """The config's base PRNG key (mergers fold in per-node data)."""
+        return jax.random.PRNGKey(self.seed)
+
+
+@dataclass(frozen=True)
+class MergeResult:
+    """One merge outcome: the consensus over the folded sub-models.
+
+    ``worker_ids`` is the canonical (ascending) order of the merged
+    workers — also the sub-model axis order of ``mask``/``transforms``
+    and of the published artifact. ``transforms`` (ALiR mergers) are the
+    per-worker alignment maps ``W_i``: a row absent from sub-model *i*
+    is reconstructed as ``Y[w] @ W_i.T``.
     """
 
     worker_ids: tuple[int, ...]
-    Y: jax.Array            # (V, d) consensus; invalid rows zeroed
-    valid: jax.Array        # (V,) union-presence over arrived sub-models
-    disps: jax.Array        # per-iteration ALiR displacement trace
+    emb: jax.Array                       # (V, d) consensus; invalid rows zeroed
+    valid: jax.Array                     # (V,) union presence over merged models
+    disps: jax.Array | None = None       # ALiR per-iteration displacement trace
+    mask: jax.Array | None = None        # (n, V) per-worker presence
+    transforms: jax.Array | None = None  # (n, d, d) worker → consensus maps
+
+    @property
+    def Y(self) -> jax.Array:
+        """Alias for ``emb`` (the pre-registry ``FoldResult`` name)."""
+        return self.emb
 
 
-class IncrementalAlirMerger:
-    """Folds sub-models into the merged table **as they arrive** — the
-    paper's only synchronization point, without the wait-for-all barrier.
+#: Backward-compatible alias — incremental folds used to return a
+#: dedicated ``FoldResult``; every merger now returns :class:`MergeResult`.
+FoldResult = MergeResult
 
-    Protocol::
 
-        merger = IncrementalAlirMerger()
-        for worker_id, (model, mask) in arrivals:      # any order
-            fold = merger.add(worker_id, model, mask)  # servable now
-            publish(fold)                              # version k
-        final = merger.fold(warm=False)                # == batch merge
+class Merger:
+    """The unified merge protocol: batch and incremental use are two
+    methods on the same object.
 
-    Invariants:
+    * :meth:`merge` — one-shot batch merge of a :class:`StackedModels`.
+    * :meth:`add` / :meth:`fold` / :meth:`final` — incremental: register
+      sub-models **as workers finish** (any order), re-fold a servable
+      consensus per arrival, finish with the canonical cold solve.
 
-    * Sub-models are restacked in **canonical worker-id order** before
-      every fold, so the *final* fold (all arrived, ``warm=False``) is
-      bit-identical to :func:`merge_alir` on the batch-stacked models
-      regardless of arrival order — property-tested under permutation
-      in ``tests/test_merge.py``.
-    * Intermediate folds warm-start from the previous consensus
-      (``warm_start=True``, the default): the early-convergence freeze
-      in :func:`_alir_loop` makes a re-fold that barely moves cost 1–2
-      SVD rounds instead of ``max_iters``. The documented tolerance of
-      a warm-started full fold vs the batch merge: ALiR's consensus is
-      only defined up to a global orthogonal map (rotate ``Y``, absorb
-      it into every ``W_i``), and the warm path inherits its gauge from
-      the arrival history — so warm results match the batch merge up to
-      Procrustes alignment (small residual), not element-wise. Call
-      ``fold(warm=False)`` for the canonical, gauge-fixed cold solve.
-    * ``valid`` only covers words present in some *arrived* sub-model:
-      an early fold is a complete, servable table for its coverage, and
-      coverage grows monotonically with arrivals.
+    The base class owns every arrival-policy mechanism shared by all
+    mergers — canonical (ascending worker-id) ordering, duplicate/shape
+    rejection, the ``deadline`` arrival window (late arrivals land in
+    :attr:`late_workers`, not in the consensus) and the ``quorum`` check
+    on :meth:`final` — so quorum/deadline semantics are identical
+    whether the consensus is a flat ALiR solve or a reduction tree.
 
-    **Merge-from-whatever-finished** (elastic training): workers on
-    preempted hosts may never arrive at all. ``quorum`` names the
-    minimum number of arrived sub-models a :meth:`final` merge requires;
-    ``deadline`` (seconds on ``clock``, measured from construction)
-    closes the arrival window — an :meth:`add` after the deadline is
-    recorded in :attr:`late_workers` and **not folded**, so the final
-    table is a pure function of the on-time subset. A quorum merge over
-    the survivors is bit-identical to the batch :func:`merge_alir` over
-    that subset's stack (``tests/test_elastic.py``), and the presence
-    masks already say which words the missing workers would have
-    covered — serving falls back to :func:`reconstruct_missing` /
-    OOV exactly as for any absent row.
+    Subclasses implement :meth:`merge`; incremental folding defaults to
+    re-merging everything arrived (subclasses override for warm starts
+    or tree reuse).
     """
 
-    def __init__(self, *, init: str = "pca", max_iters: int = 10,
-                 tol: float = 1e-4, key: jax.Array | None = None,
-                 warm_start: bool = True, quorum: int | None = None,
-                 deadline: float | None = None, clock=None):
-        if quorum is not None and quorum < 1:
-            raise ValueError(f"quorum must be >= 1, got {quorum}")
-        if deadline is not None and deadline < 0:
-            raise ValueError(f"deadline must be >= 0, got {deadline}")
-        self.init = init
-        self.max_iters = max_iters
-        self.tol = tol
-        self.key = key if key is not None else jax.random.PRNGKey(0)
-        self.warm_start = warm_start
-        self.quorum = quorum
-        self.deadline = deadline
+    name: str = "base"
+
+    def __init__(self, config: MergeConfig | None = None, *, clock=None):
+        self.config = (config or MergeConfig()).validated()
         # injectable clock so deadline behaviour is deterministic in
         # tests (default: monotonic seconds since construction)
         import time as _time
@@ -366,7 +480,15 @@ class IncrementalAlirMerger:
         self._t0 = self._clock()
         self.late_workers: list[int] = []
         self._models: dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        self._Y: jax.Array | None = None
+
+    # -- arrival bookkeeping (shared) --------------------------------------
+    @property
+    def quorum(self) -> int | None:
+        return self.config.quorum
+
+    @property
+    def deadline(self) -> float | None:
+        return self.config.deadline
 
     @property
     def worker_ids(self) -> tuple[int, ...]:
@@ -382,14 +504,14 @@ class IncrementalAlirMerger:
     def quorum_met(self) -> bool:
         """Whether enough sub-models have arrived for a :meth:`final`
         merge (always ``True`` without a quorum)."""
-        return self.quorum is None or self.n_folded >= self.quorum
+        return self.config.quorum is None or self.n_folded >= self.config.quorum
 
     @property
     def deadline_passed(self) -> bool:
         """Whether the arrival window has closed (``False`` without a
         deadline)."""
-        return (self.deadline is not None
-                and self._clock() - self._t0 > self.deadline)
+        return (self.config.deadline is not None
+                and self._clock() - self._t0 > self.config.deadline)
 
     def stacked(self) -> StackedModels:
         """The arrived sub-models restacked in canonical worker order."""
@@ -400,7 +522,7 @@ class IncrementalAlirMerger:
                             [np.asarray(self._models[i][1]) for i in ids])
 
     def add(self, worker_id: int, model, mask, *,
-            fold: bool = True) -> FoldResult | None:
+            fold: bool = True) -> MergeResult | None:
         """Register a finished worker's sub-model (and, by default,
         immediately re-fold the consensus).
 
@@ -409,7 +531,7 @@ class IncrementalAlirMerger:
                 rejected (a retried worker must be idempotent upstream).
             model: ``(V, d)`` table over the union vocabulary.
             mask: ``(V,)`` bool presence for this sub-model.
-            fold: re-fold now and return the :class:`FoldResult`;
+            fold: re-fold now and return the :class:`MergeResult`;
                 ``fold=False`` just registers (batch several arrivals
                 into one fold with a later :meth:`fold` call).
 
@@ -433,30 +555,33 @@ class IncrementalAlirMerger:
             if model.shape != (V, d):
                 raise ValueError(
                     f"sub-model shape {model.shape} != established {(V, d)}")
-        self._models[worker_id] = (model, mask)
+        self._models[int(worker_id)] = (model, mask)
+        self._on_arrival(int(worker_id))
         return self.fold() if fold else None
 
-    def fold(self, warm: bool | None = None) -> FoldResult:
-        """Re-solve ALiR over everything that has arrived.
+    def _on_arrival(self, worker_id: int) -> None:
+        """Subclass hook after a sub-model registers (tree mergers
+        persist the leaf / eagerly solve completed subtrees here)."""
 
-        ``warm`` overrides the constructor's ``warm_start`` for this
-        fold; ``fold(warm=False)`` after all arrivals reproduces the
-        batch :func:`merge_alir` bit-for-bit.
-        """
-        warm = self.warm_start if warm is None else warm
-        stacked = self.stacked()
-        Y0 = self._Y if (warm and self._Y is not None) else None
-        Y, valid, disps = merge_alir(
-            stacked, init=self.init, max_iters=self.max_iters, tol=self.tol,
-            key=self.key, Y0=Y0)
-        self._Y = Y
-        return FoldResult(worker_ids=self.worker_ids, Y=Y, valid=valid,
-                          disps=disps)
+    # -- the merge protocol ------------------------------------------------
+    def merge(self, stacked: StackedModels, *,
+              worker_ids: tuple[int, ...] | None = None) -> MergeResult:
+        """One-shot batch merge of a stack (stateless with respect to
+        arrivals; ``worker_ids`` labels the stack's model axis)."""
+        raise NotImplementedError
 
-    def final(self, *, require_quorum: bool = True) -> FoldResult:
+    def fold(self, warm: bool | None = None) -> MergeResult:
+        """Re-merge everything that has arrived. ``warm`` is consumed by
+        mergers with warm-startable state (:class:`AlirMerger`);
+        ``fold(warm=False)`` after all arrivals reproduces the batch
+        :meth:`merge` bit-for-bit."""
+        del warm
+        return self.merge(self.stacked(), worker_ids=self.worker_ids)
+
+    def final(self, *, require_quorum: bool = True) -> MergeResult:
         """The merge-from-whatever-finished endpoint: the canonical cold
         fold over every sub-model that arrived (on time) — bit-identical
-        to batch :func:`merge_alir` over that subset's stack, in
+        to the batch :meth:`merge` over that subset's stack, in
         canonical worker order, regardless of arrival order.
 
         Raises ``RuntimeError`` when a ``quorum`` is configured and
@@ -466,43 +591,289 @@ class IncrementalAlirMerger:
         if require_quorum and not self.quorum_met:
             raise RuntimeError(
                 f"quorum not met: {self.n_folded} sub-model(s) arrived, "
-                f"quorum is {self.quorum}")
+                f"quorum is {self.config.quorum}")
         return self.fold(warm=False)
 
+    def describe(self) -> str:
+        return f"{self.name}({self.config})"
 
-# ---------------------------------------------------------------------------
-# Naive averaging (the paper's counter-example) — for tests/benchmarks.
-# ---------------------------------------------------------------------------
-def merge_average(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+
+def _result_ids(stacked: StackedModels,
+                worker_ids: tuple[int, ...] | None) -> tuple[int, ...]:
+    if worker_ids is None:
+        return tuple(range(stacked.n))
+    ids = tuple(int(w) for w in worker_ids)
+    if len(ids) != stacked.n:
+        raise ValueError(f"{len(ids)} worker ids for {stacked.n} sub-models")
+    return ids
+
+
+class AlirMerger(Merger):
+    """The paper's merger, batch + incremental, behind the protocol.
+
+    Invariants (all property-tested):
+
+    * Sub-models are restacked in **canonical worker-id order** before
+      every fold, so the *final* fold (all arrived, ``warm=False``) is
+      bit-identical to :meth:`merge` on the batch-stacked models
+      regardless of arrival order.
+    * Intermediate folds warm-start from the previous consensus
+      (``warm_start=True``, the default): the early-convergence freeze
+      in :func:`_alir_loop` makes a re-fold that barely moves cost 1–2
+      SVD rounds instead of ``max_iters``. The documented tolerance of
+      a warm-started full fold vs the batch merge: ALiR's consensus is
+      only defined up to a global orthogonal map (rotate ``Y``, absorb
+      it into every ``W_i``), and the warm path inherits its gauge from
+      the arrival history — so warm results match the batch merge up to
+      Procrustes alignment (small residual), not element-wise. Call
+      ``fold(warm=False)`` for the canonical, gauge-fixed cold solve.
+    * ``valid`` only covers words present in some *arrived* sub-model:
+      an early fold is a complete, servable table for its coverage, and
+      coverage grows monotonically with arrivals.
+
+    **Merge-from-whatever-finished** (elastic training): the base
+    class's ``quorum``/``deadline`` dials apply unchanged — a quorum
+    merge over the survivors is bit-identical to the batch merge over
+    that subset's stack, and the presence masks already say which words
+    the missing workers would have covered; serving falls back to
+    :func:`reconstruct_missing` / OOV exactly as for any absent row.
+    """
+
+    name = "alir"
+
+    def __init__(self, config: MergeConfig | None = None, *,
+                 key: jax.Array | None = None, clock=None):
+        super().__init__(config, clock=clock)
+        self._key_override = key
+        self._Y: jax.Array | None = None
+
+    # legacy attribute surface (pre-registry IncrementalAlirMerger)
+    @property
+    def init(self) -> str:
+        return self.config.init
+
+    @property
+    def max_iters(self) -> int:
+        return self.config.max_iters
+
+    @property
+    def tol(self) -> float:
+        return self.config.tol
+
+    @property
+    def warm_start(self) -> bool:
+        return self.config.warm_start
+
+    @property
+    def key(self) -> jax.Array:
+        """Base PRNG key for the cold-solve init."""
+        return (self._key_override if self._key_override is not None
+                else self.config.prng_key())
+
+    def merge(self, stacked: StackedModels, *,
+              worker_ids: tuple[int, ...] | None = None,
+              Y0: jax.Array | None = None) -> MergeResult:
+        cfg = self.config
+        Y, valid, disps = _alir_solve(
+            stacked, out_dim=cfg.out_dim, init=cfg.init,
+            max_iters=cfg.max_iters, tol=cfg.tol, key=self.key, Y0=Y0,
+            shard=cfg.shard)
+        Ws = alir_transforms(stacked, Y, shard=cfg.shard)
+        return MergeResult(worker_ids=_result_ids(stacked, worker_ids),
+                           emb=Y, valid=valid, disps=disps,
+                           mask=stacked.mask, transforms=Ws)
+
+    def fold(self, warm: bool | None = None) -> MergeResult:
+        """Re-solve ALiR over everything that has arrived. ``warm``
+        overrides the config's ``warm_start`` for this fold."""
+        warm = self.config.warm_start if warm is None else warm
+        Y0 = self._Y if (warm and self._Y is not None) else None
+        res = self.merge(self.stacked(), worker_ids=self.worker_ids, Y0=Y0)
+        self._Y = res.emb
+        return res
+
+
+class _FunctionMerger(Merger):
+    """Adapter for the stateless merges (average/concat/pca): batch and
+    incremental are the same computation over the arrived stack."""
+
+    _fn: Callable[..., tuple[jax.Array, jax.Array]]
+
+    def merge(self, stacked: StackedModels, *,
+              worker_ids: tuple[int, ...] | None = None) -> MergeResult:
+        emb, valid = self._apply(stacked)
+        return MergeResult(worker_ids=_result_ids(stacked, worker_ids),
+                           emb=emb, valid=valid, mask=stacked.mask)
+
+    def _apply(self, stacked: StackedModels):
+        raise NotImplementedError
+
+
+class AverageMerger(_FunctionMerger):
     """Presence-weighted element-wise mean over union rows — the
     paper's counter-example (sub-models live in incompatible gauges, so
-    averaging cancels signal). Returns (emb, valid=union)."""
-    maskf = stacked.mask.astype(stacked.models.dtype)
-    num = jnp.sum(stacked.models * maskf[..., None], axis=0)
-    den = jnp.maximum(jnp.sum(maskf, axis=0), 1.0)
-    return num / den[:, None], stacked.union_present()
+    averaging cancels signal). Kept for tests/benchmarks."""
+
+    name = "average"
+
+    def _apply(self, stacked: StackedModels):
+        return _merge_average(stacked)
 
 
-MERGE_METHODS = ("concat", "pca", "alir_rand", "alir_pca", "average", "single")
+class ConcatMerger(_FunctionMerger):
+    """(V, n*d) concatenation over intersection rows; rows outside the
+    intersection are zero (OOV for this merge)."""
+
+    name = "concat"
+
+    def _apply(self, stacked: StackedModels):
+        return _merge_concat(stacked)
+
+
+class PcaMerger(_FunctionMerger):
+    """PCA of the concatenated matrix down to ``config.out_dim``
+    (default: the sub-model dimension d) — the paper's Pca baseline."""
+
+    name = "pca"
+
+    def _apply(self, stacked: StackedModels):
+        out_dim = self.config.out_dim or int(stacked.models.shape[2])
+        return _merge_pca(stacked, out_dim)
+
+
+class IncrementalAlirMerger(AlirMerger):
+    """Backward-compatible keyword-dial spelling of :class:`AlirMerger`
+    (the pre-registry name). New code: ``get_merger("alir", ...)``."""
+
+    def __init__(self, *, init: str = "pca", max_iters: int = 10,
+                 tol: float = 1e-4, key: jax.Array | None = None,
+                 warm_start: bool = True, quorum: int | None = None,
+                 deadline: float | None = None, clock=None):
+        cfg = MergeConfig(init=init, max_iters=max_iters, tol=tol,
+                          warm_start=warm_start, quorum=quorum,
+                          deadline=deadline)
+        super().__init__(cfg, key=key, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# The registry (mirrors core.engine's ENGINES / get_engine).
+# ---------------------------------------------------------------------------
+MERGERS: dict[str, type[Merger]] = {
+    "alir": AlirMerger,
+    "average": AverageMerger,
+    "concat": ConcatMerger,
+    "pca": PcaMerger,
+}
+
+MERGER_NAMES: tuple[str, ...] = ("alir", "alir_tree", "average", "concat", "pca")
+
+
+def _tree_merger_cls() -> type[Merger]:
+    # Imported lazily: merge_tree builds on this module.
+    from repro.core.merge_tree import TreeAlirMerger
+    return TreeAlirMerger
+
+
+def get_merger(spec: str | Merger = "alir",
+               config: MergeConfig | None = None, *,
+               clock=None, **overrides) -> Merger:
+    """Resolve a merger: pass an instance through, or build one from a
+    registry name + config (``overrides`` are :class:`MergeConfig`
+    fields applied via ``dataclasses.replace``)::
+
+        get_merger("alir_tree", fan_in=4, quorum=3)
+        get_merger("alir", MergeConfig(max_iters=20), deadline=60.0)
+    """
+    if isinstance(spec, Merger):
+        if config is not None or overrides:
+            raise ValueError(
+                "pass either a Merger instance or a name+config, not both")
+        return spec
+    name = str(spec)
+    cfg = config or MergeConfig()
+    if overrides:
+        cfg = replace(cfg, **overrides)
+    if name == "alir_tree":
+        cls = _tree_merger_cls()
+    elif name in MERGERS:
+        cls = MERGERS[name]
+    else:
+        raise ValueError(
+            f"unknown merger {name!r}; expected one of {sorted(MERGER_NAMES)}")
+    return cls(cfg, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims (the pre-registry surface).
+# ---------------------------------------------------------------------------
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (the Merger registry: "
+        "repro.core.merge.get_merger)", DeprecationWarning, stacklevel=3)
+
+
+def merge_alir(stacked: StackedModels, out_dim: int | None = None,
+               init: str = "pca", max_iters: int = 10, tol: float = 1e-4,
+               key: jax.Array | None = None, Y0: jax.Array | None = None,
+               shard: int = 1) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Deprecated shim — use ``get_merger("alir").merge(stacked)``.
+    Returns the legacy ``(Y, valid, disps)`` triple."""
+    _deprecated("merge_alir", 'get_merger("alir").merge(...)')
+    return _alir_solve(stacked, out_dim=out_dim, init=init,
+                       max_iters=max_iters, tol=tol, key=key, Y0=Y0,
+                       shard=shard)
+
+
+def merge_concat(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    """Deprecated shim — use ``get_merger("concat").merge(stacked)``."""
+    _deprecated("merge_concat", 'get_merger("concat").merge(...)')
+    return _merge_concat(stacked)
+
+
+def merge_pca(stacked: StackedModels, out_dim: int) -> tuple[jax.Array, jax.Array]:
+    """Deprecated shim — use ``get_merger("pca", out_dim=...).merge(stacked)``."""
+    _deprecated("merge_pca", 'get_merger("pca", out_dim=...).merge(...)')
+    return _merge_pca(stacked, out_dim)
+
+
+def merge_average(stacked: StackedModels) -> tuple[jax.Array, jax.Array]:
+    """Deprecated shim — use ``get_merger("average").merge(stacked)``."""
+    _deprecated("merge_average", 'get_merger("average").merge(...)')
+    return _merge_average(stacked)
+
+
+# ---------------------------------------------------------------------------
+# Name-dispatched merge for the pipeline driver / CLI.
+# ---------------------------------------------------------------------------
+MERGE_METHODS = ("concat", "pca", "alir_rand", "alir_pca", "alir_tree",
+                 "average", "single")
 
 
 def merge(stacked: StackedModels, method: str, out_dim: int,
-          key: jax.Array | None = None, **kw):
+          key: jax.Array | None = None, *, fan_in: int = 2,
+          shard: int = 1, **kw):
     """Dispatch a merge by name (one of :data:`MERGE_METHODS`). Returns
-    ``(emb, valid)``; ``key`` is required by the alir_* methods, extra
-    kwargs are forwarded to :func:`merge_alir`."""
+    ``(emb, valid)``; ``key`` seeds the alir_* inits, ``fan_in`` sizes
+    the ``alir_tree`` reduction tree, ``shard`` the Gram accumulation;
+    extra kwargs are forwarded to the ALiR solver."""
     if method == "concat":
-        return merge_concat(stacked)
+        return _merge_concat(stacked)
     if method == "pca":
-        return merge_pca(stacked, out_dim)
+        return _merge_pca(stacked, out_dim)
     if method == "alir_rand":
-        Y, v, _ = merge_alir(stacked, out_dim, init="random", key=key, **kw)
+        Y, v, _ = _alir_solve(stacked, out_dim, init="random", key=key,
+                              shard=shard, **kw)
         return Y, v
     if method == "alir_pca":
-        Y, v, _ = merge_alir(stacked, out_dim, init="pca", key=key, **kw)
+        Y, v, _ = _alir_solve(stacked, out_dim, init="pca", key=key,
+                              shard=shard, **kw)
         return Y, v
+    if method == "alir_tree":
+        cfg = MergeConfig(out_dim=None, fan_in=fan_in, shard=shard, **kw)
+        res = get_merger("alir_tree", cfg).merge(stacked)
+        return res.emb, res.valid
     if method == "average":
-        return merge_average(stacked)
+        return _merge_average(stacked)
     if method == "single":
         return stacked.models[0], stacked.mask[0]
     raise ValueError(f"unknown merge method {method!r}")

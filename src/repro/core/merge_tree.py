@@ -1,0 +1,407 @@
+"""Log-depth reduction-tree ALiR merge: O(log W) merge wallclock.
+
+The flat batch solve is O(W) in sub-model count — every worker's table
+sits in one stack and every iteration pays W Procrustes solves over the
+full ``(V, d)`` tables. :class:`TreeAlirMerger` replaces it with a
+**pairwise reduction tree** (``fan_in`` ≥ 2): leaves are the worker
+sub-models, each interior node ALiR-merges its children's consensus
+tables as pseudo-sub-models (child ``valid`` = the pseudo-model's
+presence mask) and passes one ``(V, d)`` consensus upward. Nodes at the
+same level are independent — on a cluster they run concurrently, so the
+critical path is ``depth = ceil(log_fan_in W)`` node solves, and each
+node solve touches at most ``fan_in`` tables instead of W.
+
+Determinism and permutation invariance, by construction:
+
+* **Topology** is a pure function of the *canonical* (ascending, sorted)
+  worker ids and ``fan_in`` (:func:`build_tree`): leaves in id order,
+  consecutive ``fan_in``-groups per level. Arrival order never enters.
+* **Node solves are always cold**, keyed by ``fold_in(base_key, level,
+  index)`` — a node solved eagerly the moment its children completed is
+  bit-identical to the same node solved at :meth:`~TreeAlirMerger.final`
+  time. (Warm starts would thread arrival history into the bits.)
+* Nodes are solved individually, never vmapped across a level — the repo
+  documents that vmapped and unvmapped solves differ bit-wise.
+
+What flows upward, so the serving tier works from **any** level:
+
+* ``Y`` — the node's consensus ``(V, d)``;
+* ``valid`` — union presence over the node's arrived workers;
+* ``mask`` — per-worker presence rows, concatenated in canonical order;
+* ``transforms`` — **composed** worker→node maps: if worker *w* aligns
+  into child *c* by ``W_w`` and child *c* into this node by ``W_c``,
+  then ``W_w^node = W_w · W_c`` — so ``Y_node @ (W_w^node)ᵀ``
+  reconstructs *w*'s missing rows exactly as
+  :func:`repro.core.merge.reconstruct_missing` does from the flat solve.
+
+Elastic semantics are **tree-node policies**: the arrival ``deadline``
+closes the whole tree's window (late workers recorded, their leaves
+never join); an interior node whose children are partially arrived
+solves over the present children only (a single-present-child node
+passes its child through untouched — no pointless self-alignment); the
+``quorum`` check applies at the root over total arrived workers.
+
+Restartable merges: give the merger a ``state_dir`` and every arrived
+leaf + solved interior node is persisted through the atomic versioned
+artifact layer (:func:`repro.checkpoint.io.publish_tree_node`); a new
+merger pointed at the same directory reloads them and only re-solves
+nodes whose arrived-worker set has since changed.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import (
+    list_tree_nodes,
+    load_tree_node,
+    publish_tree_node,
+)
+from repro.core.merge import (
+    MergeConfig,
+    MergeResult,
+    Merger,
+    StackedModels,
+    _alir_solve,
+    alir_transforms,
+)
+
+
+# ---------------------------------------------------------------------------
+# Topology — a pure function of (sorted worker ids, fan_in).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TreeNode:
+    """One reduction-tree node: ``level`` 0 = leaves, the root is the
+    single node of the top level. ``worker_ids`` is the (ascending)
+    span of workers the subtree covers."""
+
+    level: int
+    index: int
+    worker_ids: tuple[int, ...]
+    children: tuple["TreeNode", ...] = ()
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+def build_tree(worker_ids, fan_in: int = 2) -> TreeNode:
+    """The deterministic reduction tree over ``worker_ids``: leaves in
+    canonical (ascending) id order, consecutive ``fan_in``-groups per
+    level, repeated to a single root. Same ids + same fan_in ⇒ same
+    topology, independent of arrival order."""
+    ids = sorted({int(w) for w in worker_ids})
+    if not ids:
+        raise ValueError("cannot build a reduction tree over zero workers")
+    if fan_in < 2:
+        raise ValueError(f"fan_in must be >= 2, got {fan_in}")
+    level = [TreeNode(level=0, index=i, worker_ids=(w,))
+             for i, w in enumerate(ids)]
+    depth = 0
+    while len(level) > 1:
+        depth += 1
+        nxt = []
+        for i in range(0, len(level), fan_in):
+            group = tuple(level[i:i + fan_in])
+            covered = tuple(w for g in group for w in g.worker_ids)
+            nxt.append(TreeNode(level=depth, index=len(nxt),
+                                worker_ids=covered, children=group))
+        level = nxt
+    return level[0]
+
+
+def tree_levels(root: TreeNode) -> list[list[TreeNode]]:
+    """All nodes grouped by level, ``[leaves, ..., [root]]``."""
+    by_level: dict[int, list[TreeNode]] = {}
+
+    def walk(node: TreeNode) -> None:
+        by_level.setdefault(node.level, []).append(node)
+        for c in node.children:
+            walk(c)
+
+    walk(root)
+    return [sorted(by_level[lvl], key=lambda n: n.index)
+            for lvl in sorted(by_level)]
+
+
+def tree_depth(root: TreeNode) -> int:
+    """Number of solve levels above the leaves (= the critical path in
+    node solves when a level runs concurrently)."""
+    return root.level
+
+
+# ---------------------------------------------------------------------------
+# Node results — what flows upward.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class NodeResult:
+    """One solved tree node: consensus + everything needed to serve or
+    keep reducing from this level. ``worker_ids`` are the **arrived**
+    workers the node actually covers (ascending); ``mask`` and
+    ``transforms`` rows follow that order."""
+
+    level: int
+    index: int
+    worker_ids: tuple[int, ...]
+    Y: jax.Array              # (V, d) node consensus; invalid rows zeroed
+    valid: jax.Array          # (V,) union presence over covered workers
+    mask: jax.Array           # (k, V) per-worker presence
+    transforms: jax.Array     # (k, d, d) composed worker → node maps
+    disps: jax.Array | None   # ALiR trace of this node's solve (leaves: None)
+
+
+def reconstruct_worker(result, worker_id: int) -> jax.Array:
+    """Worker ``worker_id``'s full table in its **own** space from any
+    node's consensus: ``Y @ W_wᵀ`` with the composed transform — the
+    tree generalization of :func:`repro.core.merge.reconstruct_missing`.
+    Accepts a :class:`NodeResult` or a root :class:`MergeResult`."""
+    ids = tuple(result.worker_ids)
+    if worker_id not in ids:
+        raise KeyError(f"worker {worker_id} not covered by this node "
+                       f"(has {ids})")
+    W = result.transforms[ids.index(worker_id)]
+    return result.Y @ W.T
+
+
+class TreeAlirMerger(Merger):
+    """ALiR through the pairwise reduction tree, behind the unified
+    :class:`~repro.core.merge.Merger` protocol.
+
+    Batch use (``merge``) builds the tree over the stack's workers and
+    solves bottom-up. Incremental use (``add``/``fold``/``final``)
+    reuses solved nodes across folds: a node is re-solved only when the
+    set of arrived workers under it changed, so each new arrival costs
+    one root-path of node solves — O(log W) — instead of a full re-fold.
+
+    Args:
+        config: the shared :class:`MergeConfig` (``fan_in`` and
+            ``shard`` are the tree dials).
+        workers: the **expected** worker ids. When given, the topology
+            is fixed up front: intermediate folds place arrivals at
+            their final leaf positions, missing children degrade
+            gracefully, and persisted nodes stay valid across restarts.
+            When ``None``, each fold derives the topology from the
+            workers arrived so far (and :meth:`merge` from the stack).
+        key: explicit base PRNG key (default: ``config.prng_key()``);
+            per-node keys fold in ``(level, index)``.
+        state_dir: persist leaves + solved interior nodes here (atomic
+            versioned artifacts) for restartable merges.
+        resume: reload persisted state from ``state_dir`` on
+            construction.
+    """
+
+    name = "alir_tree"
+
+    def __init__(self, config: MergeConfig | None = None, *,
+                 workers=None, key: jax.Array | None = None,
+                 clock=None, state_dir: str | None = None,
+                 resume: bool = True):
+        super().__init__(config, clock=clock)
+        self._key_override = key
+        self._workers = (tuple(sorted({int(w) for w in workers}))
+                         if workers is not None else None)
+        # node cache: (level, index) -> (arrived-signature, NodeResult)
+        self._cache: dict[tuple[int, int], tuple[tuple[int, ...], NodeResult]] = {}
+        self.state_dir = state_dir
+        self.stats = {"solved": 0, "passthrough": 0, "loaded": 0,
+                      "node_s": {}}
+        if state_dir and resume:
+            self._load_state()
+
+    @property
+    def key(self) -> jax.Array:
+        return (self._key_override if self._key_override is not None
+                else self.config.prng_key())
+
+    def _node_key(self, node: TreeNode) -> jax.Array:
+        """Deterministic per-node PRNG key — a pure function of the
+        node's position, never of arrival history."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self.key, node.level), node.index)
+
+    # -- the Merger protocol ----------------------------------------------
+    def merge(self, stacked: StackedModels, *,
+              worker_ids: tuple[int, ...] | None = None) -> MergeResult:
+        """One-shot batch tree merge of a stack (tree over its workers,
+        solved bottom-up; no state shared with incremental folds)."""
+        ids = (tuple(int(w) for w in worker_ids)
+               if worker_ids is not None else tuple(range(stacked.n)))
+        if len(ids) != stacked.n:
+            raise ValueError(f"{len(ids)} worker ids for {stacked.n} sub-models")
+        scratch = TreeAlirMerger(self.config, workers=ids,
+                                 key=self._key_override)
+        models = np.asarray(stacked.models)
+        masks = np.asarray(stacked.mask)
+        order = np.argsort(ids)
+        for i in order:
+            scratch.add(ids[int(i)], models[int(i)], masks[int(i)], fold=False)
+        res = scratch.fold()
+        # surface the scratch solve costs (bench reads critical path)
+        self.stats["solved"] += scratch.stats["solved"]
+        self.stats["passthrough"] += scratch.stats["passthrough"]
+        self.stats["node_s"].update(scratch.stats["node_s"])
+        return res
+
+    def fold(self, warm: bool | None = None) -> MergeResult:
+        """Solve (or reuse) the tree over everything arrived. ``warm``
+        is ignored — tree nodes always solve cold (see module doc)."""
+        del warm
+        if not self._models:
+            raise ValueError("no sub-models have arrived yet")
+        res = self._node_result(self._topology())
+        assert res is not None
+        return MergeResult(worker_ids=res.worker_ids, emb=res.Y,
+                           valid=res.valid, disps=res.disps,
+                           mask=res.mask, transforms=res.transforms)
+
+    def node(self, level: int, index: int) -> NodeResult | None:
+        """Inspect a solved node (``None`` if not solved yet) — serving
+        can read any level, not just the root."""
+        hit = self._cache.get((level, index))
+        return hit[1] if hit else None
+
+    def critical_path_s(self) -> float:
+        """Sum over levels of the slowest node solve at that level — the
+        wallclock model when each level's nodes run concurrently."""
+        per_level: dict[int, float] = {}
+        for (lvl, _), s in self.stats["node_s"].items():
+            per_level[lvl] = max(per_level.get(lvl, 0.0), s)
+        return sum(per_level.values())
+
+    # -- solving -----------------------------------------------------------
+    def _topology(self) -> TreeNode:
+        return build_tree(self._workers or self.worker_ids,
+                          self.config.fan_in)
+
+    def _on_arrival(self, worker_id: int) -> None:
+        if self.state_dir:
+            model, mask = self._models[worker_id]
+            publish_tree_node(
+                self.state_dir, 0, worker_id,
+                {"model": model, "mask": mask},
+                meta={"worker": worker_id, "fan_in": self.config.fan_in})
+
+    def _node_result(self, node: TreeNode) -> NodeResult | None:
+        """Solve the subtree over its arrived workers, reusing cached
+        results whose arrived-signature is unchanged. ``None`` when no
+        worker under the node has arrived."""
+        if node.is_leaf:
+            w = node.worker_ids[0]
+            if w not in self._models:
+                return None
+            hit = self._cache.get((0, node.index))
+            if hit and hit[0] == (w,):
+                return hit[1]
+            res = self._leaf_result(node)
+            self._cache[(0, node.index)] = ((w,), res)
+            return res
+        kids = [r for r in (self._node_result(c) for c in node.children)
+                if r is not None]
+        if not kids:
+            return None
+        sig = tuple(w for r in kids for w in r.worker_ids)
+        hit = self._cache.get((node.level, node.index))
+        if hit and hit[0] == sig:
+            return hit[1]
+        res = self._solve_node(node, kids)
+        self._cache[(node.level, node.index)] = (sig, res)
+        if self.state_dir and res.level > 0:
+            self._persist_node(res, sig)
+        return res
+
+    def _leaf_result(self, node: TreeNode) -> NodeResult:
+        w = node.worker_ids[0]
+        model, mask = self._models[w]
+        Yl = jnp.asarray(model) * jnp.asarray(mask)[:, None]
+        d = model.shape[1]
+        return NodeResult(
+            level=0, index=node.index, worker_ids=(w,),
+            Y=Yl, valid=jnp.asarray(mask).astype(bool),
+            mask=jnp.asarray(mask).astype(bool)[None],
+            transforms=jnp.eye(d, dtype=Yl.dtype)[None], disps=None)
+
+    def _solve_node(self, node: TreeNode,
+                    kids: list[NodeResult]) -> NodeResult:
+        ids = tuple(w for r in kids for w in r.worker_ids)
+        if len(kids) == 1:
+            # single present child: pass through unchanged (an ALiR
+            # "solve" of one model would just rotate it toward the init)
+            c = kids[0]
+            self.stats["passthrough"] += 1
+            return NodeResult(level=node.level, index=node.index,
+                              worker_ids=ids, Y=c.Y, valid=c.valid,
+                              mask=c.mask, transforms=c.transforms,
+                              disps=c.disps)
+        cfg = self.config
+        child_stack = StackedModels(
+            models=jnp.stack([c.Y for c in kids]),
+            mask=jnp.stack([c.valid for c in kids]))
+        t0 = time.perf_counter()
+        Y, valid, disps = _alir_solve(
+            child_stack, init=cfg.init, max_iters=cfg.max_iters,
+            tol=cfg.tol, key=self._node_key(node), shard=cfg.shard)
+        Wc = alir_transforms(child_stack, Y, shard=cfg.shard)
+        # compose: worker → child (c.transforms) then child → node (Wc)
+        transforms = jnp.concatenate(
+            [c.transforms @ Wc[i] for i, c in enumerate(kids)])
+        jax.block_until_ready(transforms)
+        self.stats["solved"] += 1
+        self.stats["node_s"][(node.level, node.index)] = (
+            time.perf_counter() - t0)
+        mask = jnp.concatenate([c.mask for c in kids])
+        return NodeResult(level=node.level, index=node.index,
+                          worker_ids=ids, Y=Y, valid=valid, mask=mask,
+                          transforms=transforms, disps=disps)
+
+    # -- persistence -------------------------------------------------------
+    def _persist_node(self, res: NodeResult, sig: tuple[int, ...]) -> None:
+        arrays = {"Y": res.Y, "valid": res.valid, "mask": res.mask,
+                  "transforms": res.transforms}
+        if res.disps is not None:
+            arrays["disps"] = res.disps
+        publish_tree_node(
+            self.state_dir, res.level, res.index, arrays,
+            meta={"arrived": list(sig), "fan_in": self.config.fan_in,
+                  "level": res.level, "index": res.index})
+
+    def _load_state(self) -> None:
+        """Reload persisted leaves (arrivals) and interior solves; a
+        reloaded node is only *used* when its arrived-signature still
+        matches, so stale persisted nodes are harmless."""
+        for level, index in list_tree_nodes(self.state_dir):
+            loaded = load_tree_node(self.state_dir, level, index)
+            if loaded is None:
+                continue
+            arrays, meta, _ = loaded
+            if meta.get("fan_in") != self.config.fan_in:
+                continue
+            if level == 0:
+                self._models[int(index)] = (
+                    np.asarray(arrays["model"]),
+                    np.asarray(arrays["mask"]).astype(bool))
+                self.stats["loaded"] += 1
+            else:
+                sig = tuple(int(w) for w in meta.get("arrived", ()))
+                res = NodeResult(
+                    level=level, index=index, worker_ids=sig,
+                    Y=jnp.asarray(arrays["Y"]),
+                    valid=jnp.asarray(arrays["valid"]).astype(bool),
+                    mask=jnp.asarray(arrays["mask"]).astype(bool),
+                    transforms=jnp.asarray(arrays["transforms"]),
+                    disps=(jnp.asarray(arrays["disps"])
+                           if "disps" in arrays else None))
+                self._cache[(level, index)] = (sig, res)
+                self.stats["loaded"] += 1
+
+
+# Register with the merge registry (merge.get_merger imports lazily; a
+# direct import of this module keeps the mapping consistent too).
+from repro.core import merge as _merge_mod  # noqa: E402
+
+_merge_mod.MERGERS.setdefault("alir_tree", TreeAlirMerger)

@@ -11,12 +11,12 @@ merge-from-whatever-finished.
 from repro.elastic.cursor import WorkerCursor
 from repro.elastic.faults import FaultEvent, FaultSchedule
 from repro.elastic.runner import (
-    ElasticRunner, SimulationResult, simulate_elastic,
+    ElasticRunner, SimulationResult, merge_finished, simulate_elastic,
     train_submodels_elastic)
 from repro.elastic.store import WorkerStateStore
 
 __all__ = [
     "WorkerCursor", "WorkerStateStore", "FaultEvent", "FaultSchedule",
-    "ElasticRunner", "SimulationResult", "simulate_elastic",
-    "train_submodels_elastic",
+    "ElasticRunner", "SimulationResult", "merge_finished",
+    "simulate_elastic", "train_submodels_elastic",
 ]

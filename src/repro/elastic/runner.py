@@ -34,7 +34,7 @@ from repro.core import sgns
 from repro.core.async_trainer import AsyncShardTrainer
 from repro.core.driver import (
     PipelineResult, TrainingSetup, prepare_training, worker_chunk_key)
-from repro.core.merge import StackedModels
+from repro.core.merge import MergeConfig, MergeResult, Merger, StackedModels, get_merger
 from repro.data.pipeline import HostShardPlan, PairChunkStream
 from repro.elastic.cursor import WorkerCursor
 from repro.elastic.faults import FaultSchedule
@@ -331,6 +331,50 @@ def simulate_elastic(
         params=finished, finished_tick=finished_tick,
         unfinished=sorted(set(range(num_workers)) - set(finished)),
         ticks=tick, stolen=stolen)
+
+
+def merge_finished(
+    sim: SimulationResult,
+    mask,
+    *,
+    merger: Merger | str = "alir",
+    config: MergeConfig | None = None,
+    require_quorum: bool = True,
+    **overrides,
+) -> MergeResult:
+    """Merge-from-whatever-finished through the unified Merger registry:
+    feed the simulation's finished workers into any registered merger
+    (``"alir"``, the ``"alir_tree"`` reduction tree, ...) **in
+    finished-tick order** — the realistic arrival stream — and return
+    the canonical :meth:`~repro.core.merge.Merger.final` fold.
+
+    Every registry merger restacks in canonical worker order before
+    solving, so the result is independent of the arrival (finish)
+    order; ``quorum``/``deadline`` dials (via ``config`` or keyword
+    ``overrides``) apply exactly as documented on
+    :class:`~repro.core.merge.MergeConfig` — a preempted cluster that
+    finished fewer than ``quorum`` workers raises instead of silently
+    publishing a thin consensus.
+
+    Args:
+        sim: a :func:`simulate_elastic` result (or anything with
+            ``params``/``finished_tick``).
+        mask: ``(num_workers, V)`` per-worker presence
+            (``TrainingSetup.mask``).
+        merger: registry name or pre-built :class:`Merger`.
+        config / overrides: :class:`MergeConfig` dials
+            (``get_merger(merger, config, **overrides)``).
+        require_quorum: forwarded to :meth:`Merger.final`.
+    """
+    m = get_merger(merger, config, **overrides) if isinstance(merger, str) \
+        else merger
+    mask = np.asarray(mask)
+    order = sorted(sim.params,
+                   key=lambda w: (sim.finished_tick.get(w, 0), w))
+    for w in order:
+        m.add(int(w), np.asarray(sim.params[w]["W"]), mask[int(w)],
+              fold=False)
+    return m.final(require_quorum=require_quorum)
 
 
 # ---------------------------------------------------------------------------

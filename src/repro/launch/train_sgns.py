@@ -48,7 +48,17 @@ def main(argv=None):
     ap.add_argument("--vocab", type=int, default=2000)
     ap.add_argument("--sentences", type=int, default=30000)
     ap.add_argument("--merge", nargs="+",
-                    default=("concat", "pca", "alir_pca"))
+                    default=("concat", "pca", "alir_pca"),
+                    help="merge methods to apply (see "
+                         "repro.core.merge.MERGE_METHODS; alir_tree is "
+                         "the log-depth reduction-tree merge)")
+    ap.add_argument("--merge-fan-in", type=int, default=2,
+                    help="reduction-tree arity for the alir_tree merge "
+                         "(>= 2; depth = ceil(log_fan_in(workers)))")
+    ap.add_argument("--merge-shard", type=int, default=1,
+                    help="ALiR Gram-accumulation row-block count — a "
+                         "static dial: bits depend on the count, never "
+                         "on which host computes which block")
     ap.add_argument("--baseline", action="store_true",
                     help="also train the synchronized baseline")
     ap.add_argument("--engine", default="sparse",
@@ -136,14 +146,17 @@ def main(argv=None):
             ckpt_every=args.ckpt_every, epochs=args.epochs,
             batch_size=args.batch, rate=args.rate, window=args.window,
             max_vocab=None, base_min_count=20, engine=args.engine)
-        res = apply_merges(res, tuple(args.merge), out_dim=cfg.dim)
+        res = apply_merges(res, tuple(args.merge), out_dim=cfg.dim,
+                           fan_in=args.merge_fan_in, shard=args.merge_shard)
     else:
         res = run_pipeline(
             corpus, args.vocab, strategy=args.strategy,
             num_workers=args.workers, cfg=cfg, epochs=args.epochs,
             batch_size=args.batch, rate=args.rate,
             window=args.window, max_vocab=None, base_min_count=20,
-            merge_methods=tuple(args.merge), engine=args.engine,
+            merge_methods=tuple(args.merge),
+            merge_fan_in=args.merge_fan_in, merge_shard=args.merge_shard,
+            engine=args.engine,
             process_index=args.process_index, process_count=processes,
             **train_kw)
     print(f"strategy={args.strategy} workers={args.workers} "

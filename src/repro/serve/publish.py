@@ -1,7 +1,8 @@
 """Incremental merge → versioned artifact: the train→serve bridge.
 
 The trainer's output is a stack of sub-models; this module folds them
-through :class:`~repro.core.merge.IncrementalAlirMerger` **as they
+through a :class:`~repro.core.merge.Merger` (any registry entry — the
+flat ``"alir"`` solver or the ``"alir_tree"`` reduction tree) **as they
 arrive** and atomically publishes one artifact version per fold. A
 serving process pointed at the directory picks up each version via
 ``refresh()`` — the first workers' embeddings are live while the rest
@@ -16,7 +17,7 @@ from typing import Iterable, Iterator
 import numpy as np
 
 from repro.checkpoint.io import publish_table
-from repro.core.merge import FoldResult, IncrementalAlirMerger, alir_transforms
+from repro.core.merge import MergeResult, Merger, alir_transforms, get_merger
 
 
 def submodel_arrivals(stacked, order: Iterable[int] | None = None
@@ -38,9 +39,9 @@ def publish_incremental(
     publish_every: int = 1,
     include_models: bool = True,
     final_cold_fold: bool = True,
-    merger: IncrementalAlirMerger | None = None,
+    merger: Merger | str | None = None,
     meta: dict | None = None,
-) -> tuple[list[int], FoldResult]:
+) -> tuple[list[int], MergeResult]:
     """Fold arriving sub-models and publish a table version per fold.
 
     Args:
@@ -59,16 +60,17 @@ def publish_incremental(
             too; turn off at production vocab where ``n·V·d`` dwarfs
             the table and only reconstruction (absent rows) is needed.
         final_cold_fold: finish with ``fold(warm=False)`` — the
-            canonical solve that is bit-identical to the batch
-            ``merge_alir`` regardless of arrival order.
-        merger: a pre-configured :class:`IncrementalAlirMerger`
-            (defaults to one with the standard init/iters/tol).
+            canonical solve that is bit-identical to the batch merge
+            regardless of arrival order.
+        merger: a :class:`~repro.core.merge.Merger` instance or registry
+            name (default ``"alir"``; ``"alir_tree"`` scales the fold to
+            large worker counts).
         meta: extra manifest fields for every published version.
 
     Returns:
-        ``(published version numbers, final FoldResult)``.
+        ``(published version numbers, final MergeResult)``.
     """
-    merger = merger or IncrementalAlirMerger()
+    merger = get_merger(merger if merger is not None else "alir")
     versions: list[int] = []
     fold = None
     arrivals = list(arrivals)
@@ -76,9 +78,12 @@ def publish_incremental(
         raise ValueError("no sub-model arrivals to publish")
     for k, (worker_id, model, mask) in enumerate(arrivals):
         last = k == len(arrivals) - 1
-        fold = merger.add(worker_id, model, mask)
+        result = merger.add(worker_id, model, mask)
+        fold = result if result is not None else fold
         if last and final_cold_fold:
             fold = merger.fold(warm=False)
+        if fold is None:
+            continue  # late arrival before any fold — nothing servable yet
         if last or (k + 1) % publish_every == 0:
             versions.append(_publish_fold(
                 merger, fold, artifact_dir, word_ids=word_ids,
@@ -87,11 +92,15 @@ def publish_incremental(
     return versions, fold
 
 
-def _publish_fold(merger: IncrementalAlirMerger, fold: FoldResult,
+def _publish_fold(merger: Merger, fold: MergeResult,
                   artifact_dir: str, *, word_ids, include_models: bool,
                   meta: dict) -> int:
     stacked = merger.stacked()
-    Ws = alir_transforms(stacked, fold.Y)
+    # ALiR mergers carry the worker→consensus maps in the result (the
+    # tree merger's are composed down the tree); fall back to a direct
+    # Procrustes solve for mergers that don't.
+    Ws = (fold.transforms if fold.transforms is not None
+          else alir_transforms(stacked, fold.Y))
     return publish_table(
         artifact_dir,
         np.asarray(fold.Y), np.asarray(fold.valid),
@@ -100,5 +109,5 @@ def _publish_fold(merger: IncrementalAlirMerger, fold: FoldResult,
         mask=np.asarray(stacked.mask),
         transforms=np.asarray(Ws),
         models=np.asarray(stacked.models) if include_models else None,
-        meta={"merge": "alir_incremental",
+        meta={"merge": f"{merger.name}_incremental",
               "n_folded": merger.n_folded, **meta})

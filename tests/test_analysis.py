@@ -150,6 +150,24 @@ def test_collective_name_in_strings_is_not_a_false_positive():
     assert counts.get("stablehlo.add") == 1 and counts.get("add") == 1
 
 
+def test_merge_gram_is_the_one_intentional_collective():
+    """The zero-collective contract is scoped to the TRAIN path. The
+    merge phase's sharded Gram reduction is the one intentional
+    collective: its lowering must show exactly one all_gather — visible
+    to the same certifier that keeps the train path clean — and the
+    certifier must (correctly) reject it if pointed there."""
+    import jax
+
+    from repro.sharding.merge import lower_mesh_gram
+
+    mesh = jax.make_mesh((1,), ("worker",))
+    lowered = lower_mesh_gram(64, 8, mesh, num_shards=4)
+    hits = count_collective_ops(lowered.as_text())
+    assert hits == {"stablehlo.all_gather": 1}, hits
+    with pytest.raises(ContractViolation, match="zero-collective"):
+        certify_zero_collective(lowered, label="merge-gram")
+
+
 def test_broken_table_donation_aliasing_is_caught():
     """Mutation: a step whose outputs cannot reuse the donated (V, d)
     buffers (transposed tables) must fail the aliasing certificate."""

@@ -10,7 +10,7 @@ Four claims under test (docs/ARCHITECTURE.md §Elasticity):
    rename leaves readers on the previous version, never a torn one, and
    ``gc_orphans`` sweeps the debris without reopening version numbers.
 3. **Quorum merge** — ``IncrementalAlirMerger.final()`` over whatever
-   arrived is bit-identical to batch ``merge_alir`` over that subset.
+   arrived is bit-identical to the batch ALiR merge over that subset.
 4. **Fault equivalence** — seeded kill/restart/delay/steal schedules over
    the in-process multi-host simulation produce final tables
    bit-identical to the uninterrupted elastic run (quick fixed schedules
@@ -322,7 +322,7 @@ def test_quorum_final_matches_batch_over_survivors(n_missing):
     _, models, masks = _rotated_world(n=4, seed=100 + n_missing)
     rng = np.random.default_rng(n_missing)
     survivors = sorted(rng.choice(4, size=4 - n_missing, replace=False))
-    batch = mg.merge_alir(mg.stack_models(
+    batch = mg.get_merger("alir").merge(mg.stack_models(
         [models[w] for w in survivors], [masks[w] for w in survivors]))
     m = mg.IncrementalAlirMerger(quorum=len(survivors))
     assert not m.quorum_met
@@ -330,9 +330,9 @@ def test_quorum_final_matches_batch_over_survivors(n_missing):
         m.add(int(w), models[w], masks[w])
     assert m.quorum_met
     final = m.final()
-    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
     np.testing.assert_array_equal(np.asarray(final.valid),
-                                  np.asarray(batch[1]))
+                                  np.asarray(batch.valid))
 
 
 def test_quorum_unmet_raises_but_can_be_overridden():
@@ -359,9 +359,9 @@ def test_deadline_excludes_late_arrivals():
     assert m.late_workers == [3]
     final = m.final()
     assert final.worker_ids == (0, 2)              # pure on-time subset
-    batch = mg.merge_alir(mg.stack_models([models[0], models[2]],
-                                          [masks[0], masks[2]]))
-    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+    batch = mg.get_merger("alir").merge(
+        mg.stack_models([models[0], models[2]], [masks[0], masks[2]]))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
 
 
 def test_dead_worker_checkpoint_round_trips_its_exclusive_words():
@@ -383,7 +383,8 @@ def test_dead_worker_checkpoint_round_trips_its_exclusive_words():
 
     # Fold the dead worker's checkpointed table in (it saw the block):
     stacked = mg.stack_models(models, masks)
-    Yall, valid_all, _ = mg.merge_alir(stacked, max_iters=60, tol=1e-12)
+    res_all = mg.get_merger("alir", max_iters=60, tol=1e-12).merge(stacked)
+    Yall, valid_all = res_all.Y, res_all.valid
     assert np.asarray(valid_all)[sl].all()         # coverage rescued
     Ws = np.asarray(mg.alir_transforms(stacked, Yall))
     # At the ALiR fixed point, an exclusively-dead-worker consensus row
@@ -437,6 +438,31 @@ def test_unrecovered_kill_leaves_workers_unfinished(setup, tmp_path):
     assert sim.ticks < 100
 
 
+def test_merge_finished_feeds_registry_merger(setup, tmp_path):
+    """merge_finished: whatever the simulation finished goes through the
+    unified registry — quorum enforced, arrival order erased, and any
+    registered merger (flat or reduction tree) accepted."""
+    r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
+    sim = simulate_elastic(r, 2, FaultSchedule((FaultEvent("kill", 1, 1),)))
+    survivors = sim.finished
+    assert survivors == [0, 1]
+    from repro.elastic import merge_finished
+    mask = np.asarray(setup.mask)
+    with pytest.raises(RuntimeError, match="quorum"):
+        merge_finished(sim, mask, quorum=N_WORKERS)
+    final = merge_finished(sim, mask, quorum=len(survivors))
+    assert final.worker_ids == tuple(survivors)
+    batch = mg.get_merger("alir").merge(mg.stack_models(
+        [sim.params[w]["W"] for w in survivors],
+        [mask[w] for w in survivors]))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
+    # the reduction tree drops in through the same seam
+    tree = merge_finished(sim, mask, merger="alir_tree", fan_in=2,
+                          quorum=len(survivors))
+    assert tree.worker_ids == tuple(survivors)
+    assert np.isfinite(np.asarray(tree.Y)).all()
+
+
 # ======================================================================
 # 6. The chaos matrix (CI job: pytest -m chaos)
 # ======================================================================
@@ -477,9 +503,9 @@ def test_chaos_steal(setup, baseline, tmp_path, seed):
 @pytest.mark.parametrize("seed", CHAOS_SEEDS)
 def test_chaos_quorum_merge(setup, baseline, tmp_path, seed):
     """Seeded unrecovered kills, no stealing: merge whatever finished.
-    The quorum fold must be bit-identical to batch merge_alir over the
-    surviving subset, and every survivor's table bit-identical to the
-    uninterrupted run."""
+    The quorum fold must be bit-identical to the batch ALiR merge over
+    the surviving subset, and every survivor's table bit-identical to
+    the uninterrupted run."""
     faults = FaultSchedule.seeded(seed + 2000, hosts=4, horizon=5,
                                   kills=2, restarts=0)
     r = ElasticRunner(setup, WorkerStateStore(str(tmp_path)), ckpt_every=1)
@@ -494,15 +520,15 @@ def test_chaos_quorum_merge(setup, baseline, tmp_path, seed):
     mask = np.asarray(setup.mask)
     models = [sim.params[w]["W"] for w in survivors]
     masks = [mask[w] for w in survivors]
-    batch = mg.merge_alir(mg.stack_models(models, masks))
+    batch = mg.get_merger("alir").merge(mg.stack_models(models, masks))
     m = mg.IncrementalAlirMerger(quorum=len(survivors))
     order = np.random.default_rng(seed).permutation(survivors)
     for w in order:
         m.add(int(w), sim.params[int(w)]["W"], mask[int(w)])
     final = m.final()
-    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch[0]))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
     np.testing.assert_array_equal(np.asarray(final.valid),
-                                  np.asarray(batch[1]))
+                                  np.asarray(batch.valid))
 
 
 # ======================================================================

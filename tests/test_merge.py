@@ -1,4 +1,7 @@
-"""Merge phase: Concat / PCA / ALiR — alignment, OOV reconstruction."""
+"""Merge phase: the Merger registry, Concat / PCA / ALiR — alignment,
+OOV reconstruction, sharded Gram accumulation, deprecated shims."""
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +35,16 @@ def procrustes_distance(A, B):
     return float(np.linalg.norm(A @ W - B) / np.linalg.norm(B))
 
 
+def alir_merge(stacked, *, init="pca", max_iters=10, tol=1e-4, key=None,
+               shard=1):
+    """Registry-path batch ALiR returning the legacy (Y, valid, disps)
+    triple (what the deprecated merge_alir shim used to return)."""
+    m = mg.AlirMerger(mg.MergeConfig(init=init, max_iters=max_iters,
+                                     tol=tol, shard=shard), key=key)
+    r = m.merge(stacked)
+    return r.emb, r.valid, r.disps
+
+
 def test_procrustes_is_orthogonal_and_exact():
     rng = np.random.default_rng(1)
     A = rng.normal(size=(50, 8)).astype(np.float32)
@@ -44,7 +57,7 @@ def test_procrustes_is_orthogonal_and_exact():
 
 def test_alir_recovers_consensus_full_vocab():
     Y, stacked = make_rotated_models(miss_frac=0.0, noise=0.01)
-    out, valid, disps = mg.merge_alir(stacked, init="random", max_iters=12)
+    out, valid, disps = alir_merge(stacked, init="random", max_iters=12)
     assert bool(valid.all())
     assert procrustes_distance(np.asarray(out), Y) < 0.05
     # displacement decreases over iterations
@@ -54,7 +67,7 @@ def test_alir_recovers_consensus_full_vocab():
 
 def test_alir_reconstructs_missing_rows():
     Y, stacked = make_rotated_models(V=150, n=5, miss_frac=0.3, noise=0.005, seed=3)
-    out, valid, _ = mg.merge_alir(stacked, init="pca", max_iters=15)
+    out, valid, _ = alir_merge(stacked, init="pca", max_iters=15)
     assert bool(valid.all())  # union covers everything by construction
     # consensus close to truth up to rotation
     assert procrustes_distance(np.asarray(out), Y) < 0.08
@@ -78,7 +91,7 @@ def test_alir_trace_frozen_after_convergence():
     # noise-free rotated models converge in a couple of iterations
     _, stacked = make_rotated_models(V=80, d=8, n=3, noise=0.0, seed=7)
     tol = 1e-4
-    _, _, disps = mg.merge_alir(stacked, init="random", max_iters=20, tol=tol)
+    _, _, disps = alir_merge(stacked, init="random", max_iters=20, tol=tol)
     d = np.asarray(disps)
     deltas = np.abs(np.diff(d, prepend=np.inf))
     conv = int(np.argmax(deltas < tol))         # first converged iteration
@@ -91,8 +104,8 @@ def test_alir_converged_result_unchanged_by_extra_iterations():
     max_iters=20 is identical once converged before iteration 6."""
     _, stacked = make_rotated_models(V=80, d=8, n=3, noise=0.0, seed=7)
     key = jax.random.PRNGKey(1)
-    y1, _, d1 = mg.merge_alir(stacked, init="random", max_iters=6, key=key)
-    y2, _, d2 = mg.merge_alir(stacked, init="random", max_iters=20, key=key)
+    y1, _, d1 = alir_merge(stacked, init="random", max_iters=6, key=key)
+    y2, _, d2 = alir_merge(stacked, init="random", max_iters=20, key=key)
     assert np.abs(np.diff(np.asarray(d1))).min() < 1e-4  # converged in 6
     np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
 
@@ -143,14 +156,15 @@ def test_average_fails_without_alignment_alir_does_not():
         np.fill_diagonal(sim_g, -np.inf)
         return float((sim_e.argmax(1) == sim_g.argmax(1)).mean())
 
-    avg, _ = mg.merge_average(stacked)
-    alir, _, _ = mg.merge_alir(stacked, init="random", max_iters=12)
+    avg = mg.get_merger("average").merge(stacked).emb
+    alir, _, _ = alir_merge(stacked, init="random", max_iters=12)
     assert neighbor_overlap(np.asarray(alir)) > neighbor_overlap(np.asarray(avg)) + 0.2
 
 
 def test_concat_dims_and_intersection():
     _, stacked = make_rotated_models(V=80, d=8, n=3, miss_frac=0.2, seed=7)
-    emb, valid = mg.merge_concat(stacked)
+    res = mg.get_merger("concat").merge(stacked)
+    emb, valid = res.emb, res.valid
     assert emb.shape == (80, 3 * 8)
     inter = np.asarray(stacked.mask).all(0)
     np.testing.assert_array_equal(np.asarray(valid), inter)
@@ -159,7 +173,8 @@ def test_concat_dims_and_intersection():
 
 def test_pca_shape_and_variance_order():
     _, stacked = make_rotated_models(V=200, d=10, n=4, seed=9)
-    emb, valid = mg.merge_pca(stacked, out_dim=10)
+    res = mg.get_merger("pca", out_dim=10).merge(stacked)
+    emb, valid = res.emb, res.valid
     assert emb.shape == (200, 10)
     e = np.asarray(emb)[np.asarray(valid)]
     var = e.var(axis=0)
@@ -182,12 +197,12 @@ def test_incremental_add_validations():
 
 def test_incremental_cold_fold_bitwise_matches_batch():
     """fold(warm=False) after all arrivals must reproduce the batch
-    merge_alir bit-for-bit, regardless of arrival order (the canonical
+    merge bit-for-bit, regardless of arrival order (the canonical
     worker-id restacking). Exhaustive permutations are property-tested
     in test_property.py; these are fixed representative orders."""
     _, stacked = make_rotated_models(V=80, d=8, n=4, miss_frac=0.2, seed=2)
     models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
-    Yb, validb, _ = mg.merge_alir(stacked)
+    Yb, validb, _ = alir_merge(stacked)
     for order in ((0, 1, 2, 3), (3, 1, 0, 2), (2, 3, 1, 0)):
         m = mg.IncrementalAlirMerger()
         for w in order:
@@ -211,7 +226,7 @@ def test_incremental_warm_folds_match_batch_up_to_rotation():
     # coverage grows monotonically with arrivals
     counts = [int(np.asarray(f.valid).sum()) for f in folds]
     assert counts == sorted(counts) and counts[-1] == 100
-    Yb, validb, _ = mg.merge_alir(stacked)
+    Yb, validb, _ = alir_merge(stacked)
     v = np.asarray(validb)
     warm = np.asarray(folds[-1].Y)
     assert procrustes_distance(warm[v], np.asarray(Yb)[v]) < 0.05
@@ -233,3 +248,192 @@ def test_merge_dispatch_all_methods():
         emb, valid = mg.merge(stacked, m, out_dim=6, key=jax.random.PRNGKey(0))
         assert emb.shape[0] == 60
         assert np.isfinite(np.asarray(emb)).all(), m
+
+
+# ---------------------------------------------------------------------------
+# The Merger registry (the unified API surface).
+# ---------------------------------------------------------------------------
+def test_get_merger_registry_names_and_overrides():
+    for name in mg.MERGER_NAMES:
+        m = mg.get_merger(name)
+        assert m.name == name, name
+    m = mg.get_merger("alir", max_iters=3, quorum=2, deadline=5.0)
+    assert (m.config.max_iters, m.config.quorum, m.config.deadline) == (3, 2, 5.0)
+    # config + overrides compose via dataclasses.replace
+    m = mg.get_merger("alir_tree", mg.MergeConfig(max_iters=7), fan_in=4)
+    assert (m.config.max_iters, m.config.fan_in) == (7, 4)
+    # instances pass through untouched; mixing with overrides is an error
+    inst = mg.get_merger("average")
+    assert mg.get_merger(inst) is inst
+    with pytest.raises(ValueError, match="instance"):
+        mg.get_merger(inst, quorum=2)
+    with pytest.raises(ValueError, match="unknown merger"):
+        mg.get_merger("nope")
+
+
+def test_merge_config_validation():
+    with pytest.raises(ValueError, match="quorum"):
+        mg.get_merger("alir", quorum=0)
+    with pytest.raises(ValueError, match="deadline"):
+        mg.get_merger("alir", deadline=-1.0)
+    with pytest.raises(ValueError, match="fan_in"):
+        mg.get_merger("alir_tree", fan_in=1)
+    with pytest.raises(ValueError, match="shard"):
+        mg.get_merger("alir", shard=0)
+
+
+def test_every_merger_supports_batch_and_incremental():
+    """Batch and incremental are two methods on the same object: for
+    every registered merger, add()-ing all workers then final() equals
+    the one-shot batch merge bit-for-bit."""
+    _, stacked = make_rotated_models(V=64, d=8, n=4, miss_frac=0.2, seed=13)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    for name in mg.MERGER_NAMES:
+        batch = mg.get_merger(name, max_iters=6).merge(stacked)
+        inc = mg.get_merger(name, max_iters=6)
+        for w in (2, 0, 3, 1):
+            inc.add(w, models[w], masks[w], fold=False)
+        final = inc.final()
+        assert final.worker_ids == (0, 1, 2, 3), name
+        np.testing.assert_array_equal(np.asarray(final.emb),
+                                      np.asarray(batch.emb), err_msg=name)
+
+
+def test_alir_result_carries_transforms_for_reconstruction():
+    """MergeResult.transforms must be the same maps alir_transforms
+    solves — the serving tier reconstructs from the result directly."""
+    _, stacked = make_rotated_models(V=70, d=8, n=3, miss_frac=0.3, seed=4)
+    res = mg.get_merger("alir").merge(stacked)
+    Ws = mg.alir_transforms(stacked, res.emb)
+    np.testing.assert_array_equal(np.asarray(res.transforms), np.asarray(Ws))
+    np.testing.assert_array_equal(np.asarray(res.mask),
+                                  np.asarray(stacked.mask))
+
+
+def test_deprecated_shims_warn_and_delegate():
+    """The legacy free functions must emit DeprecationWarning and return
+    exactly what the registry path computes."""
+    _, stacked = make_rotated_models(V=50, d=6, n=3, miss_frac=0.1, seed=8)
+    with pytest.warns(DeprecationWarning, match="merge_alir"):
+        Y, valid, disps = mg.merge_alir(stacked, max_iters=6)
+    reg = mg.get_merger("alir", max_iters=6).merge(stacked)
+    np.testing.assert_array_equal(np.asarray(Y), np.asarray(reg.emb))
+    with pytest.warns(DeprecationWarning, match="merge_concat"):
+        emb, _ = mg.merge_concat(stacked)
+    np.testing.assert_array_equal(
+        np.asarray(emb), np.asarray(mg.get_merger("concat").merge(stacked).emb))
+    with pytest.warns(DeprecationWarning, match="merge_average"):
+        emb, _ = mg.merge_average(stacked)
+    np.testing.assert_array_equal(
+        np.asarray(emb), np.asarray(mg.get_merger("average").merge(stacked).emb))
+    with pytest.warns(DeprecationWarning, match="merge_pca"):
+        emb, _ = mg.merge_pca(stacked, out_dim=6)
+    np.testing.assert_array_equal(
+        np.asarray(emb),
+        np.asarray(mg.get_merger("pca", out_dim=6).merge(stacked).emb))
+
+
+def test_registry_paths_emit_no_deprecation_warnings():
+    """Internal call paths must not route through the shims."""
+    _, stacked = make_rotated_models(V=50, d=6, n=3, seed=8)
+    models, masks = np.asarray(stacked.models), np.asarray(stacked.mask)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        for name in mg.MERGER_NAMES:
+            m = mg.get_merger(name, max_iters=4)
+            m.merge(stacked)
+            m.add(0, models[0], masks[0])
+        mg.merge(stacked, "alir_pca", out_dim=6)
+        mg.merge(stacked, "pca", out_dim=6)
+
+
+def test_pca_merger_equivalent_to_legacy_function():
+    """merge_pca folded into the registry: the PcaMerger output is the
+    legacy function's output, bit for bit, at every out_dim."""
+    _, stacked = make_rotated_models(V=90, d=8, n=3, miss_frac=0.15, seed=21)
+    for out_dim in (4, 8, 16):
+        reg = mg.get_merger("pca", out_dim=out_dim).merge(stacked)
+        with pytest.warns(DeprecationWarning):
+            legacy_emb, legacy_valid = mg.merge_pca(stacked, out_dim=out_dim)
+        np.testing.assert_array_equal(np.asarray(reg.emb),
+                                      np.asarray(legacy_emb))
+        np.testing.assert_array_equal(np.asarray(reg.valid),
+                                      np.asarray(legacy_valid))
+
+
+# ---------------------------------------------------------------------------
+# Sharded Gram accumulation — the distributable core of the ALiR solve.
+# ---------------------------------------------------------------------------
+def test_gram_partials_bit_identical_across_host_partitions():
+    """The exact invariant that makes the solve distributable: each row
+    block's partial Gram is bit-identical whether computed in the
+    single-host batched call or separately by the host owning the
+    slice. (The *reduction* is then the canonical fixed order.)"""
+    rng = np.random.default_rng(0)
+    V, d, S = 128, 16, 8
+    A = rng.normal(size=(V, d)).astype(np.float32)
+    B = rng.normal(size=(V, d)).astype(np.float32)
+    full = np.asarray(mg.gram_block_partials(jnp.asarray(A), jnp.asarray(B), S))
+    blk = V // S
+    for hosts in (2, 4, 8):                   # simulated host partitions
+        per_host = S // hosts
+        got = []
+        for h in range(hosts):                # each host: its own slice only
+            sl = slice(h * per_host * blk, (h + 1) * per_host * blk)
+            got.append(np.asarray(mg.gram_block_partials(
+                jnp.asarray(A[sl]), jnp.asarray(B[sl]), per_host)))
+        np.testing.assert_array_equal(np.concatenate(got), full)
+
+
+def test_sharded_gram_fixed_order_reduction_is_canonical():
+    """sharded_gram at a given shard count is deterministic, equals the
+    explicit ascending-order partial sum, and matches the dense matmul
+    to float tolerance (not bit-exactly — fp addition reassociated)."""
+    rng = np.random.default_rng(3)
+    A = rng.normal(size=(200, 12)).astype(np.float32)
+    B = rng.normal(size=(200, 12)).astype(np.float32)
+    for S in (2, 5, 8):
+        g = np.asarray(mg.sharded_gram(jnp.asarray(A), jnp.asarray(B), S))
+        g2 = np.asarray(mg.sharded_gram(jnp.asarray(A), jnp.asarray(B), S))
+        np.testing.assert_array_equal(g, g2)
+        parts = np.asarray(mg.gram_block_partials(jnp.asarray(A),
+                                                  jnp.asarray(B), S))
+        acc = np.zeros_like(parts[0])
+        for p in parts:                        # ascending block order
+            acc = acc + p
+        np.testing.assert_allclose(g, acc, atol=1e-5)
+        np.testing.assert_allclose(g, A.T @ B, atol=1e-3)
+    # shard=1 is the plain matmul, bit for bit
+    np.testing.assert_array_equal(
+        np.asarray(mg.sharded_gram(jnp.asarray(A), jnp.asarray(B), 1)),
+        np.asarray(jnp.asarray(A).T @ jnp.asarray(B)))
+
+
+def test_mesh_sharded_gram_bit_identical_to_local_path():
+    """The worker-mesh execution (shard_map + all_gather + ordered scan)
+    must be bit-identical to the local fixed-order reduction — bits
+    depend on the shard dial, never on the partition."""
+    from repro.sharding.merge import mesh_sharded_gram
+
+    mesh = jax.make_mesh((1,), ("worker",))
+    rng = np.random.default_rng(5)
+    A = rng.normal(size=(128, 16)).astype(np.float32)
+    B = rng.normal(size=(128, 16)).astype(np.float32)
+    for S in (1, 4, 8):
+        got = np.asarray(mesh_sharded_gram(A, B, mesh, num_shards=S))
+        ref = np.asarray(mg.sharded_gram(jnp.asarray(A), jnp.asarray(B), S))
+        np.testing.assert_array_equal(got, ref, err_msg=f"shards={S}")
+
+
+def test_sharded_solve_deterministic_and_quality_preserved():
+    """shard>1 changes the Gram bits (documented) but not the solve
+    quality: the sharded consensus matches the dense one up to a tiny
+    rotation residual, and is itself exactly reproducible."""
+    Y, stacked = make_rotated_models(V=128, d=8, n=4, miss_frac=0.2, seed=17)
+    dense, _, _ = alir_merge(stacked, max_iters=12)
+    for S in (4, 8):
+        s1, _, _ = alir_merge(stacked, max_iters=12, shard=S)
+        s2, _, _ = alir_merge(stacked, max_iters=12, shard=S)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        assert procrustes_distance(np.asarray(s1), np.asarray(dense)) < 1e-3
+        assert procrustes_distance(np.asarray(s1), Y) < 0.08

@@ -1,0 +1,275 @@
+"""The log-depth reduction-tree merge (repro.core.merge_tree).
+
+Acceptance properties under test:
+
+1. **Topology determinism** — build_tree is a pure function of the
+   canonical (sorted) worker-id set and fan_in.
+2. **Permutation invariance** — 32+ sub-models folded in shuffled
+   arrival orders produce a bit-identical root consensus (fixed-seed
+   here; exhaustive permutations under hypothesis in test_property.py).
+3. **Gauge-equivalence with the flat solve** — the tree consensus
+   matches the flat batch ALiR merge up to a small rotation residual.
+4. **Any-level serving** — composed transforms let reconstruct_worker
+   rebuild a worker's table from ANY solved node, not just the root.
+5. **Elastic node semantics** — deadline closes the window (late leaves
+   never join), partially-arrived interior nodes solve over present
+   children, quorum applies at the root.
+6. **Restartability** — persisted leaves/nodes reload and are reused
+   (zero re-solves) with a bit-identical result.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import merge as mg
+from repro.core import merge_tree as mt
+
+
+def rotated_world(V=96, d=8, n=8, miss_frac=0.25, seed=0):
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(n):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) >= miss_frac
+        mask[: d + 2] = True
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 0.0
+        models.append(M)
+        masks.append(mask)
+    return Y, models, masks
+
+
+def procrustes_distance(A, B):
+    import jax.numpy as jnp
+    W = np.asarray(mg.orthogonal_procrustes(jnp.asarray(A), jnp.asarray(B)))
+    return float(np.linalg.norm(A @ W - B) / np.linalg.norm(B))
+
+
+# ------------------------------------------------------------------ topology
+def test_build_tree_topology_is_canonical():
+    # unsorted, duplicated ids → same tree as the sorted unique set
+    a = mt.build_tree([5, 1, 3, 1, 9], fan_in=2)
+    b = mt.build_tree([1, 3, 5, 9], fan_in=2)
+    assert a == b
+    assert a.worker_ids == (1, 3, 5, 9)
+    assert mt.tree_depth(a) == 2
+    levels = mt.tree_levels(a)
+    assert [len(lv) for lv in levels] == [4, 2, 1]
+    # consecutive grouping in id order at every level
+    assert levels[1][0].worker_ids == (1, 3)
+    assert levels[1][1].worker_ids == (5, 9)
+
+
+@pytest.mark.parametrize("n,fan_in,depth", [
+    (2, 2, 1), (8, 2, 3), (9, 2, 4), (32, 2, 5), (32, 4, 3),
+    (128, 2, 7), (128, 8, 3), (5, 4, 2),
+])
+def test_tree_depth_is_log_fan_in(n, fan_in, depth):
+    root = mt.build_tree(range(n), fan_in=fan_in)
+    assert mt.tree_depth(root) == depth
+    assert root.worker_ids == tuple(range(n))
+    # every worker appears exactly once among the leaves
+    leaves = mt.tree_levels(root)[0]
+    assert [lf.worker_ids for lf in leaves] == [(w,) for w in range(n)]
+
+
+def test_build_tree_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="zero workers"):
+        mt.build_tree([])
+    with pytest.raises(ValueError, match="fan_in"):
+        mt.build_tree([0, 1], fan_in=1)
+
+
+# ------------------------------------------------- determinism & invariance
+def test_tree_32_models_deterministic_and_arrival_invariant():
+    """The tentpole acceptance test: 32 sub-models, shuffled arrival
+    orders, bit-identical root consensus every time — and identical to
+    the one-shot batch tree merge."""
+    _, models, masks = rotated_world(V=64, d=6, n=32, seed=3)
+    stacked = mg.stack_models(models, masks)
+    batch = mg.get_merger("alir_tree", max_iters=6).merge(stacked)
+    assert batch.worker_ids == tuple(range(32))
+    for order_seed in (0, 1, 2):
+        order = np.random.default_rng(order_seed).permutation(32)
+        m = mg.get_merger("alir_tree", max_iters=6)
+        for w in order:
+            m.add(int(w), models[w], masks[w], fold=False)
+        final = m.fold()
+        np.testing.assert_array_equal(np.asarray(final.Y),
+                                      np.asarray(batch.Y))
+        np.testing.assert_array_equal(np.asarray(final.valid),
+                                      np.asarray(batch.valid))
+        np.testing.assert_array_equal(np.asarray(final.transforms),
+                                      np.asarray(batch.transforms))
+
+
+def test_tree_fan_in_changes_bits_not_quality():
+    Y, models, masks = rotated_world(V=96, d=8, n=16, seed=5)
+    stacked = mg.stack_models(models, masks)
+    flat = mg.get_merger("alir", max_iters=12).merge(stacked)
+    for fan_in in (2, 4, 16):
+        res = mg.get_merger("alir_tree", fan_in=fan_in,
+                            max_iters=12).merge(stacked)
+        assert bool(np.asarray(res.valid).all())
+        # same consensus up to gauge, for every arity (fan_in=16 on 16
+        # workers degenerates to the flat solve's shape: depth 1)
+        assert procrustes_distance(np.asarray(res.Y),
+                                   np.asarray(flat.Y)) < 5e-3, fan_in
+        assert procrustes_distance(np.asarray(res.Y), Y) < 0.08, fan_in
+
+
+def test_tree_merge_via_dispatch():
+    """MERGE_METHODS exposes alir_tree through the classic merge()
+    entrypoint (what the training driver calls)."""
+    _, models, masks = rotated_world(n=8, seed=7)
+    stacked = mg.stack_models(models, masks)
+    emb, valid = mg.merge(stacked, "alir_tree", out_dim=8,
+                          key=jax.random.PRNGKey(0), fan_in=4)
+    assert emb.shape == (96, 8) and bool(np.asarray(valid).all())
+
+
+# ------------------------------------------------------- any-level serving
+def test_reconstruct_worker_from_every_level():
+    """Composed transforms: a worker's own-space table reconstructed
+    from its leaf, from every interior ancestor, and from the root all
+    agree with the ground-truth rotated table on present rows."""
+    Y, models, masks = rotated_world(V=96, d=8, n=8, miss_frac=0.3, seed=9)
+    m = mg.get_merger("alir_tree", max_iters=15)
+    for w in range(8):
+        m.add(w, models[w], masks[w], fold=False)
+    root = m.fold()
+    w = 5
+    present = masks[w]
+    for level, index in [(1, 2), (2, 1), (3, 0)]:      # ancestors of leaf 5
+        node = m.node(level, index)
+        assert node is not None and w in node.worker_ids
+        rec = np.asarray(mt.reconstruct_worker(node, w))
+        err = np.abs(rec[present] - models[w][present]).max()
+        assert err < 0.05, (level, index, err)
+    # the root MergeResult works through the same function
+    rec = np.asarray(mt.reconstruct_worker(root, w))
+    assert np.abs(rec[present] - models[w][present]).max() < 0.05
+    with pytest.raises(KeyError, match="not covered"):
+        mt.reconstruct_worker(m.node(1, 0), 5)         # leaf-01 subtree
+
+
+# ------------------------------------------------- elastic node semantics
+def test_deadline_late_leaf_never_joins_interior_nodes():
+    """A worker arriving after the deadline is excluded from the WHOLE
+    tree: its leaf stays empty, every ancestor solves over the present
+    children only, and the root covers the on-time subset."""
+    _, models, masks = rotated_world(n=8, seed=11)
+    now = [0.0]
+    m = mt.TreeAlirMerger(mg.MergeConfig(deadline=10.0, fan_in=2,
+                                         max_iters=6),
+                          workers=range(8), clock=lambda: now[0])
+    for w in (0, 1, 2, 4, 5, 6, 7):
+        assert m.add(w, models[w], masks[w], fold=False) is None
+    now[0] = 11.0
+    assert m.deadline_passed
+    assert m.add(3, models[3], masks[3]) is None       # late → rejected
+    assert m.late_workers == [3]
+    final = m.fold()
+    assert final.worker_ids == (0, 1, 2, 4, 5, 6, 7)
+    # node (1,1) = workers {2,3}: single present child → passthrough
+    node = m.node(1, 1)
+    assert node.worker_ids == (2,)
+    np.testing.assert_array_equal(
+        np.asarray(node.Y),
+        np.asarray(models[2]) * masks[2][:, None])
+    assert m.stats["passthrough"] >= 1
+
+
+def test_quorum_applies_at_root():
+    _, models, masks = rotated_world(n=8, seed=13)
+    m = mg.get_merger("alir_tree", quorum=4, max_iters=4)
+    m.add(0, models[0], masks[0], fold=False)
+    m.add(6, models[6], masks[6], fold=False)
+    assert not m.quorum_met
+    with pytest.raises(RuntimeError, match="quorum"):
+        m.final()
+    fold = m.final(require_quorum=False)               # explicit best-effort
+    assert fold.worker_ids == (0, 6)
+    for w in (1, 2):
+        m.add(w, models[w], masks[w], fold=False)
+    assert m.quorum_met
+    assert m.final().worker_ids == (0, 1, 2, 6)
+
+
+def test_incremental_arrival_resolves_only_root_path():
+    """Node-cache reuse: after a full fold, one more arrival re-solves
+    only the nodes on its leaf-to-root path (≤ depth), not the tree."""
+    _, models, masks = rotated_world(n=8, seed=15)
+    m = mg.get_merger("alir_tree", max_iters=4)
+    for w in range(7):
+        m.add(w, models[w], masks[w], fold=False)
+    m.fold()
+    before = m.stats["solved"] + m.stats["passthrough"]
+    m.add(7, models[7], masks[7])                      # fold=True re-folds
+    path_cost = (m.stats["solved"] + m.stats["passthrough"]) - before
+    root = mt.build_tree(range(8), fan_in=2)
+    assert path_cost <= mt.tree_depth(root)            # ≤ 3 node solves
+    # and a fold with nothing new re-solves nothing
+    before = m.stats["solved"] + m.stats["passthrough"]
+    m.fold()
+    assert m.stats["solved"] + m.stats["passthrough"] == before
+
+
+def test_critical_path_below_serial_solve_time():
+    _, models, masks = rotated_world(n=8, seed=17)
+    m = mg.get_merger("alir_tree", max_iters=6)
+    m.merge(mg.stack_models(models, masks))
+    serial = sum(m.stats["node_s"].values())
+    assert 0 < m.critical_path_s() <= serial + 1e-9
+    # 7 interior solves serially vs a depth-3 critical path
+    assert len(m.stats["node_s"]) == 7
+
+
+# ----------------------------------------------------------- restartability
+def test_persisted_tree_resumes_without_resolving(tmp_path):
+    _, models, masks = rotated_world(n=8, seed=19)
+    d1 = str(tmp_path / "tree")
+    m1 = mt.TreeAlirMerger(mg.MergeConfig(max_iters=6), workers=range(8),
+                           state_dir=d1)
+    for w in range(8):
+        m1.add(w, models[w], masks[w], fold=False)
+    ref = m1.fold()
+    assert m1.stats["solved"] == 7
+
+    m2 = mt.TreeAlirMerger(mg.MergeConfig(max_iters=6), workers=range(8),
+                           state_dir=d1)
+    assert m2.stats["loaded"] == 15                    # 8 leaves + 7 nodes
+    resumed = m2.fold()
+    assert m2.stats["solved"] == 0                     # pure cache reuse
+    np.testing.assert_array_equal(np.asarray(resumed.Y), np.asarray(ref.Y))
+    np.testing.assert_array_equal(np.asarray(resumed.transforms),
+                                  np.asarray(ref.transforms))
+    final = m2.final()
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(ref.Y))
+
+
+def test_resume_after_partial_arrivals_then_continue(tmp_path):
+    """Kill the merge mid-arrival: a new merger reloads the persisted
+    leaves, accepts the remaining workers, and the finished fold is
+    bit-identical to the uninterrupted one."""
+    _, models, masks = rotated_world(n=8, seed=21)
+    uninterrupted = mg.get_merger("alir_tree", max_iters=6).merge(
+        mg.stack_models(models, masks))
+
+    d1 = str(tmp_path / "tree")
+    m1 = mt.TreeAlirMerger(mg.MergeConfig(max_iters=6), workers=range(8),
+                           state_dir=d1)
+    for w in (3, 0, 6, 1):
+        m1.add(w, models[w], masks[w], fold=False)
+    del m1                                             # "preempted"
+
+    m2 = mt.TreeAlirMerger(mg.MergeConfig(max_iters=6), workers=range(8),
+                           state_dir=d1)
+    assert m2.worker_ids == (0, 1, 3, 6)               # leaves reloaded
+    for w in (7, 2, 5, 4):
+        m2.add(w, models[w], masks[w], fold=False)
+    final = m2.fold()
+    np.testing.assert_array_equal(np.asarray(final.Y),
+                                  np.asarray(uninterrupted.Y))

@@ -78,15 +78,18 @@ def test_merge_average_concat_permutation_equivariant(n, v, d, seed):
     permuted = mg.StackedModels(models=stacked.models[perm],
                                 mask=stacked.mask[perm])
 
-    avg, valid = mg.merge_average(stacked)
-    avg_p, valid_p = mg.merge_average(permuted)
+    res, res_p = (mg.get_merger("average").merge(s)
+                  for s in (stacked, permuted))
+    avg, valid, avg_p, valid_p = res.emb, res.valid, res_p.emb, res_p.valid
     # invariant up to float summation order over the n axis
     np.testing.assert_allclose(np.asarray(avg_p), np.asarray(avg),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(valid_p), np.asarray(valid))
 
-    emb, cvalid = mg.merge_concat(stacked)
-    emb_p, cvalid_p = mg.merge_concat(permuted)
+    cres, cres_p = (mg.get_merger("concat").merge(s)
+                    for s in (stacked, permuted))
+    emb, cvalid, emb_p, cvalid_p = (cres.emb, cres.valid,
+                                    cres_p.emb, cres_p.valid)
     expect = np.asarray(emb).reshape(v, n, d)[:, perm].reshape(v, n * d)
     np.testing.assert_array_equal(np.asarray(emb_p), expect)
     np.testing.assert_array_equal(np.asarray(cvalid_p), np.asarray(cvalid))
@@ -121,7 +124,8 @@ def test_alir_displacement_never_explodes(n, seed):
         models.append(M)
         masks.append(mask)
     stacked = mg.stack_models(models, masks)
-    out, valid, disps = mg.merge_alir(stacked, init="random", max_iters=10)
+    res = mg.get_merger("alir", init="random", max_iters=10).merge(stacked)
+    out, disps = res.emb, res.disps
     d_arr = np.asarray(disps)
     assert np.isfinite(np.asarray(out)).all()
     assert d_arr[-1] <= d_arr[0] + 1e-5     # displacement non-increasing-ish
@@ -147,16 +151,50 @@ def test_incremental_cold_fold_is_arrival_order_invariant(perm, seed):
         models.append(M)
         masks.append(mask)
     stacked = mg.stack_models(models, masks)
-    Yb, validb, _ = mg.merge_alir(stacked)
+    batch = mg.get_merger("alir").merge(stacked)
 
     merger = mg.IncrementalAlirMerger()
     for w in perm:
         merger.add(w, models[w], masks[w], fold=False)  # arrival only
     final = merger.fold(warm=False)
     assert final.worker_ids == (0, 1, 2, 3)
-    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(Yb))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
     np.testing.assert_array_equal(np.asarray(final.valid),
-                                  np.asarray(validb))
+                                  np.asarray(batch.valid))
+
+
+@settings(max_examples=8, deadline=None)
+@given(perm=st.permutations(tuple(range(6))), seed=st.integers(0, 999),
+       fan_in=st.integers(2, 4))
+def test_tree_fold_is_arrival_order_invariant(perm, seed, fan_in):
+    """The reduction tree's acceptance property: its topology and every
+    node key are pure functions of the canonical (sorted) worker-id set
+    and fan-in, and interior nodes always cold-solve — so the root
+    consensus is bit-identical under ANY arrival permutation, and equals
+    the one-shot tree merge over the same stack."""
+    rng = np.random.default_rng(seed)
+    V, d = 40, 5
+    Y = rng.normal(size=(V, d)).astype(np.float32)
+    models, masks = [], []
+    for i in range(6):
+        q, _ = np.linalg.qr(rng.normal(size=(d, d)))
+        mask = np.ones(V, bool) if i == 0 else rng.random(V) > 0.25
+        mask[: d + 2] = True
+        M = (Y @ q).astype(np.float32)
+        M[~mask] = 0
+        models.append(M)
+        masks.append(mask)
+    stacked = mg.stack_models(models, masks)
+    batch = mg.get_merger("alir_tree", fan_in=fan_in).merge(stacked)
+
+    merger = mg.get_merger("alir_tree", fan_in=fan_in)
+    for w in perm:
+        merger.add(w, models[w], masks[w], fold=False)
+    final = merger.fold()
+    assert final.worker_ids == tuple(range(6))
+    np.testing.assert_array_equal(np.asarray(final.Y), np.asarray(batch.Y))
+    np.testing.assert_array_equal(np.asarray(final.valid),
+                                  np.asarray(batch.valid))
 
 
 # ------------------------------------------------------------ data substrate

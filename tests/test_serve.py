@@ -35,7 +35,8 @@ def _stacked(V=V, d=D, n=N, seed=0, full=False):
 
 def _publish(artifact_dir, stacked, word_ids=None, scale=1.0):
     """Batch-merge and publish with every serving sidecar."""
-    Y, valid, _ = mg.merge_alir(stacked)
+    res = mg.get_merger("alir").merge(stacked)
+    Y, valid = res.Y, res.valid
     Y = jnp.asarray(np.asarray(Y) * scale)
     Ws = mg.alir_transforms(stacked, Y)
     publish_table(str(artifact_dir), np.asarray(Y), np.asarray(valid),
